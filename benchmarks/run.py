@@ -1,0 +1,47 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Each module prints a CSV block and asserts its paper-claim invariants.
+"""
+import argparse
+import sys
+import time
+
+from benchmarks import (bench_kernels, bench_memory, bench_overhead,
+                        bench_perfmodel, bench_recompute)
+
+ALL = [
+    ("fig3_recompute_factors", bench_recompute.main),
+    ("fig4_peak_memory", bench_memory.main),
+    ("fig5_measured_overhead", bench_overhead.main),
+    ("sec3_perf_model", bench_perfmodel.main),
+    ("kernel_rooflines", bench_kernels.main),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    failures = []
+    for name, fn in ALL:
+        if args.only and args.only not in name:
+            continue
+        print(f"\n== {name} ==")
+        t0 = time.time()
+        try:
+            fn()
+            print(f"-- ok in {time.time()-t0:.1f}s")
+        except Exception as e:  # keep going; report at the end
+            import traceback
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+    if failures:
+        print("\nBENCH FAILURES:", failures)
+        sys.exit(1)
+    print("\nall benchmarks passed")
+
+
+if __name__ == "__main__":
+    main()

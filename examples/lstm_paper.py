@@ -1,0 +1,87 @@
+"""Faithful reproduction of the paper's §5 experiment: a vanilla LSTM for
+char-level text generation, trained with RMSProp, with a single
+forward-backward iteration measured as the number of recurrences grows.
+
+Reports, per depth (the paper's Figs 4 & 5):
+  * peak Level-1 memory for conventional / Revolve / async multistage
+  * measured recompute factors (flat for multistage, growing for Revolve)
+  * Level-2 transfer stalls (≈0 at the paper's operating point)
+
+Run: PYTHONPATH=src python examples/lstm_paper.py [--depths 64 128 256]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import CheckpointExecutor
+from repro.core import revolve as rv
+from repro.core import schedule as ms
+from repro.data import text_corpus
+from repro.models.lstm import (forward_loss, init_lstm, init_state,
+                               make_operators)
+from repro.optim import rmsprop
+
+S_SLOTS = 16
+INTERVAL = 32
+
+
+def one_iteration(depth: int, batch: int = 8, hidden: int = 128):
+    key = jax.random.PRNGKey(0)
+    params = init_lstm(key, vocab=96, d_embed=32, d_hidden=hidden)
+    corpus = text_corpus(batch * (depth + 1))
+    tokens = jnp.asarray(corpus.reshape(batch, depth + 1))
+
+    fwd, bwd, seed, n = make_operators(params, tokens)
+    ex = CheckpointExecutor(fwd, bwd)
+    s0 = init_state(batch, hidden)
+    rows = {}
+    (_, g_c), st = ex.run_conventional(s0, n, seed())
+    rows["conventional"] = st
+    (_, g_r), st = ex.run_revolve(s0, n, seed(), s=S_SLOTS)
+    rows["revolve"] = st
+    (_, g_m), st = ex.run_multistage(s0, n, seed(), interval=INTERVAL,
+                                     s_l1=S_SLOTS)
+    rows["async"] = st
+    return rows, (params, tokens, g_m)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--depths", type=int, nargs="+",
+                    default=[64, 128, 256, 512])
+    ap.add_argument("--train-steps", type=int, default=5)
+    args = ap.parse_args()
+
+    print(f"{'depth':>6} {'strategy':>14} {'peak_MB':>9} {'peak_states':>11} "
+          f"{'R':>6} {'R_model':>8} {'stall_ms':>9}")
+    last = None
+    for depth in args.depths:
+        rows, last = one_iteration(depth)
+        for name, st in rows.items():
+            model = {"conventional": 1.0,
+                     "revolve": rv.recompute_factor(depth, S_SLOTS),
+                     "async": ms.multistage_recompute_factor(
+                         depth, INTERVAL, S_SLOTS)}[name]
+            stall = (st.store_stall_s + st.prefetch_stall_s) * 1e3
+            print(f"{depth:6d} {name:>14} {st.peak_l1_bytes/1e6:9.2f} "
+                  f"{st.peak_l1_states:11d} {st.recompute_factor:6.3f} "
+                  f"{model:8.3f} {stall:9.2f}")
+
+    # a short RMSProp training run through the multistage pipeline
+    # (the paper's training setup; convergence is not the point, §5)
+    params, tokens, grads = last
+    opt = rmsprop(2e-3)
+    opt_state = opt.init(params)
+    from repro.models.lstm import bptt_loss_and_grad
+    print("\nRMSProp training (multistage BPTT, interval=32):")
+    for i in range(args.train_steps):
+        loss, grads = bptt_loss_and_grad(params, tokens, interval=32)
+        params, opt_state = opt.update(grads, opt_state, params,
+                                       jnp.asarray(i))
+        print(f"  step {i}: loss {float(loss):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Quickstart: the paper's technique in 40 lines.
+
+A long chain (here: an LSTM over 2048 tokens) is backpropagated three ways —
+store-everything, classic Revolve, and the paper's asynchronous multistage
+checkpointing — and all three produce identical gradients with very
+different memory/compute trade-offs.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import (CheckpointExecutor, optimal_advances,
+                        multistage_recompute_factor)
+from repro.models.lstm import (init_lstm, init_state, make_operators,
+                               forward_loss, bptt_loss_and_grad)
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    T, B, V = 2048, 8, 96
+    params = init_lstm(key, vocab=V, d_embed=32, d_hidden=64)
+    tokens = jax.random.randint(jax.random.fold_in(key, 1), (B, T + 1), 0, V)
+
+    fwd, bwd, seed, n = make_operators(params, tokens)
+    ex = CheckpointExecutor(fwd, bwd)
+    state0 = init_state(B, 64)
+
+    print(f"chain length n={n}")
+    # 1. conventional: stores all n states
+    (_, g_conv), st = ex.run_conventional(state0, n, seed())
+    print(f"conventional : advances={st.advances:5d} "
+          f"peak_states={st.peak_l1_states:4d} "
+          f"peak_bytes={st.peak_l1_bytes/1e6:7.1f}MB")
+
+    # 2. classic Revolve with 32 snapshot slots
+    (_, g_rev), st = ex.run_revolve(state0, n, seed(), s=32)
+    print(f"revolve s=32 : advances={st.advances:5d} "
+          f"(optimal={optimal_advances(n, 32)}) "
+          f"peak_states={st.peak_l1_states:4d} "
+          f"peak_bytes={st.peak_l1_bytes/1e6:7.1f}MB")
+
+    # 3. the paper: async multistage, interval 64, Level-2 in host RAM
+    (_, g_ms), st = ex.run_multistage(state0, n, seed(), interval=64, s_l1=32)
+    print(f"multistage   : advances={st.advances:5d} "
+          f"(R={st.recompute_factor:.3f}, model "
+          f"{multistage_recompute_factor(n, 64, 32):.3f}) "
+          f"peak_states={st.peak_l1_states:4d} "
+          f"peak_bytes={st.peak_l1_bytes/1e6:7.1f}MB "
+          f"l2_stores={st.l2_stores} store_stall={st.store_stall_s*1e3:.1f}ms "
+          f"prefetch_stall={st.prefetch_stall_s*1e3:.1f}ms")
+
+    # all gradients identical
+    ref = jax.grad(forward_loss)(params, tokens)
+    for name, g in [("conventional", g_conv), ("revolve", g_rev),
+                    ("multistage", g_ms)]:
+        err = max(float(jnp.max(jnp.abs(a - b)))
+                  for a, b in zip(jax.tree_util.tree_leaves(g),
+                                  jax.tree_util.tree_leaves(ref)))
+        print(f"  {name:13s} max |grad - autodiff| = {err:.2e}")
+
+    # the compiled path (what runs on TPU pods): same math through
+    # multistage_scan with XLA host offload
+    loss, _ = bptt_loss_and_grad(params, tokens, interval=64)
+    print(f"compiled multistage_scan loss = {float(loss):.4f} "
+          f"(reference {float(forward_loss(params, tokens)):.4f})")
+
+
+if __name__ == "__main__":
+    main()

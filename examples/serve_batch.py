@@ -1,0 +1,28 @@
+"""Batched serving demo: prefill a batch of prompts, decode with donated
+KV caches, report per-phase throughput — the serving-side use of the
+framework (KV caches are the "states" here; on TPU the same host-offload
+machinery pages cold caches to host RAM).
+
+Run: PYTHONPATH=src python examples/serve_batch.py [--arch gemma2-2b]
+"""
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--decode-steps", type=int, default=48)
+    args = ap.parse_args()
+    serve_main(["--arch", args.arch, "--smoke",
+                "--batch", str(args.batch),
+                "--prompt-len", str(args.prompt_len),
+                "--decode-steps", str(args.decode_steps),
+                "--temperature", "0.8"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.analysis.roofline import RooflineReport, build_report, collective_bytes, save_report
+from repro.analysis.jaxpr_cost import Cost, jaxpr_cost, cost_of_fn
+
+__all__ = ["RooflineReport", "build_report", "collective_bytes",
+           "save_report", "Cost", "jaxpr_cost", "cost_of_fn"]

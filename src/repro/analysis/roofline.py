@@ -1,0 +1,242 @@
+"""Roofline analysis from the compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh), in seconds-per-step on the target
+chip (TPU v5e class: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI):
+
+    compute    = HLO_FLOPs(per device)    / peak_FLOP/s
+    memory     = HLO_bytes(per device)    / HBM_bw
+    collective = collective_bytes(device) / (links x link_bw)
+
+HLO_FLOPs and HLO_bytes come from ``compiled.cost_analysis()`` on the
+SPMD-partitioned per-device module.  collective_bytes is not in
+cost_analysis: we parse the optimized HLO text and sum the **operand** sizes
+of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (ragged variants included).  The dominant term is the
+step-time lower bound; ``useful_ratio = MODEL_FLOPS / HLO_FLOPs`` exposes
+recompute / dispatch / masking waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Optional
+
+from repro.core.perfmodel import HardwareSpec, TPU_V5E
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"%\S+\s*=\s*(\(?[a-z0-9\[\]{},/ ]+?\)?)\s+"
+    r"((?:ragged-)?(?:all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute))(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_V1_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(1, int(m.group(2)))
+    m = _GROUPS_V1_RE.search(line)
+    if m:
+        return max(1, len(m.group(1).split(",")))
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device collective traffic from the optimized (post-SPMD) HLO.
+
+    XLA:CPU (and TPU) print collectives with only the *result* type inline,
+    so we parse the result shape and convert to **operand** bytes through the
+    op semantics (all-gather result = operand x group; reduce-scatter result
+    = operand / group; the rest are size-preserving).  For async
+    ``-start``/``-done`` pairs the last tuple element is the result and only
+    the start op is counted.  ``wire`` additionally estimates physical
+    link bytes per device for a ring schedule (all-reduce moves ~2x its
+    operand; gathers/scatters ~1x the large side).
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    by_group: Dict[str, int] = {}
+    wire = 0.0
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if m is None:
+            continue
+        kind = m.group(2).removeprefix("ragged-")
+        shapes = _SHAPE_RE.findall(m.group(1))
+        if not shapes:
+            continue
+        res = _shape_bytes(*shapes[-1])  # last tuple element == result
+        n = _group_size(line)
+        if kind == "all-gather":
+            operand = res // max(n, 1)
+            wire += res * (n - 1) / max(n, 1)
+        elif kind == "reduce-scatter":
+            operand = res * n
+            wire += res * (n - 1)
+        elif kind == "all-reduce":
+            operand = res
+            wire += 2 * res * (n - 1) / max(n, 1)
+        else:  # all-to-all / collective-permute
+            operand = res
+            wire += res
+        out[kind] += operand
+        gk = f"group{n}"
+        by_group[gk] = by_group.get(gk, 0) + operand
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["wire"] = int(wire)
+    out.update(by_group)
+    return out
+
+
+def split_fabric(coll: Dict[str, int], n_pods: int, data: int = 16,
+                 model: int = 16) -> Dict[str, float]:
+    """Split collective bytes into ICI vs DCN by replica-group size: on the
+    (pod, data, model) mesh any group involving the pod axis (sizes n_pods,
+    n_pods*data, n_pods*data*model) crosses DCN."""
+    dcn_sizes = {n_pods, n_pods * data, n_pods * data * model} if n_pods > 1 \
+        else set()
+    ici = dcn = 0.0
+    for k, v in coll.items():
+        if not k.startswith("group"):
+            continue
+        g = int(k[5:])
+        if g in dcn_sizes:
+            dcn += v
+        else:
+            ici += v
+    if ici + dcn == 0:  # no group info: attribute everything to ICI
+        ici = float(coll.get("total", 0))
+    return {"ici": ici, "dcn": dcn}
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    # per-device terms (jaxpr cost model / n_chips; see jaxpr_cost docs)
+    flops_per_device: float
+    hbm_bytes_per_device: float           # materialization model, XLA path
+    hbm_bytes_kernel_adjusted: float      # minus VMEM-resident kernel traffic
+    collective_bytes_per_device: float    # HLO operand bytes, loop-corrected
+    collective_breakdown: Dict[str, int]
+    peak_bytes_per_device: Optional[float]  # memory_analysis of full program
+    t_compute: float
+    t_memory: float
+    t_memory_kernel: float
+    t_collective: float
+    model_flops_per_device: float
+    useful_ratio: float
+    bottleneck: str
+    hardware: str = "tpu-v5e"
+    variant: str = "baseline"
+    xla_flops_raw: float = 0.0            # cost_analysis (while bodies x1)
+    collective_bytes_raw: float = 0.0     # full-program parse, uncorrected
+    jaxpr_bytes_global: float = 0.0       # raw materialization model (global)
+    jaxpr_bytes_major_global: float = 0.0
+
+    @property
+    def t_bound(self) -> float:
+        """Step-time lower bound with the Pallas kernels installed."""
+        return max(self.t_compute, self.t_memory_kernel, self.t_collective)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the step-time bound spent on *useful* model FLOPs —
+        the headline score: 1.0 means the chip does nothing but model math."""
+        if self.t_bound <= 0:
+            return 0.0
+        return (self.model_flops_per_device / TPU_V5E.peak_flops) / self.t_bound
+
+    def to_json(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["t_bound"] = self.t_bound
+        d["roofline_fraction"] = self.roofline_fraction
+        return d
+
+
+FUSION_DISCOUNT = 0.25  # fraction of fusable (elementwise) outputs that
+                        # actually hit HBM after XLA fusion
+
+
+def build_report(*, arch: str, shape: str, mesh_name: str, n_chips: int,
+                 jaxpr_flops: float, jaxpr_bytes: float,
+                 score_bytes: float, coll_bytes: float,
+                 coll_breakdown: Dict[str, int],
+                 model_flops_total: float,
+                 jaxpr_bytes_major: Optional[float] = None,
+                 peak_bytes: Optional[float] = None,
+                 xla_flops_raw: float = 0.0,
+                 coll_bytes_raw: float = 0.0,
+                 n_pods: int = 1,
+                 hw: HardwareSpec = TPU_V5E,
+                 variant: str = "baseline") -> RooflineReport:
+    """Assemble the three-term report.  jaxpr terms are GLOBAL; divided by
+    n_chips here (ideal-sharding assumption, noted in DESIGN).  HBM traffic
+    uses the fusion-discounted materialization model:
+    ``major + FUSION_DISCOUNT * elementwise``."""
+    if jaxpr_bytes_major is None:
+        jaxpr_bytes_major = jaxpr_bytes
+    eff_bytes = jaxpr_bytes_major + FUSION_DISCOUNT * (
+        jaxpr_bytes - jaxpr_bytes_major)
+    flops = jaxpr_flops / n_chips
+    hbm = eff_bytes / n_chips
+    hbm_k = max(hbm - score_bytes / n_chips,
+                0.2 * hbm)  # floor: params/activations always move
+    t_c = flops / hw.peak_flops
+    t_m = hbm / hw.hbm_bw
+    t_mk = hbm_k / hw.hbm_bw
+    fabric = split_fabric(coll_breakdown, n_pods)
+    # ICI and DCN transfers overlap; the slower fabric bounds the term.
+    t_x = max(fabric["ici"] / (hw.num_ici_links * hw.ici_bw),
+              fabric["dcn"] / hw.dcn_bw)
+    model_flops_dev = model_flops_total / n_chips
+    bottleneck = max((("compute", t_c), ("memory", t_mk),
+                      ("collective", t_x)), key=lambda kv: kv[1])[0]
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, n_chips=n_chips,
+        flops_per_device=flops, hbm_bytes_per_device=hbm,
+        hbm_bytes_kernel_adjusted=hbm_k,
+        collective_bytes_per_device=coll_bytes,
+        collective_breakdown={k: int(v) for k, v in coll_breakdown.items()},
+        peak_bytes_per_device=peak_bytes,
+        t_compute=t_c, t_memory=t_m, t_memory_kernel=t_mk, t_collective=t_x,
+        model_flops_per_device=model_flops_dev,
+        useful_ratio=(model_flops_dev / flops) if flops else 0.0,
+        bottleneck=bottleneck, hardware=hw.name, variant=variant,
+        xla_flops_raw=xla_flops_raw, collective_bytes_raw=coll_bytes_raw,
+        jaxpr_bytes_global=jaxpr_bytes,
+        jaxpr_bytes_major_global=jaxpr_bytes_major)
+
+
+def save_report(path: str, report: RooflineReport) -> None:
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        data = {}
+    key = f"{report.arch}|{report.shape}|{report.mesh}|{report.variant}"
+    data[key] = report.to_json()
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)

@@ -1,0 +1,3 @@
+from repro.ckpt.async_checkpoint import CheckpointManager
+
+__all__ = ["CheckpointManager"]

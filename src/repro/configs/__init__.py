@@ -1,0 +1,11 @@
+from repro.configs.base import (
+    ArchConfig, MoECfg, SSMCfg, ShapeSpec, SHAPES, SMOKE_SHAPE,
+    applicable_shapes, param_count,
+)
+from repro.configs.registry import ASSIGNED, all_configs, get_config
+
+__all__ = [
+    "ArchConfig", "MoECfg", "SSMCfg", "ShapeSpec", "SHAPES", "SMOKE_SHAPE",
+    "applicable_shapes", "param_count", "ASSIGNED", "all_configs",
+    "get_config",
+]

@@ -1,0 +1,34 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ArchConfig
+
+_MODULES = {
+    "qwen1.5-4b": "qwen1_5_4b",
+    "gemma2-2b": "gemma2_2b",
+    "yi-6b": "yi_6b",
+    "granite-3-2b": "granite_3_2b",
+    "internvl2-1b": "internvl2_1b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "whisper-tiny": "whisper_tiny",
+    "llama4-scout-17b-16e": "llama4_scout_17b_16e",
+    "phi3.5-moe-42b": "phi3_5_moe",
+    "mamba2-370m": "mamba2_370m",
+    "lstm-paper": "lstm_paper",
+}
+
+ASSIGNED: List[str] = [k for k in _MODULES if k != "lstm-paper"]
+
+
+def get_config(name: str, smoke: bool = False) -> ArchConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def all_configs(smoke: bool = False) -> Dict[str, ArchConfig]:
+    return {n: get_config(n, smoke) for n in ASSIGNED}

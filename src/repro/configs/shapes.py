@@ -1,0 +1,100 @@
+"""Input specs per (architecture x shape) cell.
+
+``input_specs`` returns ``jax.ShapeDtypeStruct`` stand-ins for every model
+input (no allocation — the dry-run lowers against these).  ``make_batch``
+materialises small concrete batches for smoke tests from the same layouts.
+
+Layouts per kind:
+
+* ``train``:   LM {tokens (B, S+1)}; VLM {tokens (B, S-P+1), patch_embeds
+               (B, P, d)}; enc-dec {frames (B, S/2, d), tokens (B, dec+1)}.
+* ``prefill``: same minus the +1 label shift.
+* ``decode``:  {cache, tokens (B, 1), pos ()} — one new token against a
+               cache of ``seq_len`` (attention KV sized S; SSM states O(1)).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models.model_factory import get_model
+
+I32 = jnp.int32
+BF16 = jnp.bfloat16
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def cache_struct(cfg: ArchConfig, batch: int, max_len: int):
+    """Cache as ShapeDtypeStructs via eval_shape (no allocation)."""
+    api = get_model(cfg)
+    return jax.eval_shape(lambda: api.init_cache(batch, max_len))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    k = shape.kind
+    if cfg.family in ("dense", "moe", "hybrid", "ssm"):
+        if k == "train":
+            return {"tokens": _sds((B, S + 1), I32)}
+        if k == "prefill":
+            return {"tokens": _sds((B, S), I32)}
+        if k == "decode":
+            return {"cache": cache_struct(cfg, B, S),
+                    "tokens": _sds((B, 1), I32),
+                    "pos": _sds((), I32)}
+    if cfg.family == "vlm":
+        P = cfg.n_patches
+        d = cfg.d_model
+        if k == "train":
+            return {"tokens": _sds((B, S - P + 1), I32),
+                    "patch_embeds": _sds((B, P, d), BF16)}
+        if k == "prefill":
+            return {"tokens": _sds((B, S - P), I32),
+                    "patch_embeds": _sds((B, P, d), BF16)}
+        if k == "decode":
+            return {"cache": cache_struct(cfg, B, S),
+                    "tokens": _sds((B, 1), I32),
+                    "pos": _sds((), I32)}
+    if cfg.family == "encdec":
+        d = cfg.d_model
+        s_enc = max(2, S // 2)
+        if k == "train":
+            return {"frames": _sds((B, s_enc, d), BF16),
+                    "tokens": _sds((B, cfg.dec_len + 1), I32)}
+        if k == "prefill":
+            return {"frames": _sds((B, s_enc, d), BF16),
+                    "tokens": _sds((B, cfg.dec_len), I32)}
+        if k == "decode":
+            api = get_model(cfg)
+            cache = jax.eval_shape(lambda: api.init_cache(B, S))
+            return {"cache": cache, "tokens": _sds((B, 1), I32),
+                    "pos": _sds((), I32)}
+    if cfg.family == "lstm":
+        return {"tokens": _sds((B, S + 1), I32)}
+    raise ValueError((cfg.family, k))
+
+
+def make_batch(cfg: ArchConfig, shape: ShapeSpec, seed: int = 0):
+    """Concrete deterministic batch matching ``input_specs`` (smoke tests)."""
+    rng = np.random.default_rng(seed)
+    specs = input_specs(cfg, shape)
+
+    def concretize(path, s):
+        if s.dtype == I32 and s.shape:
+            return jnp.asarray(
+                rng.integers(0, min(cfg.vocab, 1 << 30), size=s.shape),
+                dtype=I32)
+        if s.dtype == I32:
+            return jnp.asarray(shape.seq_len // 2, dtype=I32)  # pos scalar
+        if "cache" in "/".join(str(getattr(k, "key", k)) for k in path):
+            return jnp.zeros(s.shape, s.dtype)
+        return jnp.asarray(rng.standard_normal(s.shape) * 0.02, dtype=s.dtype)
+
+    return jax.tree_util.tree_map_with_path(concretize, specs)

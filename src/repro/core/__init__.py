@@ -1,0 +1,39 @@
+"""Core: asynchronous multistage checkpointing (the paper's contribution).
+
+Two first-class paths:
+
+* **Executor path** (`executor`, `storage`, `revolve`, `schedule`) — the
+  paper-faithful library: a pyrevolve-style schedule interpreter with real
+  asynchronous store/prefetch threads over RAM/disk Level-2 backends.
+* **Compiled path** (`multistage_scan`, `layer_policy`, `offload`) — the
+  TPU-native incarnation: segmented scans whose boundary states XLA offloads
+  to pinned host memory with async DMA, recomputing segment interiors.
+
+`perfmodel` carries the paper's §3 analysis, coupled to the roofline terms of
+the compiled dry-run.
+"""
+from repro.core.revolve import (
+    beta, optimal_advances, recompute_factor, revolve_schedule,
+)
+from repro.core.schedule import multistage_schedule, multistage_recompute_factor
+from repro.core.perfmodel import (
+    HardwareSpec, TPU_V5E, optimal_interval, t_inf, t_revolve, t_async,
+    times_from_roofline,
+)
+from repro.core.storage import RAMStorage, DiskStorage, AsyncTransferEngine
+from repro.core.executor import CheckpointExecutor, ExecutionStats
+from repro.core.multistage_scan import multistage_scan, bptt_grad, choose_interval
+from repro.core.layer_policy import remat_layer, scan_layers, scan_layers_collect
+from repro.core import offload
+
+__all__ = [
+    "beta", "optimal_advances", "recompute_factor", "revolve_schedule",
+    "multistage_schedule", "multistage_recompute_factor",
+    "HardwareSpec", "TPU_V5E", "optimal_interval", "t_inf", "t_revolve",
+    "t_async", "times_from_roofline",
+    "RAMStorage", "DiskStorage", "AsyncTransferEngine",
+    "CheckpointExecutor", "ExecutionStats",
+    "multistage_scan", "bptt_grad", "choose_interval",
+    "remat_layer", "scan_layers", "scan_layers_collect",
+    "offload",
+]

@@ -1,0 +1,255 @@
+"""pyrevolve-style checkpoint executor (the paper's §4, generalised).
+
+The executor drives a *forward operator* and a *backward operator* through a
+checkpointing schedule, exactly like pyrevolve: the user supplies the two
+operators plus an initial state, and the executor owns when states are
+computed, snapshotted, offloaded, prefetched and freed.
+
+Operator contract (functional — JAX-friendly)::
+
+    state_{k+1} = forward_op(state_k, k)            # k in [0, n)
+    adjoint     = backward_op(state_k, adjoint, k)  # reverse of step k,
+                                                    # consumes x_k
+
+``backward_op`` receives the *input* state of step ``k`` (it re-runs the step
+forward internally, e.g. via ``jax.vjp``) and threads an arbitrary adjoint
+pytree (commonly ``(dL/dstate, accumulated param grads)``).
+
+Three strategies:
+
+* ``run_conventional`` — store every state (the naive baseline; peak Level-1
+  memory grows linearly in ``n``).
+* ``run_revolve``      — classic single-stage Revolve with ``s`` Level-1
+  slots (recompute factor grows ~log n).
+* ``run_multistage``   — the paper's contribution: asynchronous Level-2
+  stores every ``interval`` steps + prefetch during the reverse sweep;
+  Revolve only *inside* intervals (recompute factor constant in ``n``).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+from repro.core import revolve as rv
+from repro.core import schedule as ms
+from repro.core.revolve import Action, Op
+from repro.core.schedule import MAction, MOp
+from repro.core.storage import AsyncTransferEngine, RAMStorage, tree_bytes
+
+ForwardOp = Callable[[Any, int], Any]
+BackwardOp = Callable[[Any, Any, int], Any]
+
+
+@dataclass
+class ExecutionStats:
+    n: int = 0
+    advances: int = 0
+    backwards: int = 0
+    peak_l1_states: int = 0
+    peak_l1_bytes: int = 0
+    l2_stores: int = 0
+    l2_prefetches: int = 0
+    store_stall_s: float = 0.0
+    prefetch_stall_s: float = 0.0
+    wall_s: float = 0.0
+
+    @property
+    def recompute_factor(self) -> float:
+        return self.advances / max(1, self.n - 1)
+
+
+class _L1Slots:
+    """Level-1 snapshot slots with live-byte accounting."""
+
+    def __init__(self, stats: ExecutionStats):
+        self._slots: Dict[int, Any] = {}
+        self._stats = stats
+        self._extra_bytes = 0  # running state + staged prefetch
+
+    def _update_peak(self) -> None:
+        n_states = len(self._slots)
+        self._stats.peak_l1_states = max(self._stats.peak_l1_states, n_states)
+        total = sum(tree_bytes(v) for v in self._slots.values())
+        self._stats.peak_l1_bytes = max(
+            self._stats.peak_l1_bytes, total + self._extra_bytes
+        )
+
+    def note_extra(self, nbytes: int) -> None:
+        self._extra_bytes = nbytes
+        self._update_peak()
+
+    def store(self, idx: int, state: Any) -> None:
+        self._slots[idx] = state
+        self._update_peak()
+
+    def restore(self, idx: int) -> Any:
+        return self._slots[idx]
+
+    def free(self, idx: int) -> None:
+        self._slots.pop(idx, None)
+
+    def __contains__(self, idx: int) -> bool:
+        return idx in self._slots
+
+    def __len__(self) -> int:
+        return len(self._slots)
+
+
+class CheckpointExecutor:
+    def __init__(self, forward_op: ForwardOp, backward_op: BackwardOp):
+        self.forward_op = forward_op
+        self.backward_op = backward_op
+
+    # ------------------------------------------------------------------ utils
+    def _advance(self, state: Any, b: int, e: int, stats: ExecutionStats) -> Any:
+        for k in range(b, e):
+            state = self.forward_op(state, k)
+            stats.advances += 1
+        return state
+
+    # ------------------------------------------------------------ strategies
+    def run_conventional(self, state0: Any, n: int, adjoint0: Any,
+                         final_hook: Optional[Callable[[Any], Any]] = None):
+        """Store-everything baseline.  Returns (adjoint, stats)."""
+        stats = ExecutionStats(n=n)
+        slots = _L1Slots(stats)
+        t0 = time.perf_counter()
+        state = state0
+        for k in range(n):
+            slots.store(k, state)
+            state = self.forward_op(state, k)
+            stats.advances += 1
+        if final_hook is not None:
+            adjoint0 = final_hook(state)
+        adjoint = adjoint0
+        for k in range(n - 1, -1, -1):
+            adjoint = self.backward_op(slots.restore(k), adjoint, k)
+            stats.backwards += 1
+            slots.free(k)
+        stats.wall_s = time.perf_counter() - t0
+        return adjoint, stats
+
+    def run_revolve(self, state0: Any, n: int, adjoint0: Any, s: int,
+                    final_hook: Optional[Callable[[Any], Any]] = None):
+        """Classic Revolve with ``s`` Level-1 slots.  Returns (adjoint, stats).
+
+        ``final_hook(x_n)`` (if given) observes the final state — e.g. compute
+        the loss and seed the adjoint — after the initial forward sweep.
+        """
+        stats = ExecutionStats(n=n)
+        slots = _L1Slots(stats)
+        t0 = time.perf_counter()
+        slots.store(0, state0)
+        if final_hook is not None:
+            # Initial sweep to the end to seed the adjoint; Revolve's own
+            # replays then start from stored snapshots.
+            xn = self._advance(state0, 0, n, stats)
+            adjoint0 = final_hook(xn)
+        sched = rv.revolve_schedule(n, s)
+        adjoint = self._exec_revolve(sched, slots, adjoint0, stats)
+        stats.wall_s = time.perf_counter() - t0
+        return adjoint, stats
+
+    def _exec_revolve(self, sched, slots: _L1Slots, adjoint: Any,
+                      stats: ExecutionStats) -> Any:
+        current: Any = None
+        current_idx = -1
+        for a in sched:
+            if a.op is Op.RESTORE:
+                current = slots.restore(a.index)
+                current_idx = a.index
+            elif a.op is Op.ADVANCE:
+                assert current_idx == a.index, (current_idx, a)
+                current = self._advance(current, a.index, a.end, stats)
+                current_idx = a.end
+            elif a.op is Op.STORE:
+                assert current_idx == a.index, (current_idx, a)
+                slots.store(a.index, current)
+            elif a.op is Op.FREE:
+                slots.free(a.index)
+            elif a.op is Op.BACKWARD:
+                assert current_idx == a.index, (current_idx, a)
+                adjoint = self.backward_op(current, adjoint, a.index)
+                stats.backwards += 1
+        return adjoint
+
+    def run_multistage(self, state0: Any, n: int, adjoint0: Any, *,
+                       interval: int, s_l1: int,
+                       engine: Optional[AsyncTransferEngine] = None,
+                       final_hook: Optional[Callable[[Any], Any]] = None):
+        """The paper's asynchronous multistage strategy.
+
+        Returns (adjoint, stats).  ``engine`` defaults to an async engine over
+        host-RAM Level-2 storage.
+        """
+        own_engine = engine is None
+        if engine is None:
+            engine = AsyncTransferEngine(RAMStorage())
+        stats = ExecutionStats(n=n)
+        slots = _L1Slots(stats)
+        sched = ms.multistage_schedule(n, interval, s_l1)
+        t0 = time.perf_counter()
+        try:
+            current = state0
+            current_idx = 0
+            adjoint = adjoint0
+            for a in sched.actions:
+                if a.op is MOp.STORE_L2:
+                    assert current_idx == a.index, (current_idx, a)
+                    engine.store_async(a.index, current)
+                elif a.op is MOp.ADVANCE:
+                    assert current_idx == a.index, (current_idx, a)
+                    current = self._advance(current, a.index, a.end, stats)
+                    current_idx = a.end
+                    slots.note_extra(tree_bytes(current))
+                    if current_idx == n and final_hook is not None:
+                        adjoint = final_hook(current)
+                elif a.op is MOp.WAIT_STORES:
+                    engine.wait_stores()
+                elif a.op is MOp.PREFETCH_L2:
+                    engine.prefetch_async(a.index)
+                elif a.op is MOp.WAIT_PREFETCH:
+                    current = engine.wait_prefetch(a.index)
+                    current_idx = a.index
+                    slots.note_extra(tree_bytes(current))
+                elif a.op is MOp.FREE_L2:
+                    engine.delete(a.index)
+                elif a.op is MOp.REVERSE_SEGMENT:
+                    assert current_idx == a.index, (current_idx, a)
+                    adjoint = self._reverse_segment(
+                        a.index, a.end, current, adjoint, sched, slots, stats
+                    )
+                    current_idx = -1  # consumed
+            stats.l2_stores = engine.num_stores
+            stats.l2_prefetches = engine.num_prefetches
+            stats.store_stall_s = engine.store_stall_s
+            stats.prefetch_stall_s = engine.prefetch_stall_s
+        finally:
+            if own_engine:
+                engine.close()
+        stats.wall_s = time.perf_counter() - t0
+        return adjoint, stats
+
+    def _reverse_segment(self, b: int, e: int, x_b: Any, adjoint: Any,
+                         sched: ms.MultistageSchedule, slots: _L1Slots,
+                         stats: ExecutionStats) -> Any:
+        seg = sched.segment_schedules.get(b)
+        if seg is not None:  # Revolve inside the interval
+            slots.store(b, x_b)
+            adjoint = self._exec_revolve(seg, slots, adjoint, stats)
+            slots.free(b)
+            return adjoint
+        # Store-all replay: the whole segment fits in Level 1.
+        states = {b: x_b}
+        current = x_b
+        for k in range(b + 1, e):
+            current = self.forward_op(current, k - 1)
+            stats.advances += 1
+            states[k] = current
+            slots.store(k, current)  # accounting only
+        for k in range(e - 1, b - 1, -1):
+            adjoint = self.backward_op(states[k], adjoint, k)
+            stats.backwards += 1
+            slots.free(k)
+        return adjoint

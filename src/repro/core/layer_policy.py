@@ -1,0 +1,93 @@
+"""Per-layer activation policies for layered models (transformers).
+
+For transformers the paper's "sequence" axis is *depth*: one decoder layer is
+one chain step, the layer-input activation is the state.  This module wraps a
+layer function in the appropriate remat/offload policy and exposes a scanned
+layer-stack combinator used by every architecture in ``repro.models``.
+
+Policies (see ``repro.core.offload`` for the registry):
+
+* ``none``                    — store all activations (naive baseline).
+* ``full``                    — remat everything, save only layer boundaries
+                                 in HBM (single-stage checkpointing).
+* ``offload_layer``           — boundaries to pinned host memory (the paper's
+                                 multistage strategy over depth).
+* ``offload_layer_save_dots`` — boundaries to host, matmul outputs in HBM
+                                 (beyond-paper hybrid: trades a little HBM for
+                                 less recompute — see EXPERIMENTS §Perf).
+* ``dots`` / ``dots_no_batch``— classic XLA-friendly balanced policies.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+from jax import lax
+
+from repro.core import offload as ofl
+
+LayerFn = Callable[[Any, Any, Any], Any]  # (layer_params, x, extras) -> x
+
+
+def remat_layer(layer_fn: Callable, policy_name: str = "offload_layer",
+                tag_input: bool = True) -> Callable:
+    """Wrap ``layer_fn(params, x, *extras) -> x`` in a remat region whose
+    input activation is tagged ``LAYER_INPUT`` (the offloaded state)."""
+    if policy_name == "none":
+        return layer_fn
+
+    policy = ofl.make_policy(policy_name)
+
+    def tagged(params, x, *extras):
+        if tag_input:
+            x = ofl.tag(x, ofl.LAYER_INPUT)
+        return layer_fn(params, x, *extras)
+
+    return jax.checkpoint(tagged, policy=policy, prevent_cse=False)
+
+
+def scan_layers(
+    layer_fn: Callable,
+    stacked_params: Any,
+    x: Any,
+    *extras: Any,
+    policy_name: str = "offload_layer",
+    unroll: int = 1,
+) -> Any:
+    """Apply ``num_layers`` stacked layers to ``x`` via ``lax.scan`` with the
+    given activation policy.  ``stacked_params`` has a leading layer axis on
+    every leaf.  ``extras`` are broadcast (non-scanned) arguments such as
+    rotary tables or attention masks.
+
+    This is the depth-direction instance of the paper's technique: the scan
+    carry is the layer-input activation; the remat policy decides whether each
+    boundary lives in HBM or host memory, and XLA turns host placements into
+    asynchronous DMA transfers overlapped with compute.
+    """
+    wrapped = remat_layer(layer_fn, policy_name)
+
+    def body(carry, lp):
+        y = wrapped(lp, carry, *extras)
+        return y, None
+
+    out, _ = lax.scan(body, x, stacked_params, unroll=unroll)
+    return out
+
+
+def scan_layers_collect(
+    layer_fn: Callable,
+    stacked_params: Any,
+    x: Any,
+    *extras: Any,
+    policy_name: str = "offload_layer",
+    unroll: int = 1,
+) -> Tuple[Any, Any]:
+    """Like ``scan_layers`` but the layer returns ``(x, aux)`` and the stacked
+    aux is returned (used for MoE balance losses, per-layer KV caches)."""
+    wrapped = remat_layer(layer_fn, policy_name)
+
+    def body(carry, lp):
+        y, aux = wrapped(lp, carry, *extras)
+        return y, aux
+
+    return lax.scan(body, x, stacked_params, unroll=unroll)

@@ -1,0 +1,199 @@
+"""``multistage_scan`` — the paper's technique as a composable JAX transform
+(the *compiled* path that runs on pods).
+
+A chain computation ``carry_{k+1} = body(carry_k, x_k)`` of length ``n`` is
+split into ``n / I`` segments.  Each segment is wrapped in ``jax.checkpoint``
+with a policy that **offloads the segment-boundary carry to pinned host
+memory** and recomputes everything inside the segment during the backward
+pass.  On TPU, XLA lowers the offloads to asynchronous ``copy-start`` /
+``copy-done`` DMA pairs overlapped with compute — precisely the paper's
+asynchronous Level-2 store (forward) and prefetch (backward), but scheduled
+by the compiler instead of Python threads.
+
+Memory behaviour (matches the paper's model):
+
+* Level-2 (host) footprint: ``(n / I) x state_bytes`` — grows with ``n`` but
+  lives in cheap, large memory.
+* Level-1 (HBM) footprint: one segment of activations at a time, i.e.
+  O(I) — **constant in n**.
+* Recompute overhead: one extra forward per segment interior — constant in
+  ``n`` (the compiled counterpart of ``R(I, s)``; with nested intervals the
+  inner recompute mimics Revolve-within-the-interval).
+
+``nested_intervals=(I2, ...)`` recursively segments each segment, saving
+sub-boundaries in HBM and recomputing at finer granularity — the compiled
+analogue of running Revolve inside each interval when a full segment of
+activations does not fit in Level 1.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import offload as ofl
+
+Body = Callable[[Any, Any], Tuple[Any, Any]]
+
+
+def choose_interval(n: int, target: int) -> int:
+    """Largest divisor of ``n`` that is <= max(target, 1); falls back to 1.
+
+    Used to snap the perf-model's optimal interval ``ceil(T_T/T_A)`` onto the
+    divisibility constraint of the segmented scan.
+    """
+    target = max(1, min(target, n))
+    for i in range(target, 0, -1):
+        if n % i == 0:
+            return i
+    return 1
+
+
+def _split_xs(xs: Any, num_segments: int, interval: int) -> Any:
+    def rs(x):
+        return x.reshape((num_segments, interval) + x.shape[1:])
+
+    return jax.tree_util.tree_map(rs, xs)
+
+
+def _merge_ys(ys: Any, n: int) -> Any:
+    def rs(y):
+        return y.reshape((n,) + y.shape[2:])
+
+    return jax.tree_util.tree_map(rs, ys)
+
+
+def multistage_scan(
+    body: Body,
+    carry: Any,
+    xs: Any = None,
+    *,
+    length: Optional[int] = None,
+    interval: int,
+    offload: bool = True,
+    nested_intervals: Sequence[int] = (),
+    unroll: int = 1,
+    boundary_name: str = ofl.BOUNDARY,
+) -> Tuple[Any, Any]:
+    """Drop-in replacement for ``lax.scan(body, carry, xs)`` implementing
+    asynchronous multistage checkpointing.
+
+    Args:
+      body: ``(carry, x) -> (carry, y)`` — one chain step (an RNN/SSM time
+        step, or one transformer layer when scanning over depth).
+      carry: initial carry (the chain state; this is what gets offloaded).
+      xs: stacked per-step inputs with leading axis ``n`` (or None).
+      length: chain length when ``xs is None``.
+      interval: the checkpointing interval ``I``; must divide ``n``.
+      offload: if True, boundary carries go to pinned host memory (Level 2);
+        if False they are saved in HBM (plain segmented remat — the
+        single-stage baseline).
+      nested_intervals: optional inner intervals for Revolve-like nested
+        recomputation inside each segment.
+      unroll: unroll factor for the innermost scan.
+
+    Returns: ``(final_carry, ys)`` identical (up to float assoc.) to
+      ``lax.scan``.
+    """
+    n = length if xs is None else jax.tree_util.tree_leaves(xs)[0].shape[0]
+    if n is None:
+        raise ValueError("need xs or length")
+    if n % interval != 0:
+        raise ValueError(
+            f"interval {interval} must divide chain length {n}; "
+            f"use choose_interval(n, target) to snap it"
+        )
+    if interval == n and not nested_intervals:
+        # Single segment: degenerates to one rematted scan (classic remat).
+        seg = _make_segment(body, interval, offload, nested_intervals, unroll,
+                            boundary_name)
+        return seg(carry, xs)
+
+    num_segments = n // interval
+    xs_seg = None if xs is None else _split_xs(xs, num_segments, interval)
+    seg = _make_segment(body, interval, offload, nested_intervals, unroll,
+                        boundary_name)
+    carry, ys = lax.scan(seg, carry, xs_seg, length=num_segments)
+    return carry, (None if ys is None else _merge_ys(ys, n))
+
+
+def _make_segment(
+    body: Body,
+    interval: int,
+    offload: bool,
+    nested_intervals: Sequence[int],
+    unroll: int,
+    boundary_name: str,
+) -> Callable[[Any, Any], Tuple[Any, Any]]:
+    """One segment: remat region whose boundary carry is offloaded/saved."""
+
+    if offload:
+        policy = ofl.offload_policy([boundary_name])
+    else:
+        policy = ofl.save_policy([boundary_name])
+
+    def segment(carry, xs_seg):
+        # Tag the *input* carry: this is the every-I-th state the paper
+        # stores to Level 2.  All consumers read the tagged value, so remat
+        # saves (offloads) exactly this tensor and recomputes the rest.
+        carry = ofl.tag(carry, boundary_name)
+        if nested_intervals:
+            inner_i, *rest = nested_intervals
+            carry, ys = multistage_scan(
+                body, carry, xs_seg,
+                length=None if xs_seg is not None else interval,
+                interval=inner_i if interval % inner_i == 0 else
+                choose_interval(interval, inner_i),
+                offload=False,
+                nested_intervals=rest,
+                unroll=unroll,
+                boundary_name=ofl.INNER_BOUNDARY,
+            )
+        else:
+            carry, ys = lax.scan(body, carry, xs_seg, length=interval,
+                                 unroll=unroll)
+        return carry, ys
+
+    return jax.checkpoint(segment, policy=policy, prevent_cse=False)
+
+
+# ---------------------------------------------------------------------------
+# BPTT convenience wrapper
+# ---------------------------------------------------------------------------
+
+
+def bptt_grad(
+    step_loss: Callable[[Any, Any, Any], Tuple[Any, Any]],
+    params: Any,
+    carry0: Any,
+    xs: Any,
+    *,
+    interval: int,
+    offload: bool = True,
+    nested_intervals: Sequence[int] = (),
+) -> Tuple[Any, Any]:
+    """Gradient of a summed per-step loss over a long sequence, computed with
+    multistage checkpointing.
+
+    ``step_loss(params, carry, x) -> (new_carry, loss_k)``.
+
+    Returns ``(total_loss, grads)`` — the multi-level counterpart of
+    ``jax.grad`` over ``lax.scan``.
+    """
+
+    def total_loss(p):
+        def body(carry, x):
+            new_carry, l = step_loss(p, carry, x)
+            return new_carry, l
+
+        _, losses = multistage_scan(
+            body, carry0, xs, interval=interval, offload=offload,
+            nested_intervals=nested_intervals,
+        )
+        return jnp.sum(losses)
+
+    return jax.value_and_grad(total_loss)(params)

@@ -1,0 +1,147 @@
+"""Host-offload primitives: the TPU-native incarnation of the paper's
+Level-1/Level-2 transfer machinery.
+
+On TPU, the asynchronous store/prefetch threads of the paper map onto XLA
+async ``copy-start``/``copy-done`` pairs between HBM (``"device"``) and host
+RAM (``"pinned_host"``), scheduled by the latency-hiding scheduler to overlap
+with MXU compute.  JAX exposes this through
+
+* ``checkpoint_name`` tags on intermediate values, and
+* ``save_and_offload_only_these_names`` remat policies,
+
+which together tell XLA *which* residuals of a rematerialised region live on
+the host.  This module centralises those knobs.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.ad_checkpoint import checkpoint_name
+from jax.sharding import NamedSharding, PartitionSpec
+
+# Residual-name vocabulary (shared with models/ and core/multistage_scan).
+BOUNDARY = "ms_boundary"          # segment-boundary carry -> Level 2
+INNER_BOUNDARY = "ms_inner"       # nested sub-segment boundary -> Level 1
+LAYER_INPUT = "layer_input"       # transformer layer input activation
+ATTN_OUT = "attn_out"
+MLP_OUT = "mlp_out"
+QKV = "qkv_proj"
+FFN_PRE = "ffn_pre"
+
+DEVICE = "device"
+HOST = "pinned_host"
+
+
+def tag(x: Any, name: str) -> Any:
+    """Tag every leaf of a pytree with a residual name (identity op)."""
+    return jax.tree_util.tree_map(lambda v: checkpoint_name(v, name), x)
+
+
+# ---------------------------------------------------------------------------
+# Remat policies
+# ---------------------------------------------------------------------------
+
+
+def offload_policy(offload_names: Sequence[str],
+                   save_names: Sequence[str] = ()) -> Any:
+    """Save ``save_names`` in HBM, offload ``offload_names`` to pinned host
+    memory, recompute everything else."""
+    return jax.checkpoint_policies.save_and_offload_only_these_names(
+        names_which_can_be_saved=list(save_names),
+        names_which_can_be_offloaded=list(offload_names),
+        offload_src=DEVICE,
+        offload_dst=HOST,
+    )
+
+
+def save_policy(save_names: Sequence[str]) -> Any:
+    """Save ``save_names`` in HBM, recompute everything else (single-stage)."""
+    return jax.checkpoint_policies.save_only_these_names(*save_names)
+
+
+def _offload_plus(offload_pol, bool_pol):
+    """Combine an Offloadable-returning policy with a boolean one —
+    ``save_from_both_policies`` rejects mixed return types, and the
+    name-based policies return a *truthy* RecomputeType sentinel for
+    unmatched primitives, so only an explicit type check composes."""
+
+    def policy(prim, *args, **kwargs):
+        r = offload_pol(prim, *args, **kwargs)
+        if type(r).__name__ == "RecomputeType":
+            return bool_pol(prim, *args, **kwargs)
+        return r
+
+    return policy
+
+
+_POLICIES = {
+    # name -> thunk building the policy
+    "none": lambda: jax.checkpoint_policies.everything_saveable,
+    "full": lambda: jax.checkpoint_policies.nothing_saveable,
+    "dots": lambda: jax.checkpoint_policies.checkpoint_dots,
+    "dots_no_batch": lambda: jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+    "save_boundary": lambda: save_policy([BOUNDARY]),
+    "offload_boundary": lambda: offload_policy([BOUNDARY]),
+    "offload_boundary_save_inner": lambda: offload_policy([BOUNDARY], [INNER_BOUNDARY]),
+    "save_layer": lambda: save_policy([LAYER_INPUT]),
+    "offload_layer": lambda: offload_policy([LAYER_INPUT]),
+    "offload_layer_save_dots": lambda: _offload_plus(
+        offload_policy([LAYER_INPUT]),
+        jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+    ),
+    "offload_layer_save_all_dots": lambda: _offload_plus(
+        offload_policy([LAYER_INPUT]),
+        jax.checkpoint_policies.dots_saveable,
+    ),
+    "offload_layer_save_attn": lambda: offload_policy([LAYER_INPUT], [ATTN_OUT]),
+}
+
+
+def make_policy(name: str) -> Any:
+    try:
+        return _POLICIES[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown remat policy {name!r}; known: {sorted(_POLICIES)}"
+        ) from None
+
+
+def policy_names() -> Sequence[str]:
+    return sorted(_POLICIES)
+
+
+# ---------------------------------------------------------------------------
+# Explicit host placement (serving path: KV-cache paging, optimizer state)
+# ---------------------------------------------------------------------------
+
+
+def host_sharding(mesh: jax.sharding.Mesh,
+                  spec: PartitionSpec) -> NamedSharding:
+    return NamedSharding(mesh, spec, memory_kind=HOST)
+
+
+def device_sharding(mesh: jax.sharding.Mesh,
+                    spec: PartitionSpec) -> NamedSharding:
+    return NamedSharding(mesh, spec, memory_kind=DEVICE)
+
+
+def to_host(x: Any, mesh: Optional[jax.sharding.Mesh] = None,
+            spec: Optional[PartitionSpec] = None) -> Any:
+    """Move a pytree to host memory (async under jit via device_put)."""
+    if mesh is not None:
+        sh = host_sharding(mesh, spec if spec is not None else PartitionSpec())
+        return jax.tree_util.tree_map(lambda v: jax.device_put(v, sh), x)
+    dev = jax.devices()[0]
+    mem = dev.memory(HOST)
+    return jax.tree_util.tree_map(lambda v: jax.device_put(v, mem), x)
+
+
+def to_device(x: Any, mesh: Optional[jax.sharding.Mesh] = None,
+              spec: Optional[PartitionSpec] = None) -> Any:
+    if mesh is not None:
+        sh = device_sharding(mesh, spec if spec is not None else PartitionSpec())
+        return jax.tree_util.tree_map(lambda v: jax.device_put(v, sh), x)
+    dev = jax.devices()[0]
+    mem = dev.memory(DEVICE)
+    return jax.tree_util.tree_map(lambda v: jax.device_put(v, mem), x)

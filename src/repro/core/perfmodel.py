@@ -1,0 +1,129 @@
+"""Performance model (paper §3), parameterised over hardware.
+
+Times for one training (forward+backward) iteration of an ``n``-step chain:
+
+    T_inf     = n * T_A + n * T_B                          (no memory limit)
+    T_revolve = n * R(n, s) * T_A + n * T_B                (single-stage)
+    T_async   = n * R(I, s) * T_A + n * T_B                (multistage, async)
+
+with ``I = ceil(T_T / T_A)`` the smallest interval at which the Level-2
+transfers (``T_T`` per state) keep up with compute.  ``R(I, s) <= R(n, s)``
+whenever ``I <= n``, so the asynchronous strategy is never slower — and its
+overhead is constant in ``n`` (paper's headline claim).
+
+If a *smaller* interval is forced (I < ceil(T_T/T_A)), stores cannot keep up
+and the forward pass stalls; ``t_async`` models that with a
+``max(I*T_A, T_T)`` per-segment forward time so the trade-off is visible.
+
+``HardwareSpec`` carries the roofline constants for the target chip; the
+dry-run couples this model to measured HLO terms via ``times_from_roofline``.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from repro.core import revolve as rv
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    """Roofline constants. Defaults: TPU v5e-class chip."""
+
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12        # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9             # HBM bytes/s per chip
+    ici_bw: float = 50e9              # bytes/s per ICI link
+    d2h_bw: float = 25e9              # device->host offload bytes/s per chip
+    dcn_bw: float = 1.5625e9          # cross-pod bytes/s per chip
+                                      # (6.25 GB/s host NIC / 4 chips/host)
+    hbm_bytes: float = 16e9           # HBM capacity per chip
+    num_ici_links: int = 4
+
+
+TPU_V5E = HardwareSpec()
+# The paper's platforms, for reproducing its tables on the executor path.
+KNL = HardwareSpec(name="knl", peak_flops=3.0e12, hbm_bw=450e9,
+                   d2h_bw=90e9, hbm_bytes=16e9)          # MCDRAM -> DRAM
+CPU_SSD = HardwareSpec(name="cpu-ssd", peak_flops=1.0e12, hbm_bw=100e9,
+                       d2h_bw=2e9, hbm_bytes=64e9)       # DRAM -> SSD
+
+
+# ---------------------------------------------------------------------------
+
+
+def optimal_interval(t_transfer: float, t_advance: float) -> int:
+    """I = ceil(T_T / T_A): smallest interval that never stalls compute."""
+    if t_advance <= 0:
+        raise ValueError("t_advance must be positive")
+    return max(1, math.ceil(t_transfer / t_advance))
+
+
+def t_inf(n: int, t_a: float, t_b: float) -> float:
+    return n * (t_a + t_b)
+
+
+def t_revolve(n: int, s: int, t_a: float, t_b: float) -> float:
+    return n * rv.recompute_factor(n, s) * t_a + n * t_b
+
+
+def t_async(n: int, interval: int, s: int, t_a: float, t_b: float,
+            t_t: float) -> float:
+    """Multistage runtime.  At the paper's operating point
+    (interval >= ceil(T_T/T_A)) this reduces to
+    ``n * R(I, s) * T_A + n * T_B``; for smaller intervals the per-segment
+    forward time is transfer-bound and the stall appears explicitly.
+
+    With n <= interval the strategy degenerates to classic Revolve (§3).
+    """
+    if n <= interval:
+        return t_revolve(n, s, t_a, t_b)
+    segments = math.ceil(n / interval)
+    fwd_per_seg = max(interval * t_a, t_t)     # stall if transfers lag
+    # reverse: per segment, Revolve(I, s) recomputation + backward steps; the
+    # prefetch of the next segment overlaps, costing time only if it exceeds
+    # the segment's reverse work.
+    seg_recompute = rv.optimal_advances(min(interval, n), s) if interval > 1 else 0
+    rev_per_seg = max(seg_recompute * t_a + interval * t_b, t_t)
+    return segments * (fwd_per_seg + rev_per_seg)
+
+
+def speedup_vs_revolve(n: int, interval: int, s: int, t_a: float,
+                       t_b: float, t_t: float) -> float:
+    return t_revolve(n, s, t_a, t_b) / t_async(n, interval, s, t_a, t_b, t_t)
+
+
+# ---------------------------------------------------------------------------
+# Coupling to the roofline terms of a compiled program
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class StepTimes:
+    """Per-chain-step times derived from compiled-HLO roofline terms."""
+
+    t_a: float   # forward time of one step (layer / sequence chunk)
+    t_b: float   # backward time of one step
+    t_t: float   # Level-2 transfer time of one boundary state
+    interval: int
+
+    @property
+    def never_stalls(self) -> bool:
+        return self.t_t <= self.interval * self.t_a
+
+
+def times_from_roofline(step_flops: float, step_hbm_bytes: float,
+                        state_bytes: float, hw: HardwareSpec,
+                        bwd_fwd_ratio: float = 2.0) -> StepTimes:
+    """Derive (T_A, T_B, T_T, I) for one chain step from its roofline terms.
+
+    ``T_A`` is the max of the compute and memory roofline times (the step runs
+    at whichever bound dominates); ``T_B`` defaults to 2x forward (one step of
+    backprop does ~2x the forward FLOPs); ``T_T`` is the boundary-state
+    offload time at the device->host bandwidth.
+    """
+    t_a = max(step_flops / hw.peak_flops, step_hbm_bytes / hw.hbm_bw)
+    t_b = bwd_fwd_ratio * t_a
+    t_t = state_bytes / hw.d2h_bw
+    return StepTimes(t_a=t_a, t_b=t_b, t_t=t_t,
+                     interval=optimal_interval(t_t, t_a))

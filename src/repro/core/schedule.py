@@ -1,0 +1,181 @@
+"""Asynchronous multistage checkpointing schedule (the paper's §2).
+
+Two storage levels:
+
+* **Level 1** — fast, small (MCDRAM / HBM / this process's RAM): holds the
+  running state plus up to ``s`` snapshots used by Revolve inside an interval.
+* **Level 2** — large, slow (DRAM / SSD / host RAM): receives every ``I``-th
+  state via an *asynchronous* store during the forward pass, and serves
+  asynchronous prefetches during the backward pass.
+
+The schedule below is the action stream the executor interprets.  Stores and
+prefetches are explicitly asynchronous: ``STORE_L2`` / ``PREFETCH_L2`` enqueue
+a transfer, ``WAIT_STORE`` / ``WAIT_PREFETCH`` join it.  Prefetches are
+double-buffered: while interval ``j`` is being reversed, interval ``j-1``'s
+checkpoint is already in flight.
+"""
+from __future__ import annotations
+
+import enum
+import math
+from dataclasses import dataclass, field
+from typing import List
+
+from repro.core import revolve as rv
+
+
+class MOp(enum.Enum):
+    ADVANCE = "advance"          # forward steps [index, end)
+    STORE_L2 = "store_l2"        # async: current state (== x_index) -> Level 2
+    WAIT_STORES = "wait_stores"  # join all outstanding Level-2 stores
+    PREFETCH_L2 = "prefetch_l2"  # async: x_index Level 2 -> Level 1 staging
+    WAIT_PREFETCH = "wait_pref"  # join the prefetch of x_index; load into state
+    FREE_L2 = "free_l2"          # drop x_index from Level 2
+    REVERSE_SEGMENT = "reverse"  # reverse steps [index, end) with x_index in hand
+
+
+@dataclass(frozen=True)
+class MAction:
+    op: MOp
+    index: int = -1
+    end: int = -1
+
+    def __repr__(self) -> str:
+        if self.op in (MOp.ADVANCE, MOp.REVERSE_SEGMENT):
+            return f"{self.op.name}({self.index}->{self.end})"
+        return f"{self.op.name}({self.index})"
+
+
+@dataclass
+class MultistageSchedule:
+    """Schedule for reversing an ``n``-step chain with interval ``I`` and
+    ``s_l1`` Level-1 snapshot slots per interval.
+
+    ``segment_schedules`` maps a segment start index to the Revolve action
+    stream used inside that segment (only populated when the segment does not
+    fit entirely in Level-1 memory, i.e. ``segment_len > s_l1``).
+    """
+
+    n: int
+    interval: int
+    s_l1: int
+    actions: List[MAction] = field(default_factory=list)
+    segment_schedules: dict = field(default_factory=dict)
+
+    # -- accounting used by tests and the perf model --------------------------
+    @property
+    def num_segments(self) -> int:
+        return math.ceil(self.n / self.interval)
+
+    def forward_advances(self) -> int:
+        return sum(
+            a.end - a.index for a in self.actions if a.op is MOp.ADVANCE
+        )
+
+    def reverse_advances(self) -> int:
+        total = 0
+        for a in self.actions:
+            if a.op is not MOp.REVERSE_SEGMENT:
+                continue
+            seg = self.segment_schedules.get(a.index)
+            if seg is None:  # store-all-in-L1 reversal: len-1 advances
+                total += (a.end - a.index) - 1
+            else:
+                total += rv.count_advances(seg)
+        return total
+
+    def total_advances(self) -> int:
+        return self.forward_advances() + self.reverse_advances()
+
+    def recompute_factor(self) -> float:
+        """Total forward advances / (n - 1); 1.0 == no recomputation, matching
+        ``revolve.recompute_factor``'s convention.  Includes the initial
+        forward sweep (n advances), so the minimum for multistage is n/(n-1).
+        """
+        if self.n <= 1:
+            return 1.0
+        return self.total_advances() / (self.n - 1)
+
+    def l2_stores(self) -> int:
+        return sum(1 for a in self.actions if a.op is MOp.STORE_L2)
+
+
+def multistage_schedule(n: int, interval: int, s_l1: int) -> MultistageSchedule:
+    """Build the asynchronous multistage schedule for an n-step chain.
+
+    Forward: advance in segments of ``interval``; asynchronously store each
+    segment-boundary state to Level 2.  Reverse: prefetch boundary states
+    (double-buffered) and reverse each segment with Revolve(segment_len, s_l1)
+    — which degenerates to store-all when ``segment_len <= s_l1``.
+
+    If ``n <= interval`` there is only one segment and the schedule degenerates
+    to classic Revolve, as §3 of the paper notes.
+    """
+    if n < 1:
+        raise ValueError(f"need n >= 1, got {n}")
+    if interval < 1:
+        raise ValueError(f"need interval >= 1, got {interval}")
+    if s_l1 < 1:
+        raise ValueError(f"need s_l1 >= 1, got {s_l1}")
+
+    sched = MultistageSchedule(n=n, interval=interval, s_l1=s_l1)
+    acts = sched.actions
+    starts = list(range(0, n, interval))
+
+    # ---- forward phase ------------------------------------------------------
+    for b in starts:
+        e = min(b + interval, n)
+        acts.append(MAction(MOp.STORE_L2, b))
+        acts.append(MAction(MOp.ADVANCE, b, e))
+    acts.append(MAction(MOp.WAIT_STORES))
+
+    # ---- reverse phase ------------------------------------------------------
+    # Prefetch the last boundary immediately; then double-buffer.
+    acts.append(MAction(MOp.PREFETCH_L2, starts[-1]))
+    for j in range(len(starts) - 1, -1, -1):
+        b = starts[j]
+        e = min(b + interval, n)
+        if j > 0:
+            acts.append(MAction(MOp.PREFETCH_L2, starts[j - 1]))
+        acts.append(MAction(MOp.WAIT_PREFETCH, b))
+        acts.append(MAction(MOp.REVERSE_SEGMENT, b, e))
+        acts.append(MAction(MOp.FREE_L2, b))
+        seg_len = e - b
+        if seg_len > s_l1:
+            # Segment does not fit in L1: Revolve within the interval.
+            sched.segment_schedules[b] = rv.revolve_schedule(seg_len, s_l1, offset=b)
+
+    return sched
+
+
+def multistage_recompute_factor(n: int, interval: int, s_l1: int) -> float:
+    """Physical recompute factor of the multistage strategy: ALL forward
+    advances (the initial sweep + the per-segment reversal replays) over
+    (n - 1).  Constant in n for fixed ``interval``:
+    R -> 1 + t(I, s)/I ~ 2 - 1/I for I <= s+1.
+    """
+    if n <= 1:
+        return 1.0
+    total = n  # initial forward sweep
+    for b in range(0, n, interval):
+        seg = min(interval, n - b)
+        total += rv.optimal_advances(seg, s_l1) if seg > 1 else 0
+    return total / (n - 1)
+
+
+def multistage_recompute_factor_paper(n: int, interval: int,
+                                      s_l1: int) -> float:
+    """The paper's §3 convention: R(I, s) — the Revolve factor *within* one
+    interval (1.0 == segment fits in Level 1; the initial forward sweep is
+    counted as the baseline, not as recomputation).  This is what the
+    paper's Figure 3 plots: flat in n, == classic Revolve's R(I, s).
+    """
+    if n <= 1:
+        return 1.0
+    adv = 0
+    base = 0
+    for b in range(0, n, interval):
+        seg = min(interval, n - b)
+        adv += rv.optimal_advances(seg, s_l1) if seg > 1 else 0
+        base += max(seg - 1, 1)
+    return adv / base if base else 1.0

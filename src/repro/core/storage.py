@@ -1,0 +1,250 @@
+"""Level-2 storage backends with asynchronous store / prefetch threads.
+
+This is the paper-faithful substrate: background threads move state pytrees
+between the compute level (Level 1: this process's arrays) and a Level-2
+store (host RAM dict, or files on disk standing in for an SSD).  The threads
+release the GIL during I/O and ``np.copy``, so transfers genuinely overlap
+with jitted compute — the same mechanism (python threading around numpy
+buffers) the paper's pyrevolve implementation uses.
+
+All backends speak the same protocol::
+
+    put(key, pytree)          # blocking store
+    get(key)                  # blocking load
+    delete(key), __contains__, keys()
+
+``AsyncTransferEngine`` wraps a backend with a writer thread + per-key
+prefetch threads and exposes the async verbs the multistage executor needs:
+``store_async``, ``wait_stores``, ``prefetch_async``, ``wait_prefetch``.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import queue
+import threading
+import time
+from typing import Any, Dict, Iterable, Optional
+
+import numpy as np
+
+import jax
+
+
+def _to_host(tree: Any) -> Any:
+    """Deep-copy a pytree of arrays to plain numpy (detaches from Level 1)."""
+    return jax.tree_util.tree_map(lambda x: np.array(x, copy=True), tree)
+
+
+def tree_bytes(tree: Any) -> int:
+    return sum(
+        np.asarray(x).nbytes for x in jax.tree_util.tree_leaves(tree)
+    )
+
+
+class RAMStorage:
+    """Level-2 store in host RAM (the KNL MCDRAM->DRAM platform).
+
+    ``bandwidth`` (bytes/s), if set, throttles transfers so the paper's
+    T_T-vs-T_A trade-off can be reproduced deterministically on any machine.
+    """
+
+    def __init__(self, bandwidth: Optional[float] = None):
+        self._data: Dict[Any, Any] = {}
+        self._lock = threading.Lock()
+        self.bandwidth = bandwidth
+        self.bytes_written = 0
+        self.bytes_read = 0
+
+    def _throttle(self, nbytes: int) -> None:
+        if self.bandwidth:
+            time.sleep(nbytes / self.bandwidth)
+
+    def put(self, key: Any, tree: Any) -> None:
+        host = _to_host(tree)
+        nb = tree_bytes(host)
+        self._throttle(nb)
+        with self._lock:
+            self._data[key] = host
+            self.bytes_written += nb
+
+    def get(self, key: Any) -> Any:
+        with self._lock:
+            host = self._data[key]
+        nb = tree_bytes(host)
+        self._throttle(nb)
+        with self._lock:
+            self.bytes_read += nb
+        return host
+
+    def delete(self, key: Any) -> None:
+        with self._lock:
+            self._data.pop(key, None)
+
+    def __contains__(self, key: Any) -> bool:
+        with self._lock:
+            return key in self._data
+
+    def keys(self) -> Iterable[Any]:
+        with self._lock:
+            return list(self._data)
+
+
+class DiskStorage:
+    """Level-2 store on disk (the CPU DRAM->SSD platform).  One pickle file
+    per checkpoint, written/read by the background threads through the
+    filesystem API — exactly the paper's CPU-platform mechanism."""
+
+    def __init__(self, directory: str):
+        self.directory = directory
+        os.makedirs(directory, exist_ok=True)
+        self._lock = threading.Lock()
+        self._keys: Dict[Any, str] = {}
+        self.bytes_written = 0
+        self.bytes_read = 0
+
+    def _path(self, key: Any) -> str:
+        return os.path.join(self.directory, f"ckpt_{key}.pkl")
+
+    def put(self, key: Any, tree: Any) -> None:
+        host = _to_host(tree)
+        path = self._path(key)
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            pickle.dump(host, f, protocol=pickle.HIGHEST_PROTOCOL)
+        os.replace(tmp, path)  # atomic publish
+        with self._lock:
+            self._keys[key] = path
+            self.bytes_written += tree_bytes(host)
+
+    def get(self, key: Any) -> Any:
+        with self._lock:
+            path = self._keys[key]
+        with open(path, "rb") as f:
+            host = pickle.load(f)
+        with self._lock:
+            self.bytes_read += tree_bytes(host)
+        return host
+
+    def delete(self, key: Any) -> None:
+        with self._lock:
+            path = self._keys.pop(key, None)
+        if path and os.path.exists(path):
+            os.remove(path)
+
+    def __contains__(self, key: Any) -> bool:
+        with self._lock:
+            return key in self._keys
+
+    def keys(self) -> Iterable[Any]:
+        with self._lock:
+            return list(self._keys)
+
+
+class AsyncTransferEngine:
+    """Async store/prefetch around a Level-2 backend.
+
+    * One writer thread drains a store queue (FIFO, preserves the schedule's
+      store order).
+    * Prefetches run one thread per outstanding key; results land in a
+      staging dict that ``wait_prefetch`` joins on.
+
+    Instruments stall time so experiments can report how often compute waited
+    on Level 2 (zero at the paper's operating point I >= ceil(T_T/T_A)).
+    """
+
+    def __init__(self, backend):
+        self.backend = backend
+        self._store_q: "queue.Queue" = queue.Queue()
+        self._prefetched: Dict[Any, Any] = {}
+        self._prefetch_events: Dict[Any, threading.Event] = {}
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._errors: list = []
+        self.store_stall_s = 0.0
+        self.prefetch_stall_s = 0.0
+        self.num_stores = 0
+        self.num_prefetches = 0
+        self._writer = threading.Thread(target=self._writer_loop, daemon=True)
+        self._writer.start()
+
+    # -- store path -----------------------------------------------------------
+    def _writer_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                item = self._store_q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            key, tree = item
+            try:
+                self.backend.put(key, tree)
+            except Exception as e:  # surfaced on wait_stores
+                self._errors.append(e)
+            finally:
+                self._store_q.task_done()
+
+    def store_async(self, key: Any, tree: Any) -> None:
+        # Snapshot on the caller's thread (cheap) so later in-place mutation
+        # of the running state can never corrupt the checkpoint.
+        self._store_q.put((key, _to_host(tree)))
+        self.num_stores += 1
+
+    def wait_stores(self) -> None:
+        t0 = time.perf_counter()
+        self._store_q.join()
+        self.store_stall_s += time.perf_counter() - t0
+        if self._errors:
+            raise self._errors[0]
+
+    # -- prefetch path --------------------------------------------------------
+    def prefetch_async(self, key: Any) -> None:
+        with self._lock:
+            if key in self._prefetched or key in self._prefetch_events:
+                return
+            ev = threading.Event()
+            self._prefetch_events[key] = ev
+        self.num_prefetches += 1
+
+        def _job() -> None:
+            try:
+                val = self.backend.get(key)
+                with self._lock:
+                    self._prefetched[key] = val
+            except Exception as e:
+                self._errors.append(e)
+            finally:
+                ev.set()
+
+        threading.Thread(target=_job, daemon=True).start()
+
+    def wait_prefetch(self, key: Any) -> Any:
+        with self._lock:
+            ev = self._prefetch_events.get(key)
+        if ev is None:  # never prefetched: demand-fetch (counts as full stall)
+            t0 = time.perf_counter()
+            val = self.backend.get(key)
+            self.prefetch_stall_s += time.perf_counter() - t0
+            return val
+        t0 = time.perf_counter()
+        ev.wait()
+        self.prefetch_stall_s += time.perf_counter() - t0
+        if self._errors:
+            raise self._errors[0]
+        with self._lock:
+            self._prefetch_events.pop(key, None)
+            return self._prefetched.pop(key)
+
+    def delete(self, key: Any) -> None:
+        self.backend.delete(key)
+
+    def close(self) -> None:
+        self._store_q.join()
+        self._stop.set()
+        self._writer.join(timeout=2.0)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticDataset, Prefetcher, text_corpus
+
+__all__ = ["SyntheticDataset", "Prefetcher", "text_corpus"]

@@ -1,0 +1,129 @@
+"""Deterministic synthetic data pipeline with background prefetch.
+
+The token stream is a counter-based hash (stateless: ``batch(step)`` is a
+pure function of ``(seed, step)``), so training is bit-reproducible across
+restarts and across hosts — each host slices its own shard of the global
+batch.  ``Prefetcher`` overlaps host-side batch synthesis with device compute
+using the same async-thread machinery as the paper's Level-2 transfers.
+
+A tiny char-level corpus generator (``text_corpus``) feeds the paper's LSTM
+example.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Dict, Iterator, Optional
+
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeSpec
+
+
+def _hash_tokens(seed: int, step: int, shape, vocab: int) -> np.ndarray:
+    """SplitMix64-style counter hash -> tokens in [0, vocab)."""
+    n = int(np.prod(shape))
+    idx = np.arange(n, dtype=np.uint64) + np.uint64(step) * np.uint64(n) \
+        + (np.uint64(seed) << np.uint64(32))
+    z = idx + np.uint64(0x9E3779B97F4A7C15)
+    z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    z = z ^ (z >> np.uint64(31))
+    return (z % np.uint64(vocab)).astype(np.int32).reshape(shape)
+
+
+def _hash_floats(seed: int, step: int, shape) -> np.ndarray:
+    u = _hash_tokens(seed, step, shape, 1 << 20).astype(np.float32)
+    return (u / float(1 << 19) - 1.0) * 0.05
+
+
+class SyntheticDataset:
+    """Yields batches matching ``input_specs(cfg, shape)`` layouts."""
+
+    def __init__(self, cfg: ArchConfig, shape: ShapeSpec, seed: int = 0,
+                 host_id: int = 0, num_hosts: int = 1):
+        self.cfg, self.shape, self.seed = cfg, shape, seed
+        assert shape.global_batch % num_hosts == 0 or num_hosts == 1
+        self.local_batch = max(1, shape.global_batch // num_hosts)
+        self.host_id = host_id
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        cfg, s = self.cfg, self.shape
+        B, S = self.local_batch, s.seq_len
+        seed = self.seed * 1000003 + self.host_id
+        if cfg.family in ("dense", "moe", "hybrid", "ssm", "lstm"):
+            return {"tokens": _hash_tokens(seed, step, (B, S + 1), cfg.vocab)}
+        if cfg.family == "vlm":
+            P = cfg.n_patches
+            return {
+                "tokens": _hash_tokens(seed, step, (B, S - P + 1), cfg.vocab),
+                "patch_embeds": _hash_floats(seed + 1, step,
+                                             (B, P, cfg.d_model)),
+            }
+        if cfg.family == "encdec":
+            return {
+                "frames": _hash_floats(seed + 1, step,
+                                       (B, max(2, S // 2), cfg.d_model)),
+                "tokens": _hash_tokens(seed, step, (B, cfg.dec_len + 1),
+                                       cfg.vocab),
+            }
+        raise ValueError(cfg.family)
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+class Prefetcher:
+    """Background-thread prefetch over any iterator (depth-bounded queue)."""
+
+    def __init__(self, it: Iterator, depth: int = 2):
+        self._it = it
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._err: Optional[BaseException] = None
+        self._stop = threading.Event()
+        self._t = threading.Thread(target=self._loop, daemon=True)
+        self._t.start()
+
+    def _loop(self):
+        try:
+            for item in self._it:
+                if self._stop.is_set():
+                    return
+                self._q.put(item)
+        except BaseException as e:  # surfaced on next()
+            self._err = e
+        finally:
+            self._q.put(None)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is None:
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+
+
+def text_corpus(n_chars: int = 100000, seed: int = 0) -> np.ndarray:
+    """Synthetic char-level corpus (vocab 96) for the paper's LSTM test."""
+    rng = np.random.default_rng(seed)
+    # Markov-ish structure so the LSTM has something learnable.
+    base = rng.integers(0, 96, size=n_chars // 4)
+    out = np.empty(n_chars, np.int32)
+    for i in range(n_chars):
+        out[i] = base[i % len(base)] if i % 3 else (out[i - 1] + 1) % 96
+    return out

@@ -1,0 +1,11 @@
+"""Distribution substrate: sharding rules, gradient compression, fault
+tolerance and elastic re-meshing."""
+from repro.distributed.sharding import (
+    MeshContext, constrain, params_shardings, cache_shardings,
+    batch_shardings, batch_axes,
+)
+
+__all__ = [
+    "MeshContext", "constrain", "params_shardings", "cache_shardings",
+    "batch_shardings", "batch_axes",
+]

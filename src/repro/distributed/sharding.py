@@ -1,0 +1,251 @@
+"""Sharding rules: logical-axis -> mesh-axis mapping (MaxText-style).
+
+The production mesh is ``("data", "model")`` per pod and
+``("pod", "data", "model")`` across pods:
+
+* ``pod``   — pure data parallelism across DCN; the only cross-pod
+  collective is the gradient all-reduce.
+* ``data``  — FSDP: parameters and optimizer state sharded over their
+  embed/d_model dimension; activations sharded over batch.
+* ``model`` — tensor parallelism: attention heads, MLP hidden, vocab and the
+  MoE expert axis.
+
+``param_pspec`` derives a PartitionSpec for every parameter from its path in
+the pytree + shape; ``constrain`` applies activation constraints inside model
+code (identity unless a mesh context is installed, so models stay runnable on
+a single CPU device).
+"""
+from __future__ import annotations
+
+import re
+import threading
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ctx = threading.local()
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+class MeshContext:
+    """Installs mesh + activation rules for ``constrain`` calls in models.
+
+    ``zero3=True`` additionally pins projection *outputs* to
+    (batch, ..., model): with outputs batch+TP-sharded and inputs
+    batch-sharded, GSPMD must all-gather the FSDP-sharded weight
+    (ZeRO-3 semantics) instead of all-reducing activation partial sums —
+    which on a multi-pod mesh it otherwise routes across DCN.
+    """
+
+    def __init__(self, mesh: Mesh, enable: bool = True, profile: str = "tp",
+                 zero3: bool = False):
+        self.mesh = mesh
+        self.enable = enable
+        ba = batch_axes(mesh) if profile != "dp" else tuple(mesh.axis_names)
+        self.act_specs = {
+            "act": P(ba, None, None),          # (B, S, D)
+            "act_seq": P(None, ba, None),      # sequence-sharded (B=1 long ctx)
+            "logits": P(ba, None, "model" if profile != "dp" else None),
+        }
+        if zero3 and profile != "dp":
+            self.act_specs["proj"] = P(ba, None, "model")       # (B, S, F)
+            self.act_specs["proj4"] = P(ba, None, "model", None)  # (B,S,H,hd)
+
+    def __enter__(self):
+        self.prev = getattr(_ctx, "mc", None)
+        _ctx.mc = self
+        return self
+
+    def __exit__(self, *exc):
+        _ctx.mc = self.prev
+        return False
+
+
+def constrain(x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    mc: Optional[MeshContext] = getattr(_ctx, "mc", None)
+    if mc is None or not mc.enable:
+        return x
+    spec = mc.act_specs.get(kind)
+    if spec is None or len(spec) != x.ndim:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mc.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# parameter sharding rules
+# ---------------------------------------------------------------------------
+
+# (path regex, rank-of-leaf-without-stack-axis) -> partition spec (per rule).
+# Paths are "/"-joined pytree keys, e.g. "layers/pos0/attn/wq/w".
+_PARAM_RULES: Sequence[Tuple[str, Tuple]] = (
+    # embeddings: vocab over model (sharded logits), d replicated
+    (r"(embed|unembed)/emb$", ("model", None)),
+    # attention projections: FSDP on d_model, TP on heads
+    (r"attn/w[qkv]/w$", ("data", "model")),
+    (r"attn/wo/w$", ("model", "data")),
+    (r"attn/w[qkvo]/b$", ("model",)),
+    # dense MLP
+    (r"(mlp|shared)/(gate|up)/w$", ("data", "model")),
+    (r"(mlp|shared)/down/w$", ("model", "data")),
+    (r"(mlp|shared)/.*/b$", (None,)),
+    # MoE: experts over model (EP), FSDP on d_model
+    (r"moe/w_(gate|up)$", ("model", "data", None)),
+    (r"moe/w_down$", ("model", None, "data")),
+    (r"moe/router/w$", ("data", None)),
+    # Mamba: FSDP only (inner dim is semantically partitioned; keep local)
+    (r"mamba/in_proj/w$", ("data", None)),
+    (r"mamba/out_proj/w$", (None, "data")),
+    (r"mamba/conv_w$", (None, None)),
+    # norms / scalars / small vectors: replicated
+    (r".*", None),
+)
+
+
+def _match_rule(path: str, ndim: int) -> Tuple:
+    for pat, spec in _PARAM_RULES:
+        if re.search(pat, path):
+            if spec is None:
+                return tuple(None for _ in range(ndim))
+            return spec
+    return tuple(None for _ in range(ndim))
+
+
+def param_pspec(path_keys: Sequence[Any], leaf: Any, *,
+                stacked_marker: str = "layers/") -> P:
+    """PartitionSpec for one parameter leaf given its tree path.  Works for
+    params nested inside optimizer state too ("opt/m/layers/...")."""
+    parts = []
+    for k in path_keys:
+        name = getattr(k, "key", None)
+        parts.append(str(name if name is not None else k))
+    path = "/".join(parts)
+    ndim = leaf.ndim if hasattr(leaf, "ndim") else len(leaf.shape)
+    stacked = stacked_marker in path  # matches layers/, enc_layers/, ...
+    eff_ndim = ndim - 1 if stacked else ndim
+    spec = _match_rule(path, eff_ndim)
+    spec = tuple(spec[:eff_ndim]) + tuple(
+        None for _ in range(eff_ndim - len(spec)))
+    if stacked:
+        spec = (None,) + spec  # leading n_periods axis replicated
+    return P(*spec)
+
+
+def _axis_size(mesh: Mesh, a) -> int:
+    if a is None:
+        return 1
+    if isinstance(a, tuple):
+        n = 1
+        for x in a:
+            n *= mesh.shape.get(x, 1)
+        return n
+    return mesh.shape.get(a, 1)
+
+
+def fit_spec_to_shape(mesh: Mesh, spec, shape) -> P:
+    """Drop axes missing from the mesh or not dividing the dimension —
+    jit in_shardings require exact divisibility (odd vocab sizes like
+    Whisper's 51865 fall back to replicated on that dim)."""
+    fixed = []
+    for i, a in enumerate(spec):
+        if isinstance(a, tuple):
+            a = tuple(x for x in a if x in mesh.axis_names) or None
+        elif a is not None and a not in mesh.axis_names:
+            a = None
+        if a is not None and shape[i] % _axis_size(mesh, a) != 0:
+            a = None
+        fixed.append(a)
+    return P(*fixed)
+
+
+def params_shardings(mesh: Mesh, params_shape: Any,
+                     profile: str = "tp") -> Any:
+    """NamedShardings for a full params pytree (of arrays or
+    ShapeDtypeStructs).  ``profile="dp"`` replicates every parameter (small
+    models that over-shard on a 256-chip mesh — the whisper-tiny case)."""
+
+    def one(path, leaf):
+        if profile == "dp":
+            return NamedSharding(mesh, P(*(None,) * len(leaf.shape)))
+        spec = param_pspec(path, leaf)
+        return NamedSharding(mesh, fit_spec_to_shape(mesh, spec, leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def cache_pspec(leaf_path: str, shape, mesh: Mesh) -> P:
+    """KV / SSM cache sharding, shape-adaptive:
+
+    * batch axis over (pod, data) when divisible; otherwise the sequence
+      axis is sharded (long-context batch=1 cells);
+    * kv-heads over model when divisible, else head_dim (flash-decoding
+      style contraction sharding — GSPMD inserts the partial-softmax
+      reductions).
+    """
+    ba = batch_axes(mesh)
+    n_b = 1
+    for a in ba:
+        n_b *= mesh.shape[a]
+    n_m = mesh.shape.get("model", 1)
+    ndim = len(shape)
+
+    if ndim == 5 and leaf_path.endswith(("k", "v")):
+        _, B, S, G, hd = shape
+        spec = [None, None, None, None, None]
+        if B % n_b == 0:
+            spec[1] = ba
+        elif S % n_b == 0:
+            spec[2] = ba
+        if G % n_m == 0:
+            spec[3] = "model"
+        elif hd % n_m == 0:
+            spec[4] = "model"
+        return P(*spec)
+    if leaf_path.endswith("ssm"):   # (n_periods, B, H, P, N)
+        _, B, H = shape[0], shape[1], shape[2]
+        return P(None, ba if B % n_b == 0 else None,
+                 "model" if H % n_m == 0 else None, None, None)
+    if leaf_path.endswith("conv"):  # (n_periods, B, K-1, conv_dim)
+        B = shape[1]
+        return P(None, ba if B % n_b == 0 else None,
+                 *(None,) * (ndim - 2))
+    return P(*(None,) * ndim)
+
+
+def cache_shardings(mesh: Mesh, cache_shape: Any) -> Any:
+    def one(path, leaf):
+        parts = [str(getattr(k, "key", k)) for k in path]
+        spec = cache_pspec("/".join(parts), tuple(leaf.shape), mesh)
+        return NamedSharding(mesh, fit_spec_to_shape(mesh, spec, leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def batch_shardings(mesh: Mesh, batch_shape: Any,
+                    profile: str = "tp") -> Any:
+    """Input batch: leading axis over (pod, data) — or over *every* mesh
+    axis under the ``dp`` profile; long-context batch-1 inputs fall back to
+    sequence sharding / replication."""
+    ba = batch_axes(mesh) if profile != "dp" else tuple(mesh.axis_names)
+    n_b = 1
+    for a in ba:
+        n_b *= mesh.shape[a]
+
+    def one(leaf):
+        shape = leaf.shape
+        if not shape:  # scalars (decode position)
+            return NamedSharding(mesh, P())
+        if shape[0] % max(n_b, 1) == 0 and shape[0] >= n_b:
+            return NamedSharding(mesh, P(ba, *(None,) * (len(shape) - 1)))
+        if len(shape) >= 2 and shape[1] % mesh.shape.get("data", 1) == 0:
+            # batch too small: shard the sequence axis (long-context decode)
+            return NamedSharding(mesh, P(None, "data",
+                                         *(None,) * (len(shape) - 2)))
+        return NamedSharding(mesh, P(*(None,) * len(shape)))
+
+    return jax.tree_util.tree_map(one, batch_shape)

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the compute hot-spots (flash attention, SSD scan,
+fused LSTM cell) — ops.py jit wrappers auto-select interpret mode off-TPU;
+ref.py holds the pure-jnp oracles the tests assert against."""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: fused LSTM cell (the paper's per-step hot spot).
+
+One grid step handles one batch block: both gate matmuls, the gate
+nonlinearities and the state update run in a single VMEM-resident fusion —
+eliminating the 7 intermediate HBM round-trips of the unfused XLA graph.
+Weights are kept whole in VMEM (paper-scale LSTMs: (Dx+Dh) x 4Dh fits
+easily; e.g. 320x1024 fp32 = 1.3 MB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, h_ref, c_ref, w_ref, b_ref, hout_ref, cout_ref, *,
+            d_hidden: int):
+    x = x_ref[...].astype(jnp.float32)
+    h = h_ref[...].astype(jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    bias = b_ref[...].astype(jnp.float32)
+    dx = x.shape[-1]
+    z = jax.lax.dot(x, w[:dx], preferred_element_type=jnp.float32) \
+        + jax.lax.dot(h, w[dx:], preferred_element_type=jnp.float32) + bias
+    i = z[:, :d_hidden]
+    f = z[:, d_hidden:2 * d_hidden]
+    o = z[:, 2 * d_hidden:3 * d_hidden]
+    g = z[:, 3 * d_hidden:]
+    c_new = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    hout_ref[...] = h_new.astype(hout_ref.dtype)
+    cout_ref[...] = c_new.astype(cout_ref.dtype)
+
+
+def lstm_cell(x: jnp.ndarray, h: jnp.ndarray, c: jnp.ndarray,
+              w: jnp.ndarray, b: jnp.ndarray, *, block_b: int = 128,
+              interpret: bool = False):
+    """x: (B, Dx); h, c: (B, Dh); w: (Dx+Dh, 4Dh); b: (4Dh,).
+    Returns (h_new, c_new)."""
+    B, Dx = x.shape
+    Dh = h.shape[-1]
+    block_b = min(block_b, B)
+    assert B % block_b == 0
+    kernel = functools.partial(_kernel, d_hidden=Dh)
+    return pl.pallas_call(
+        kernel,
+        grid=(B // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, Dx), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, Dh), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, Dh), lambda i: (i, 0)),
+            pl.BlockSpec((Dx + Dh, 4 * Dh), lambda i: (0, 0)),
+            pl.BlockSpec((4 * Dh,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, Dh), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, Dh), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Dh), h.dtype),
+            jax.ShapeDtypeStruct((B, Dh), c.dtype),
+        ],
+        interpret=interpret,
+    )(x, h, c, w, b)

@@ -1,0 +1,73 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``interpret`` resolves automatically: compiled on TPU backends, interpret
+mode (Python-evaluated kernel bodies) everywhere else — so the same call
+sites work on this CPU container and on a real pod.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import lstm_cell as _lstm
+from repro.kernels import ssd_scan as _ssd
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "scale", "block_q", "block_k",
+    "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: Optional[bool] = None):
+    """Multi-head wrapper.  q: (B, Sq, H, D); k, v: (B, Sk, G, D).
+    Returns (B, Sq, H, D)."""
+    interp = _auto_interpret() if interpret is None else interpret
+    B, Sq, H, D = q.shape
+    G = k.shape[2]
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * G, -1, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * G, -1, D)
+    of = _fa.flash_attention(qf, kf, vf, causal=causal, window=window,
+                             softcap=softcap, scale=scale, block_q=block_q,
+                             block_k=block_k, interpret=interp)
+    return of.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, b, c, *, chunk: int = 128,
+             interpret: Optional[bool] = None):
+    """Head-structured wrapper.  x: (B, T, H, P); dt: (B, T, H); A: (H,);
+    b, c: (B, T, G, N).  Returns (y (B, T, H, P), h_final (B, H, P, N))."""
+    interp = _auto_interpret() if interpret is None else interpret
+    B, T, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    la = dt * A[None, None, :]                               # (B, T, H)
+    bh = jnp.repeat(b, rep, axis=2)
+    ch = jnp.repeat(c, rep, axis=2)
+    xf = x.transpose(0, 2, 1, 3).reshape(B * H, T, P)
+    laf = la.transpose(0, 2, 1).reshape(B * H, T)
+    dtf = dt.transpose(0, 2, 1).reshape(B * H, T)
+    bf = bh.transpose(0, 2, 1, 3).reshape(B * H, T, N)
+    cf = ch.transpose(0, 2, 1, 3).reshape(B * H, T, N)
+    y, h = _ssd.ssd_scan(xf, laf, bf, cf, dtf, chunk=chunk, interpret=interp)
+    return (y.reshape(B, H, T, P).transpose(0, 2, 1, 3),
+            h.reshape(B, H, P, N))
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def lstm_cell(x, h, c, w, b, *, block_b: int = 128,
+              interpret: Optional[bool] = None):
+    interp = _auto_interpret() if interpret is None else interpret
+    return _lstm.lstm_cell(x, h, c, w, b, block_b=block_b, interpret=interp)

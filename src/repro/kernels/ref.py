@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True, window: Optional[int] = None,
+                        softcap: Optional[float] = None,
+                        scale: Optional[float] = None) -> jnp.ndarray:
+    """q: (BH, Sq, D); k, v: (BH, Sk, D) — heads already flattened/repeated."""
+    D = q.shape[-1]
+    sc = (D ** -0.5) if scale is None else scale
+    s = jnp.einsum("bsd,btd->bst", q * sc, k,
+                   preferred_element_type=jnp.float32)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    Sq, Sk = q.shape[1], k.shape[1]
+    qp = jnp.arange(Sq) + (Sk - Sq)
+    kp = jnp.arange(Sk)
+    m = jnp.ones((Sq, Sk), bool)
+    if causal:
+        m &= kp[None, :] <= qp[:, None]
+    if window is not None:
+        m &= qp[:, None] - kp[None, :] < window
+    s = jnp.where(m[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bst,btd->bsd", p, v).astype(q.dtype)
+
+
+def ssd_scan_ref(x: jnp.ndarray, la: jnp.ndarray, b: jnp.ndarray,
+                 c: jnp.ndarray, dt: jnp.ndarray):
+    """Sequential SSD oracle, heads flattened.
+
+    x: (BH, T, P) inputs; la: (BH, T) log-decay (dt * A, negative);
+    b, c: (BH, T, N); dt: (BH, T) step sizes.
+    Returns (y (BH, T, P), h_final (BH, P, N))::
+
+        h_t = exp(la_t) * h_{t-1} + (dt_t * x_t) outer b_t
+        y_t = h_t @ c_t
+    """
+    BH, T, P = x.shape
+    N = b.shape[-1]
+    xf = x.astype(jnp.float32)
+
+    def step(h, args):
+        xt, lat, bt, ct, dtt = args
+        h = h * jnp.exp(lat)[:, None, None] + jnp.einsum(
+            "bp,bn->bpn", xt * dtt[:, None], bt)
+        y = jnp.einsum("bpn,bn->bp", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((BH, P, N), jnp.float32)
+    hf, ys = jax.lax.scan(
+        step, h0,
+        (xf.transpose(1, 0, 2), la.astype(jnp.float32).T,
+         b.astype(jnp.float32).transpose(1, 0, 2),
+         c.astype(jnp.float32).transpose(1, 0, 2),
+         dt.astype(jnp.float32).T))
+    return ys.transpose(1, 0, 2).astype(x.dtype), hf
+
+
+def lstm_cell_ref(x: jnp.ndarray, h: jnp.ndarray, c: jnp.ndarray,
+                  w: jnp.ndarray, b: jnp.ndarray):
+    """x: (B, Dx); h, c: (B, Dh); w: (Dx+Dh, 4Dh); b: (4Dh,)."""
+    z = jnp.concatenate([x, h], axis=-1) @ w + b
+    i, f, o, g = jnp.split(z, 4, axis=-1)
+    c_new = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    return h_new, c_new

@@ -1,0 +1,284 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape) cell and both production meshes
+(16x16 single-pod, 2x16x16 multi-pod), this driver::
+
+    with MeshContext(mesh):
+        lowered = jax.jit(step_fn, in_shardings=...).lower(**input_specs)
+        compiled = lowered.compile()
+        print(compiled.memory_analysis())
+        print(compiled.cost_analysis())
+
+then derives the three roofline terms (compute / memory / collective — see
+``repro.analysis.roofline``) and appends them to ``experiments/dryrun.json``.
+Inputs are ShapeDtypeStructs: nothing is allocated; a failure here is a
+sharding/memory bug in the framework, not an environment artifact.
+
+Variants (--policy/--moe-impl/--attn-chunk/...) re-run cells with different
+runtime knobs — the §Perf hillclimb loop drives those.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-4b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.jaxpr_cost import jaxpr_cost
+from repro.analysis.roofline import (build_report, collective_bytes,
+                                     save_report)
+from repro.configs import applicable_shapes, get_config
+from repro.configs.base import model_flops, score_materialization_bytes
+from repro.configs.shapes import input_specs
+from repro.distributed.sharding import (
+    MeshContext, batch_shardings, cache_shardings, params_shardings)
+from repro.launch.mesh import make_production_mesh
+from repro.models import get_model
+from repro.optim import adamw
+from repro.train import init_train_state, make_train_step
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun.json")
+
+
+def _state_shardings(mesh, state_struct, profile="tp"):
+    out = {}
+    out["params"] = params_shardings(mesh, state_struct["params"], profile)
+    out["opt"] = {k: params_shardings(mesh, v, profile)
+                  for k, v in state_struct["opt"].items()}
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    out["step"] = NamedSharding(mesh, P())
+    if "ef" in state_struct:
+        out["ef"] = params_shardings(mesh, state_struct["ef"], profile)
+    return out
+
+
+def _cast_struct(tree, dtype):
+    def one(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(x.shape, dtype)
+        return x
+    return jax.tree_util.tree_map(one, tree)
+
+
+def _lower(cfg, spec, mesh, serve_bf16=False):
+    """Lower one cell's step function against ShapeDtypeStructs.
+    Returns (lowered, traced_fn, trace_args)."""
+    api = get_model(cfg)
+    specs = input_specs(cfg, spec)
+    prof = cfg.sharding_profile
+    with MeshContext(mesh, profile=prof, zero3=cfg.zero3):
+        if spec.kind == "train":
+            opt = adamw(1e-4)
+            state_struct = jax.eval_shape(
+                lambda: init_train_state(api, opt, jax.random.PRNGKey(0)))
+            step = make_train_step(api, opt,
+                                   grad_accum=int(os.environ.get(
+                                       "REPRO_GRAD_ACCUM", "1")))
+            st_sh = _state_shardings(mesh, state_struct, prof)
+            b_sh = batch_shardings(mesh, specs, prof)
+            # NOTE: out_shardings stay unspecified — pinning them trips an
+            # XLA SPMD RET_CHECK ("Side-effect HLO must have sharding") on
+            # the host-offload annotate_device_placement custom-calls.  The
+            # global gradient reduction cannot be elided regardless: the
+            # replicated grad_norm metric depends on every grad element.
+            lowered = jax.jit(step, in_shardings=(st_sh, b_sh)).lower(
+                state_struct, specs)
+            return lowered, step, (state_struct, specs)
+        params_struct = jax.eval_shape(
+            lambda: api.init(jax.random.PRNGKey(0)))
+        if serve_bf16:  # serving checkpoints in bf16 (hillclimb variant)
+            params_struct = _cast_struct(params_struct, jnp.bfloat16)
+        p_sh = params_shardings(mesh, params_struct, prof)
+        if spec.kind == "prefill":
+            b_sh = batch_shardings(mesh, specs, prof)
+            fn = lambda p, b: api.prefill(p, b)
+            lowered = jax.jit(fn, in_shardings=(p_sh, b_sh)).lower(
+                params_struct, specs)
+            return lowered, fn, (params_struct, specs)
+        # decode
+        cache_struct = specs["cache"]
+        c_sh = cache_shardings(mesh, cache_struct)
+        rest = {k: v for k, v in specs.items() if k != "cache"}
+        r_sh = batch_shardings(mesh, rest, prof)
+        fn = lambda p, c, b: api.decode(p, c, b)
+        lowered = jax.jit(fn, in_shardings=(p_sh, c_sh, r_sh),
+                          out_shardings=(None, c_sh),
+                          donate_argnums=(1,)).lower(
+            params_struct, cache_struct, rest)
+        return lowered, fn, (params_struct, cache_struct, rest)
+
+
+def _reduced(cfg, k: int):
+    """Config with k periods (and k enc layers for enc-dec)."""
+    kw = {"n_layers": cfg.period * k, "scan_unroll": max(cfg.scan_unroll, k)}
+    if cfg.n_enc_layers:
+        kw["n_enc_layers"] = k
+    return cfg.replace(**kw)
+
+
+def collective_extrapolated(cfg, spec, mesh, serve_bf16=False):
+    """Per-layer collective bytes via 1-period vs 2-period unrolled
+    lowerings (whiles hide loop collectives from a single-program parse)."""
+    cb = {}
+    for k in (1, 2):
+        lowered, _, _ = _lower(_reduced(cfg, k), spec, mesh, serve_bf16)
+        cb[k] = collective_bytes(lowered.compile().as_text())
+    keys = set(cb[1]) | set(cb[2])
+    out = {}
+    for key in keys:
+        a, b = cb[1].get(key, 0), cb[2].get(key, 0)
+        per_layer = max(b - a, 0)
+        out[key] = a + per_layer * (cfg.n_periods - 1)
+    return out
+
+
+def lower_cell(cfg, spec, mesh, mesh_name, variant="baseline",
+               verbose=True, serve_bf16=False):
+    """Full-program compile (the deliverable) + roofline terms."""
+    t0 = time.time()
+    lowered, fn, args = _lower(cfg, spec, mesh, serve_bf16)
+    compiled = lowered.compile()
+    dt_full = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    peak = float(ma.temp_size_in_bytes + ma.argument_size_in_bytes +
+                 ma.output_size_in_bytes)
+    ca = compiled.cost_analysis() or {}
+    xla_flops_raw = float(ca.get("flops", 0.0))
+    coll_raw = collective_bytes(compiled.as_text())
+
+    # exact executed cost from the jaxpr (scan-aware)
+    from repro.analysis.jaxpr_cost import cost_of_fn
+    cost = cost_of_fn(fn, *args)
+    # loop-corrected collectives from 1 vs 2 period unrolled programs
+    coll = collective_extrapolated(cfg, spec, mesh, serve_bf16)
+
+    n_chips = mesh.devices.size
+    n_pods = mesh.shape.get("pod", 1)
+    report = build_report(
+        arch=cfg.name, shape=spec.name, mesh_name=mesh_name, n_chips=n_chips,
+        jaxpr_flops=cost.flops, jaxpr_bytes=cost.bytes,
+        jaxpr_bytes_major=cost.bytes_major,
+        score_bytes=score_materialization_bytes(cfg, spec),
+        coll_bytes=float(coll["total"]), coll_breakdown=coll,
+        model_flops_total=model_flops(cfg, spec), peak_bytes=peak,
+        xla_flops_raw=xla_flops_raw, n_pods=n_pods,
+        coll_bytes_raw=float(coll_raw["total"]), variant=variant)
+    dt = time.time() - t0
+    if verbose:
+        print(f"  memory_analysis: args={ma.argument_size_in_bytes/1e9:.2f}GB "
+              f"out={ma.output_size_in_bytes/1e9:.2f}GB "
+              f"temp={ma.temp_size_in_bytes/1e9:.2f}GB (per device)")
+        print(f"  cost: flops/dev={report.flops_per_device:.3e} "
+              f"bytes/dev={report.hbm_bytes_per_device:.3e} "
+              f"(kernel-adj {report.hbm_bytes_kernel_adjusted:.3e}) "
+              f"coll/dev={report.collective_bytes_per_device:.3e}")
+        print(f"  roofline: compute={report.t_compute*1e3:.2f}ms "
+              f"memory={report.t_memory_kernel*1e3:.2f}ms "
+              f"(xla-path {report.t_memory*1e3:.2f}ms) "
+              f"collective={report.t_collective*1e3:.2f}ms "
+              f"-> {report.bottleneck}-bound "
+              f"useful={report.useful_ratio:.3f} "
+              f"frac={report.roofline_fraction:.3f} "
+              f"[{dt_full:.0f}s+{dt-dt_full:.0f}s compile]")
+    return report, dt
+
+
+def apply_variant(cfg, args):
+    kw = {}
+    if args.policy:
+        kw["remat_policy"] = args.policy
+    if args.moe_impl:
+        kw["moe_impl"] = args.moe_impl
+    if args.attn_chunk:
+        kw["attn_chunk"] = args.attn_chunk
+    if args.ce_chunk:
+        kw["ce_chunk"] = args.ce_chunk
+    if args.profile:
+        kw["sharding_profile"] = args.profile
+    if args.pad_vocab:
+        kw["pad_vocab_multiple"] = args.pad_vocab
+    if args.zero3:
+        kw["zero3"] = True
+    return cfg.replace(**kw) if kw else cfg
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--policy", default=None)
+    ap.add_argument("--moe-impl", dest="moe_impl", default=None)
+    ap.add_argument("--attn-chunk", dest="attn_chunk", type=int, default=None)
+    ap.add_argument("--ce-chunk", dest="ce_chunk", type=int, default=None)
+    ap.add_argument("--profile", default=None, choices=[None, "tp", "dp"])
+    ap.add_argument("--pad-vocab", dest="pad_vocab", type=int, default=None)
+    ap.add_argument("--zero3", action="store_true")
+    ap.add_argument("--serve-bf16", dest="serve_bf16", action="store_true")
+    ap.add_argument("--out", default=RESULTS)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.configs.registry import ASSIGNED
+    archs = ASSIGNED if (args.all or args.arch is None) else [args.arch]
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("pod16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("pods2x16x16", make_production_mesh(multi_pod=True)))
+
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    try:
+        with open(args.out) as f:
+            done = set(json.load(f).keys())
+    except (FileNotFoundError, json.JSONDecodeError):
+        done = set()
+
+    failures = []
+    for arch in archs:
+        cfg = apply_variant(get_config(arch), args)
+        shapes = applicable_shapes(cfg)
+        if args.shape:
+            shapes = [s for s in shapes if s.name == args.shape]
+        for spec in shapes:
+            for mesh_name, mesh in meshes:
+                key = f"{cfg.name}|{spec.name}|{mesh_name}|{args.variant}"
+                if key in done and not args.force:
+                    print(f"[skip] {key} (cached)")
+                    continue
+                print(f"[cell] {key}")
+                try:
+                    report, _ = lower_cell(cfg, spec, mesh, mesh_name,
+                                           variant=args.variant,
+                                           serve_bf16=args.serve_bf16)
+                    save_report(args.out, report)
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append((key, repr(e)))
+    if failures:
+        print("FAILURES:")
+        for k, e in failures:
+            print(" ", k, e)
+        sys.exit(1)
+    print("dry-run complete: all requested cells lowered + compiled.")
+
+
+if __name__ == "__main__":
+    main()

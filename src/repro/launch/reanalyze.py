@@ -1,0 +1,82 @@
+"""Rebuild roofline reports from an existing dryrun.json without
+recompiling: collective bytes / peak memory are reused from the stored
+compile, the jaxpr cost terms are re-traced (seconds, no XLA involved).
+
+Used when the cost model changes mid-campaign, and by the §Perf hillclimb
+to recompute tables.
+
+    PYTHONPATH=src python -m repro.launch.reanalyze --out experiments/dryrun.json
+"""
+import argparse
+import json
+
+import jax
+
+from repro.analysis.jaxpr_cost import cost_of_fn
+from repro.analysis.roofline import build_report, save_report
+from repro.configs import SHAPES, get_config
+from repro.configs.base import model_flops, score_materialization_bytes
+from repro.configs.shapes import input_specs
+from repro.models import get_model
+from repro.optim import adamw
+from repro.train import init_train_state, make_train_step
+
+
+def trace_cost(cfg, spec):
+    api = get_model(cfg)
+    specs = input_specs(cfg, spec)
+    if spec.kind == "train":
+        opt = adamw(1e-4)
+        state_struct = jax.eval_shape(
+            lambda: init_train_state(api, opt, jax.random.PRNGKey(0)))
+        step = make_train_step(api, opt)
+        return cost_of_fn(step, state_struct, specs)
+    params_struct = jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0)))
+    if spec.kind == "prefill":
+        return cost_of_fn(lambda p, b: api.prefill(p, b), params_struct,
+                          specs)
+    cache = specs["cache"]
+    rest = {k: v for k, v in specs.items() if k != "cache"}
+    return cost_of_fn(lambda p, c, b: api.decode(p, c, b), params_struct,
+                      cache, rest)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--variant", default="baseline")
+    args = ap.parse_args(argv)
+    with open(args.out) as f:
+        data = json.load(f)
+    cache = {}
+    for key, old in sorted(data.items()):
+        arch, shape, mesh_name, variant = key.split("|")
+        if variant != args.variant:
+            continue
+        cfg = get_config(arch)
+        spec = SHAPES[shape]
+        ck = (arch, shape)
+        if ck not in cache:
+            cache[ck] = trace_cost(cfg, spec)
+        cost = cache[ck]
+        report = build_report(
+            arch=arch, shape=shape, mesh_name=mesh_name,
+            n_chips=old["n_chips"],
+            jaxpr_flops=cost.flops, jaxpr_bytes=cost.bytes,
+            jaxpr_bytes_major=cost.bytes_major,
+            score_bytes=score_materialization_bytes(cfg, spec),
+            coll_bytes=float(old["collective_breakdown"].get("total", 0)),
+            coll_breakdown=old["collective_breakdown"],
+            model_flops_total=model_flops(cfg, spec),
+            peak_bytes=old.get("peak_bytes_per_device"),
+            xla_flops_raw=old.get("xla_flops_raw", 0.0),
+            coll_bytes_raw=old.get("collective_bytes_raw", 0.0),
+            n_pods=2 if "pods" in mesh_name else 1,
+            variant=variant)
+        save_report(args.out, report)
+        print(f"[reanalyzed] {key}: frac={report.roofline_fraction:.3f} "
+              f"bottleneck={report.bottleneck}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Render EXPERIMENTS.md tables from experiments/dryrun.json.
+
+    PYTHONPATH=src python -m repro.launch.report --json experiments/dryrun.json
+"""
+import argparse
+import json
+from collections import defaultdict
+
+
+def fmt_table(rows, cols, headers=None):
+    headers = headers or cols
+    out = ["| " + " | ".join(headers) + " |",
+           "|" + "|".join("---" for _ in headers) + "|"]
+    for r in rows:
+        out.append("| " + " | ".join(str(r.get(c, "")) for c in cols) + " |")
+    return "\n".join(out)
+
+
+def ms(x):
+    return f"{x*1e3:.2f}"
+
+
+def render(data, variant="baseline", mesh=None):
+    rows = []
+    for key, r in sorted(data.items()):
+        if r["variant"] != variant:
+            continue
+        if mesh and r["mesh"] != mesh:
+            continue
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "t_compute_ms": ms(r["t_compute"]),
+            "t_memory_ms": ms(r["t_memory_kernel"]),
+            "t_coll_ms": ms(r["t_collective"]),
+            "bound": r["bottleneck"],
+            "useful": f"{r['useful_ratio']:.3f}",
+            "frac": f"{r['roofline_fraction']:.3f}",
+            "peak_GB": f"{(r.get('peak_bytes_per_device') or 0)/1e9:.1f}",
+        })
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", required=True)
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args(argv)
+    with open(args.json) as f:
+        data = json.load(f)
+    rows = render(data, args.variant, args.mesh)
+    print(fmt_table(rows, list(rows[0].keys())))
+    # summary stats
+    worst = min(rows, key=lambda r: float(r["frac"]))
+    coll = [r for r in rows if r["bound"] == "collective"]
+    print(f"\nworst roofline fraction: {worst['arch']}|{worst['shape']}"
+          f"|{worst['mesh']} ({worst['frac']})")
+    print(f"collective-bound cells: "
+          f"{[(r['arch'], r['shape'], r['mesh']) for r in coll]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Model substrate: pure-functional JAX definitions for every assigned
+architecture family (dense / MoE / hybrid / SSM decoder LMs, encoder-decoder,
+VLM, and the paper's LSTM)."""
+from repro.models.model_factory import ModelAPI, get_model
+
+__all__ = ["ModelAPI", "get_model"]

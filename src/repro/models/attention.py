@@ -1,0 +1,313 @@
+"""GQA attention: memory-efficient chunked (flash-style) training path with a
+custom VJP, plus a KV-cache decode path.
+
+The chunked path is the XLA-portable twin of ``repro.kernels.flash_attention``
+(the Pallas TPU kernel): an online-softmax scan over KV chunks that never
+materialises the (S x S) score matrix, with a flash-style backward that
+recomputes probabilities from the saved logsumexp instead of letting JAX
+stack per-chunk scan residuals.  On real TPUs the Pallas kernel is selected
+via ``repro.kernels.ops``; everywhere else (CPU tests, dry-run lowering) this
+module is the implementation.
+
+Supports: grouped KV heads, causal masking, sliding windows (Gemma-2 local
+layers), attention logit softcapping, QKV bias (Qwen), non-causal encoder
+attention (Whisper encoder) and cross attention.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import (
+    DTypes, DEFAULT_DTYPES, apply_rope, apply_rope_at, dense, init_dense,
+)
+
+Params = Any
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# chunked attention with flash-style custom VJP
+# ---------------------------------------------------------------------------
+
+
+def _mask_chunk(q_pos: jnp.ndarray, k_pos: jnp.ndarray, causal: bool,
+                window: Optional[int]) -> jnp.ndarray:
+    """(Sq, Sk_chunk) boolean validity mask."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= q_pos[:, None] - k_pos[None, :] < window
+    return m
+
+
+def _scores(q, kc, cap):
+    # q: (B,G,Hg,Sq,D) kc: (B,G,C,D) -> (B,G,Hg,Sq,C), fp32
+    s = jnp.einsum("bghsd,bgcd->bghsc", q, kc,
+                   preferred_element_type=jnp.float32)
+    if cap is not None:
+        s = cap * jnp.tanh(s / cap)
+    return s
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      causal: bool = True, window: Optional[int] = None,
+                      softcap: Optional[float] = None, chunk: int = 1024,
+                      scale: Optional[float] = None) -> jnp.ndarray:
+    """q: (B, Sq, H, D); k, v: (B, Sk, G, D) with H % G == 0.
+    Returns (B, Sq, H, D).  Never materialises (Sq, Sk)."""
+    out, _ = _chunked_fwd(q, k, v, causal, window, softcap, chunk, scale)
+    return out
+
+
+def _layout(q, k, v, scale):
+    B, Sq, H, D = q.shape
+    G = k.shape[2]
+    Hg = H // G
+    scale = (D ** -0.5) if scale is None else scale
+    qt = (q * scale).transpose(0, 2, 1, 3).reshape(B, G, Hg, Sq, D)
+    kt = k.transpose(0, 2, 1, 3)  # (B, G, Sk, D)
+    vt = v.transpose(0, 2, 1, 3)
+    return qt, kt, vt, (B, Sq, H, D, G, Hg)
+
+
+def _chunked_fwd(q, k, v, causal, window, softcap, chunk, scale):
+    qt, kt, vt, (B, Sq, H, D, G, Hg) = _layout(q, k, v, scale)
+    Sk = kt.shape[2]
+    if Sk % chunk != 0:
+        chunk = Sk
+    n_chunks = Sk // chunk
+    q_pos = jnp.arange(Sq) + (Sk - Sq)  # queries sit at the end of the keys
+    kc = kt.reshape(B, G, n_chunks, chunk, D).transpose(2, 0, 1, 3, 4)
+    vc = vt.reshape(B, G, n_chunks, chunk, D).transpose(2, 0, 1, 3, 4)
+
+    def body(carry, args):
+        acc, m, l = carry
+        kj, vj, j = args
+        k_pos = j * chunk + jnp.arange(chunk)
+        s = _scores(qt, kj, softcap)  # (B,G,Hg,Sq,C) fp32
+        mask = _mask_chunk(q_pos, k_pos, causal, window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bghsc,bgcd->bghsd", p.astype(vj.dtype), vj,
+            preferred_element_type=jnp.float32)
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((B, G, Hg, Sq, D), jnp.float32)
+    m0 = jnp.full((B, G, Hg, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, G, Hg, Sq), jnp.float32)
+    (acc, m, l), _ = lax.scan(body, (acc0, m0, l0),
+                              (kc, vc, jnp.arange(n_chunks)))
+    l = jnp.maximum(l, 1e-30)
+    out = (acc / l[..., None]).astype(q.dtype)
+    lse = m + jnp.log(l)
+    out_std = out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)
+    return out_std, (q, k, v, out_std, lse)
+
+
+def _chunked_bwd(causal, window, softcap, chunk, scale, res, dout):
+    q, k, v, out, lse = res
+    qt, kt, vt, (B, Sq, H, D, G, Hg) = _layout(q, k, v, scale)
+    sc = (D ** -0.5) if scale is None else scale
+    Sk = kt.shape[2]
+    if Sk % chunk != 0:
+        chunk = Sk
+    n_chunks = Sk // chunk
+    q_pos = jnp.arange(Sq) + (Sk - Sq)
+    do = dout.transpose(0, 2, 1, 3).reshape(B, G, Hg, Sq, D)
+    ot = out.transpose(0, 2, 1, 3).reshape(B, G, Hg, Sq, D)
+    Dv = jnp.sum(do.astype(jnp.float32) * ot.astype(jnp.float32), axis=-1)
+    kc = kt.reshape(B, G, n_chunks, chunk, D).transpose(2, 0, 1, 3, 4)
+    vc = vt.reshape(B, G, n_chunks, chunk, D).transpose(2, 0, 1, 3, 4)
+
+    def body(dq_acc, args):
+        kj, vj, j = args
+        k_pos = j * chunk + jnp.arange(chunk)
+        s_raw = jnp.einsum("bghsd,bgcd->bghsc", qt, kj,
+                           preferred_element_type=jnp.float32)
+        if softcap is not None:
+            t = jnp.tanh(s_raw / softcap)
+            s = softcap * t
+            dcap = 1.0 - t * t
+        else:
+            s, dcap = s_raw, None
+        mask = _mask_chunk(q_pos, k_pos, causal, window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])  # (B,G,Hg,Sq,C)
+        dv_j = jnp.einsum("bghsc,bghsd->bgcd", p.astype(do.dtype), do,
+                          preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bghsd,bgcd->bghsc", do, vj,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - Dv[..., None])
+        if dcap is not None:
+            ds = ds * dcap
+        ds = jnp.where(mask[None, None, None], ds, 0.0)
+        dq_j = jnp.einsum("bghsc,bgcd->bghsd", ds.astype(kj.dtype), kj,
+                          preferred_element_type=jnp.float32)
+        dk_j = jnp.einsum("bghsc,bghsd->bgcd", ds.astype(qt.dtype), qt,
+                          preferred_element_type=jnp.float32)
+        return dq_acc + dq_j, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((B, G, Hg, Sq, D), jnp.float32)
+    dq, (dk_c, dv_c) = lax.scan(body, dq0, (kc, vc, jnp.arange(n_chunks)))
+    dq = (dq * sc).reshape(B, H, Sq, D).transpose(0, 2, 1, 3).astype(q.dtype)
+    dk = dk_c.transpose(1, 2, 0, 3, 4).reshape(B, G, Sk, D)
+    dk = dk.transpose(0, 2, 1, 3).astype(k.dtype)
+    dv = dv_c.transpose(1, 2, 0, 3, 4).reshape(B, G, Sk, D)
+    dv = dv.transpose(0, 2, 1, 3).astype(v.dtype)
+    return dq, dk, dv
+
+
+chunked_attention.defvjp(_chunked_fwd, _chunked_bwd)
+
+
+def reference_attention(q, k, v, causal=True, window=None, softcap=None,
+                        scale=None) -> jnp.ndarray:
+    """Naive O(S^2)-memory oracle used by tests and tiny smoke shapes."""
+    B, Sq, H, D = q.shape
+    G = k.shape[2]
+    Hg = H // G
+    sc = (D ** -0.5) if scale is None else scale
+    qt = (q * sc).transpose(0, 2, 1, 3).reshape(B, G, Hg, Sq, D)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    s = jnp.einsum("bghsd,bgtd->bghst", qt, kt,
+                   preferred_element_type=jnp.float32)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    Sk = k.shape[1]
+    q_pos = jnp.arange(Sq) + (Sk - Sq)
+    k_pos = jnp.arange(Sk)
+    mask = _mask_chunk(q_pos, k_pos, causal, window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bghst,bgtd->bghsd", p, vt)
+    return o.reshape(B, H, Sq, D).transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention block (projections + rope + cache plumbing)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, *, qkv_bias: bool = False,
+                   dtype=jnp.float32) -> Params:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": init_dense(kq, d_model, n_heads * head_dim, bias=qkv_bias, dtype=dtype),
+        "wk": init_dense(kk, d_model, n_kv_heads * head_dim, bias=qkv_bias, dtype=dtype),
+        "wv": init_dense(kv, d_model, n_kv_heads * head_dim, bias=qkv_bias, dtype=dtype),
+        "wo": init_dense(ko, n_heads * head_dim, d_model, bias=False, dtype=dtype),
+    }
+
+
+def _project_qkv(p, x, n_heads, n_kv_heads, head_dim, dt):
+    from repro.distributed.sharding import constrain
+    B, S, _ = x.shape
+    q = dense(p["wq"], x, dt).reshape(B, S, n_heads, head_dim)
+    k = dense(p["wk"], x, dt).reshape(B, S, n_kv_heads, head_dim)
+    v = dense(p["wv"], x, dt).reshape(B, S, n_kv_heads, head_dim)
+    # zero3 variant: pin outputs to (batch, ..., heads@model) so the FSDP-
+    # sharded weights are all-gathered rather than contracted-and-reduced.
+    q, k, v = (constrain(t, "proj4") for t in (q, k, v))
+    return q, k, v
+
+
+def attention(p: Params, x: jnp.ndarray, *, n_heads: int, n_kv_heads: int,
+              head_dim: int, rope: Optional[Tuple[jnp.ndarray, jnp.ndarray]],
+              causal: bool = True, window: Optional[int] = None,
+              softcap: Optional[float] = None, scale: Optional[float] = None,
+              chunk: int = 1024, use_chunked: Optional[bool] = None,
+              dt: DTypes = DEFAULT_DTYPES) -> jnp.ndarray:
+    """Self-attention over a full sequence (training / prefill compute)."""
+    q, k, v = _project_qkv(p, x, n_heads, n_kv_heads, head_dim, dt)
+    if rope is not None:
+        cos, sin = rope
+        q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+    S = x.shape[1]
+    if use_chunked is None:
+        use_chunked = S > 2048
+    if use_chunked:
+        o = chunked_attention(q, k, v, causal, window, softcap, chunk, scale)
+    else:
+        o = reference_attention(q, k, v, causal, window, softcap, scale)
+    B = x.shape[0]
+    return dense(p["wo"], o.reshape(B, S, n_heads * head_dim), dt)
+
+
+def cross_attention(p: Params, x: jnp.ndarray, kv_src: jnp.ndarray, *,
+                    n_heads: int, n_kv_heads: int, head_dim: int,
+                    dt: DTypes = DEFAULT_DTYPES) -> jnp.ndarray:
+    """Encoder-decoder cross attention (non-causal over kv_src)."""
+    B, S, _ = x.shape
+    Sk = kv_src.shape[1]
+    q = dense(p["wq"], x, dt).reshape(B, S, n_heads, head_dim)
+    k = dense(p["wk"], kv_src, dt).reshape(B, Sk, n_kv_heads, head_dim)
+    v = dense(p["wv"], kv_src, dt).reshape(B, Sk, n_kv_heads, head_dim)
+    o = reference_attention(q, k, v, causal=False)
+    return dense(p["wo"], o.reshape(B, S, n_heads * head_dim), dt)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode path)
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(batch: int, max_len: int, n_kv_heads: int, head_dim: int,
+                  n_layers: int, dtype=jnp.bfloat16) -> Params:
+    shape = (n_layers, batch, max_len, n_kv_heads, head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_attention(p: Params, x: jnp.ndarray, cache_k: jnp.ndarray,
+                     cache_v: jnp.ndarray, pos: jnp.ndarray, *,
+                     n_heads: int, n_kv_heads: int, head_dim: int,
+                     rope_theta: Optional[float] = 10000.0,
+                     window: Optional[int] = None,
+                     softcap: Optional[float] = None,
+                     scale: Optional[float] = None,
+                     dt: DTypes = DEFAULT_DTYPES):
+    """One decode step.  x: (B, 1, d); cache_k/v: (B, S_max, G, D);
+    pos: scalar int32 — current length (same for the whole batch).
+    Returns (y, new_cache_k, new_cache_v)."""
+    B = x.shape[0]
+    q = dense(p["wq"], x, dt).reshape(B, 1, n_heads, head_dim)
+    k = dense(p["wk"], x, dt).reshape(B, 1, n_kv_heads, head_dim)
+    v = dense(p["wv"], x, dt).reshape(B, 1, n_kv_heads, head_dim)
+    if rope_theta is not None:
+        posb = jnp.full((B,), pos, jnp.int32)
+        q = apply_rope_at(q, posb, head_dim, rope_theta)
+        k = apply_rope_at(k, posb, head_dim, rope_theta)
+    ck = lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                  (0, pos, 0, 0))
+    cv = lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                  (0, pos, 0, 0))
+    S = ck.shape[1]
+    G, Hg = n_kv_heads, n_heads // n_kv_heads
+    sc = (head_dim ** -0.5) if scale is None else scale
+    qt = (q * sc).transpose(0, 2, 1, 3).reshape(B, G, Hg, 1, head_dim)
+    s = jnp.einsum("bghsd,bgtd->bghst", qt, ck.transpose(0, 2, 1, 3),
+                   preferred_element_type=jnp.float32)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    k_pos = jnp.arange(S)
+    valid = k_pos <= pos
+    if window is not None:
+        valid &= k_pos > pos - window
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1).astype(cv.dtype)
+    o = jnp.einsum("bghst,bgtd->bghsd", pattn, cv.transpose(0, 2, 1, 3))
+    o = o.reshape(B, n_heads, 1, head_dim).transpose(0, 2, 1, 3)
+    y = dense(p["wo"], o.reshape(B, 1, n_heads * head_dim), dt)
+    return y, ck, cv

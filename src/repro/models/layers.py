@@ -1,0 +1,191 @@
+"""Shared neural-net building blocks (pure functional JAX).
+
+Conventions:
+* params are nested dicts of jnp arrays; every module is an
+  ``init_*(key, ...) -> params`` / ``*_apply(params, x, ...)`` pair.
+* parameters are stored in ``param_dtype`` (default fp32) and cast to
+  ``compute_dtype`` (default bf16) at use — the usual mixed-precision setup.
+* stacked-layer parameters carry a leading layer axis (built with vmap over
+  per-layer keys) so depth is always a ``lax.scan``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# dtype policy
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DTypes:
+    param: Any = jnp.float32
+    compute: Any = jnp.bfloat16
+
+    def c(self, x):
+        return x.astype(self.compute)
+
+
+DEFAULT_DTYPES = DTypes()
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+
+def init_dense(key, d_in: int, d_out: int, *, bias: bool = False,
+               dtype=jnp.float32, scale: Optional[float] = None) -> Params:
+    scale = (d_in ** -0.5) if scale is None else scale
+    p = {"w": jax.random.normal(key, (d_in, d_out), dtype) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: Params, x: jnp.ndarray, dt: DTypes = DEFAULT_DTYPES) -> jnp.ndarray:
+    y = x @ dt.c(p["w"])
+    if "b" in p:
+        y = y + dt.c(p["b"])
+    return y
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.zeros((d,), dtype)}  # stored as (scale - 1)
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-6,
+            dt: DTypes = DEFAULT_DTYPES) -> jnp.ndarray:
+    # Gemma-style: normalise in fp32, weight stored as offset from 1.
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * (1.0 + p["scale"].astype(jnp.float32))
+    return y.astype(dt.compute)
+
+
+def init_embedding(key, vocab: int, d: int, dtype=jnp.float32) -> Params:
+    return {"emb": jax.random.normal(key, (vocab, d), dtype) * (d ** -0.5)}
+
+
+def embed(p: Params, tokens: jnp.ndarray, dt: DTypes = DEFAULT_DTYPES) -> jnp.ndarray:
+    return jnp.take(dt.c(p["emb"]), tokens, axis=0)
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def swiglu(gate: jnp.ndarray, up: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.silu(gate) * up
+
+
+def geglu(gate: jnp.ndarray, up: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.gelu(gate, approximate=True) * up
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_table(seq_len: int, head_dim: int, theta: float = 10000.0,
+               dtype=jnp.float32) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (cos, sin) of shape (seq_len, head_dim // 2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=dtype) / half)
+    angles = jnp.arange(seq_len, dtype=dtype)[:, None] * freqs[None, :]
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., S, H, D); cos/sin: (S, D/2) — rotate-half convention."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    cos = cos[..., :, None, :]  # (S, 1, D/2) broadcast over heads
+    sin = sin[..., :, None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def apply_rope_at(x: jnp.ndarray, pos: jnp.ndarray, head_dim: int,
+                  theta: float = 10000.0) -> jnp.ndarray:
+    """Rope for decode: x (B, 1, H, D), pos (B,) absolute positions."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = pos[:, None].astype(jnp.float32) * freqs[None, :]  # (B, D/2)
+    cos = jnp.cos(angles)[:, None, None, :]
+    sin = jnp.sin(angles)[:, None, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked cross-entropy (never materialises full (B, S, V) logits)
+# ---------------------------------------------------------------------------
+
+
+def chunked_ce_loss(h: jnp.ndarray, emb_w: jnp.ndarray, labels: jnp.ndarray,
+                    *, chunk: int = 512, logit_cap: Optional[float] = None,
+                    mask: Optional[jnp.ndarray] = None,
+                    valid_vocab: Optional[int] = None) -> jnp.ndarray:
+    """Mean next-token cross entropy, computed over sequence chunks so the
+    full logits tensor (B, S, V) never exists.  ``emb_w``: (V, d) output
+    embedding (possibly tied).  ``mask``: optional (B, S) validity mask.
+    ``valid_vocab``: logical vocab when the table is padded for sharding —
+    padded logits are masked out of the partition function.
+
+    Memory: O(B * chunk * V) per step — with vocab sharded over the model
+    axis this is what keeps the loss layer inside HBM at 150k-vocab scale.
+    """
+    B, S, D = h.shape
+    if S % chunk != 0:
+        chunk = S  # degenerate fallback for tiny smoke shapes
+    n_chunks = S // chunk
+    V = emb_w.shape[0]
+    pad_mask = None
+    if valid_vocab is not None and valid_vocab < V:
+        pad_mask = (jnp.arange(V) < valid_vocab)
+    hc = h.reshape(B, n_chunks, chunk, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+    if mask is None:
+        mask = jnp.ones((B, S), dtype=jnp.float32)
+    mc = mask.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+    wt = emb_w.astype(h.dtype)
+
+    def body(acc, args):
+        hk, lk, mk = args
+        logits = hk @ wt.T  # (B, chunk, V)
+        logits = softcap(logits.astype(jnp.float32), logit_cap)
+        if pad_mask is not None:
+            logits = jnp.where(pad_mask[None, None, :], logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lk[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mk
+        return (acc[0] + jnp.sum(nll), acc[1] + jnp.sum(mk)), None
+
+    (tot, cnt), _ = lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)),
+                             (hc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def lm_logits(h: jnp.ndarray, emb_w: jnp.ndarray,
+              logit_cap: Optional[float] = None,
+              valid_vocab: Optional[int] = None) -> jnp.ndarray:
+    logits = h @ emb_w.astype(h.dtype).T
+    logits = softcap(logits.astype(jnp.float32), logit_cap)
+    if valid_vocab is not None and valid_vocab < logits.shape[-1]:
+        logits = logits[..., :valid_vocab]
+    return logits

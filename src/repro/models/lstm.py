@@ -1,0 +1,153 @@
+"""Vanilla LSTM for text generation — the paper's §5 test case.
+
+Faithful to the paper's experiment: a single-cell LSTM unrolled over the
+sequence (one *recurrence* == one chain step == one checkpoint), char/token
+prediction loss at every step, trained with RMSProp.  The chain state is
+``(h, c, loss_acc)``; carrying the loss accumulator in the state lets the
+checkpointing executor treat the whole thing as a pure chain with adjoint
+seed ``(0, 0, 1)`` — no special-casing of the final step.
+
+Two execution paths, both exposed here:
+
+* ``make_operators`` — jitted forward/backward operators for
+  ``repro.core.executor.CheckpointExecutor`` (the paper-faithful library
+  path: Revolve / async multistage driven from the host).
+* ``bptt_loss_and_grad`` — the compiled path via
+  ``repro.core.multistage_scan`` (XLA offload on TPU).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.multistage_scan import multistage_scan
+
+Params = Any
+
+
+def init_lstm(key, vocab: int, d_embed: int, d_hidden: int,
+              dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale = (d_embed + d_hidden) ** -0.5
+    return {
+        "emb": jax.random.normal(k1, (vocab, d_embed), dtype) * 0.1,
+        "w": jax.random.normal(k2, (d_embed + d_hidden, 4 * d_hidden), dtype) * scale,
+        "b": jnp.zeros((4 * d_hidden,), dtype),
+        "w_out": jax.random.normal(k3, (d_hidden, vocab), dtype) * (d_hidden ** -0.5),
+        "b_out": jnp.zeros((vocab,), dtype),
+    }
+
+
+def lstm_cell(params: Params, h: jnp.ndarray, c: jnp.ndarray,
+              x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One LSTM recurrence.  x: (B, d_embed) input embedding."""
+    z = jnp.concatenate([x, h], axis=-1) @ params["w"] + params["b"]
+    i, f, o, g = jnp.split(z, 4, axis=-1)
+    c_new = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def step_loss(params: Params, h: jnp.ndarray, c: jnp.ndarray,
+              tok: jnp.ndarray, target: jnp.ndarray):
+    """One chain step: consume token ``tok``, predict ``target``.
+    Returns (h', c', nll)."""
+    x = params["emb"][tok]
+    h, c = lstm_cell(params, h, c, x)
+    logits = h @ params["w_out"] + params["b_out"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, target[:, None], axis=-1)[:, 0]
+    return h, c, jnp.mean(lse - gold)
+
+
+def init_state(batch: int, d_hidden: int, dtype=jnp.float32):
+    z = jnp.zeros((batch, d_hidden), dtype)
+    return (z, z, jnp.float32(0.0))
+
+
+# ---------------------------------------------------------------------------
+# Executor path (paper-faithful)
+# ---------------------------------------------------------------------------
+
+
+def make_operators(params: Params, tokens: jnp.ndarray):
+    """Build (forward_op, backward_op, grad_extract) for the checkpoint
+    executor.  ``tokens``: (B, T+1) — step k consumes tokens[:, k], predicts
+    tokens[:, k+1].  The adjoint is ``(dstate, grads_accum)``.
+    """
+    T = tokens.shape[1] - 1
+
+    @jax.jit
+    def fwd(state, k):
+        h, c, acc = state
+        h, c, nll = step_loss(params, h, c, tokens[:, k], tokens[:, k + 1])
+        return (h, c, acc + nll)
+
+    def _step(p, state, k):
+        h, c, acc = state
+        h, c, nll = step_loss(p, h, c, tokens[:, k], tokens[:, k + 1])
+        return (h, c, acc + nll)
+
+    @jax.jit
+    def bwd(state, adjoint, k):
+        dstate, gacc = adjoint
+        _, vjp = jax.vjp(lambda p, s: _step(p, s, k), params, state)
+        gp, ds = vjp(dstate)
+        gacc = jax.tree_util.tree_map(jnp.add, gacc, gp)
+        return (ds, gacc)
+
+    def adjoint_seed():
+        zero_g = jax.tree_util.tree_map(jnp.zeros_like, params)
+        # dstate mirrors (h, c, acc): zeros for h/c, 1.0 for the loss accum.
+        h0, c0, _ = init_state(tokens.shape[0], params["w"].shape[1] // 4)
+        return ((jnp.zeros_like(h0), jnp.zeros_like(c0), jnp.float32(1.0)),
+                zero_g)
+
+    return fwd, bwd, adjoint_seed, T
+
+
+def forward_loss(params: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Plain scan reference (used to validate the executor paths)."""
+    B, Tp1 = tokens.shape
+    h0, c0, acc0 = init_state(B, params["w"].shape[1] // 4)
+
+    def body(carry, k):
+        h, c, acc = carry
+        h, c, nll = step_loss(params, h, c, tokens[:, k], tokens[:, k + 1])
+        return (h, c, acc + nll), None
+
+    (h, c, acc), _ = jax.lax.scan(body, (h0, c0, acc0),
+                                  jnp.arange(Tp1 - 1))
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Compiled path (multistage_scan)
+# ---------------------------------------------------------------------------
+
+
+def bptt_loss_and_grad(params: Params, tokens: jnp.ndarray, *,
+                       interval: int, offload: bool = True,
+                       nested_intervals=()):
+    """Loss+grad over the full sequence using the compiled multistage path."""
+    B, Tp1 = tokens.shape
+    T = Tp1 - 1
+    h0, c0, _ = init_state(B, params["w"].shape[1] // 4)
+    xs = (tokens[:, :-1].T, tokens[:, 1:].T)  # (T, B) each
+
+    def total(p):
+        def body(carry, x):
+            h, c = carry
+            tok, tgt = x
+            h, c, nll = step_loss(p, h, c, tok, tgt)
+            return (h, c), nll
+
+        _, nlls = multistage_scan(body, (h0, c0), xs, interval=interval,
+                                  offload=offload,
+                                  nested_intervals=nested_intervals)
+        return jnp.sum(nlls)
+
+    return jax.value_and_grad(total)(params)

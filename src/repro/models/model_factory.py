@@ -1,0 +1,83 @@
+"""Uniform model API over all families.
+
+``get_model(cfg)`` returns a ``ModelAPI`` with four pure functions:
+
+    init(key)                      -> params
+    train_loss(params, batch)      -> scalar loss
+    prefill(params, batch)         -> (logits, cache)
+    decode(params, cache, batch)   -> (logits, new_cache)
+
+``batch`` layouts per kind are produced by ``repro.configs.shapes.input_specs``
+(ShapeDtypeStructs for the dry-run) and ``repro.data`` (real arrays).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec, lstm, transformer, vlm
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ArchConfig
+    init: Callable
+    train_loss: Callable
+    prefill: Callable
+    decode: Callable
+    init_cache: Callable  # (batch, max_len) -> cache pytree
+
+
+def get_model(cfg: ArchConfig) -> ModelAPI:
+    if cfg.family in ("dense", "moe", "hybrid", "ssm"):
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key: transformer.init_lm(key, cfg),
+            train_loss=lambda p, b: transformer.train_loss(p, b, cfg),
+            prefill=lambda p, b: transformer.prefill(p, b["tokens"], cfg),
+            decode=lambda p, c, b: transformer.decode(
+                p, c, b["tokens"], b["pos"], cfg),
+            init_cache=lambda batch, max_len: transformer.init_cache(
+                cfg, batch, max_len),
+        )
+    if cfg.family == "vlm":
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key: vlm.init_vlm(key, cfg),
+            train_loss=lambda p, b: vlm.train_loss(p, b, cfg),
+            prefill=lambda p, b: vlm.prefill(p, b, cfg),
+            decode=lambda p, c, b: transformer.decode(
+                p, c, b["tokens"], b["pos"], cfg),
+            init_cache=lambda batch, max_len: transformer.init_cache(
+                cfg, batch, max_len),
+        )
+    if cfg.family == "encdec":
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key: encdec.init_encdec(key, cfg),
+            train_loss=lambda p, b: encdec.train_loss(p, b, cfg),
+            prefill=lambda p, b: encdec.prefill(p, b, cfg,
+                                                max_len=b["tokens"].shape[1]),
+            decode=lambda p, c, b: encdec.decode(
+                p, c, b["tokens"], b["pos"], cfg),
+            init_cache=lambda batch, max_len: encdec.init_cache(
+                cfg, batch, max_len, s_enc=1500),
+        )
+    if cfg.family == "lstm":
+        def _loss(p, b):
+            return lstm.forward_loss(p, b["tokens"])
+
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key: lstm.init_lstm(key, cfg.vocab, cfg.d_model,
+                                            cfg.d_ff),
+            train_loss=_loss,
+            prefill=None, decode=None, init_cache=None,
+        )
+    raise ValueError(f"unknown family {cfg.family!r}")

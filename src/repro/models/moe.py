@@ -1,0 +1,209 @@
+"""Feed-forward layers: dense gated MLPs and Mixture-of-Experts.
+
+Two MoE dispatch implementations, both capacity-based and fully static-shaped
+(GSPMD-friendly):
+
+* ``einsum`` — GShard-style one-hot dispatch/combine einsums.  The classic
+  TPU formulation; simple and robust, but the (tokens x experts x capacity)
+  dispatch einsums cost O(k * N^2 * d / E) FLOPs — visible in the roofline's
+  useful-compute ratio.
+* ``sorted``  — argsort-based bucketing: tokens are sorted by expert, gathered
+  into (E, C) buckets, run through a batched expert matmul, and scattered
+  back.  Same numerics for non-dropped tokens, ~O(N log N) dispatch cost.
+  This is the beyond-paper optimisation evaluated in EXPERIMENTS §Perf.
+
+Routing: top-k softmax gating with optional renormalisation, load-balance aux
+loss (Switch/GShard), deterministic tie-breaking, token dropping at capacity.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (
+    DTypes, DEFAULT_DTYPES, dense, init_dense, swiglu, geglu,
+)
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# dense gated MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, *, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": init_dense(k1, d_model, d_ff, dtype=dtype),
+        "up": init_dense(k2, d_model, d_ff, dtype=dtype),
+        "down": init_dense(k3, d_ff, d_model, dtype=dtype),
+    }
+
+
+def mlp(p: Params, x: jnp.ndarray, *, act: str = "silu",
+        dt: DTypes = DEFAULT_DTYPES) -> jnp.ndarray:
+    from repro.distributed.sharding import constrain
+    g, u = dense(p["gate"], x, dt), dense(p["up"], x, dt)
+    g, u = constrain(g, "proj"), constrain(u, "proj")  # zero3 (no-op unless on)
+    h = swiglu(g, u) if act == "silu" else geglu(g, u)
+    return dense(p["down"], h, dt)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int, *,
+             shared_expert: bool = False, shared_d_ff: Optional[int] = None,
+             dtype=jnp.float32) -> Params:
+    kr, ke, ks = jax.random.split(key, 3)
+    scale = d_model ** -0.5
+    keys = jax.random.split(ke, 3)
+    p = {
+        "router": init_dense(kr, d_model, n_experts, dtype=dtype),
+        # stacked experts: leading expert axis (EP shards this axis)
+        "w_gate": jax.random.normal(keys[0], (n_experts, d_model, d_ff), dtype) * scale,
+        "w_up": jax.random.normal(keys[1], (n_experts, d_model, d_ff), dtype) * scale,
+        "w_down": jax.random.normal(keys[2], (n_experts, d_ff, d_model), dtype) * (d_ff ** -0.5),
+    }
+    if shared_expert:
+        p["shared"] = init_mlp(ks, d_model, shared_d_ff or d_ff, dtype=dtype)
+    return p
+
+
+def _route(p, xg, n_experts: int, top_k: int):
+    """Top-k softmax routing.  xg: (G, S, d) grouped tokens.  Returns
+    (weights (G,S,k), indices (G,S,k), aux_loss)."""
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32),
+                        p["router"]["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, top_k)
+    weights = weights / jnp.maximum(
+        jnp.sum(weights, axis=-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss: E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx, n_experts, dtype=jnp.float32), axis=2),
+        axis=(0, 1))
+    aux = n_experts * jnp.sum(me * ce)
+    return weights, idx, aux
+
+
+def _capacity(group_tokens: int, n_experts: int, top_k: int,
+              capacity_factor: float) -> int:
+    c = int(math.ceil(group_tokens * top_k * capacity_factor / n_experts))
+    return max(8, -(-c // 8) * 8)  # round up to 8 for tiling
+
+
+def _expert_ffn(p, expert_in: jnp.ndarray, act: str,
+                dt: DTypes) -> jnp.ndarray:
+    """expert_in: (..., E, C, d) -> same, via the stacked expert weights."""
+    g = jnp.einsum("...ecd,edf->...ecf", expert_in, dt.c(p["w_gate"]))
+    u = jnp.einsum("...ecd,edf->...ecf", expert_in, dt.c(p["w_up"]))
+    h = swiglu(g, u) if act == "silu" else geglu(g, u)
+    return jnp.einsum("...ecf,efd->...ecd", h, dt.c(p["w_down"]))
+
+
+def moe_einsum(p: Params, x: jnp.ndarray, *, n_experts: int, top_k: int,
+               capacity_factor: float = 1.25, act: str = "silu",
+               dt: DTypes = DEFAULT_DTYPES) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """GShard one-hot dispatch, *grouped*: each batch row is one expert group
+    with its own capacity (the standard GSPMD-shardable formulation — the
+    group axis shards over data, the expert axis over model).
+    x: (B, S, d).  Returns (y, aux_loss)."""
+    G, S, d = x.shape
+    xg = x
+    weights, idx, aux = _route(p, xg, n_experts, top_k)
+    C = _capacity(S, n_experts, top_k, capacity_factor)
+
+    dispatch = jnp.zeros((G, S, n_experts, C), dtype=dt.compute)
+    combine = jnp.zeros((G, S, n_experts, C), dtype=jnp.float32)
+    prior = jnp.zeros((G, n_experts), jnp.int32)
+    for i in range(top_k):
+        mask_i = jax.nn.one_hot(idx[..., i], n_experts, dtype=jnp.int32)
+        pos_i = jnp.cumsum(mask_i, axis=1) - 1 + prior[:, None, :]
+        prior = prior + jnp.sum(mask_i, axis=1)
+        keep = (pos_i < C) & (mask_i > 0)
+        oh_pos = jax.nn.one_hot(jnp.where(keep, pos_i, C), C + 1,
+                                dtype=dt.compute)[..., :C]  # (G,S,E,C)
+        d_i = oh_pos * keep.astype(dt.compute)[..., None]
+        dispatch = dispatch + d_i
+        combine = combine + d_i.astype(jnp.float32) * \
+            weights[..., i, None, None]
+
+    expert_in = jnp.einsum("gsd,gsec->gecd", xg.astype(dt.compute), dispatch)
+    expert_out = _expert_ffn(p, expert_in, act, dt)
+    y = jnp.einsum("gecd,gsec->gsd", expert_out.astype(jnp.float32), combine)
+    y = y.astype(x.dtype)
+    if "shared" in p:
+        y = y + mlp(p["shared"], xg, act=act, dt=dt)
+    return y, aux
+
+
+def moe_sorted(p: Params, x: jnp.ndarray, *, n_experts: int, top_k: int,
+               capacity_factor: float = 1.25, act: str = "silu",
+               dt: DTypes = DEFAULT_DTYPES) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sort-based dispatch: same grouping/capacity semantics as
+    ``moe_einsum`` (up to drop order) without the O(S*E*C) one-hot dispatch
+    tensors.  Dispatch AND combine are pure gathers: the combine uses the
+    inverse sort permutation to look up each token's k expert-output slots
+    (a scatter-add here replicates under GSPMD and floods the mesh with
+    all-reduces — measured in EXPERIMENTS §Perf, llama4 round 1)."""
+    G, S, d = x.shape
+    weights, idx, aux = _route(p, x, n_experts, top_k)
+    C = _capacity(S, n_experts, top_k, capacity_factor)
+
+    def one_group(xg, ig):
+        # xg: (S, d); ig: (S, k)
+        flat_e = ig.reshape(-1)                      # (S*k,)
+        flat_tok = jnp.repeat(jnp.arange(S), top_k)
+        order = jnp.argsort(flat_e, stable=True)
+        inv = jnp.argsort(order)                     # slot -> sorted pos
+        se, st = flat_e[order], flat_tok[order]
+        counts = jnp.bincount(flat_e, length=n_experts)
+        starts = jnp.cumsum(counts) - counts
+        rank = jnp.arange(S * top_k) - starts[se]
+        keep = rank < C
+        # expert input buckets (E, C): token index per slot (S == empty)
+        bucket_tok = jnp.full((n_experts, C), S, jnp.int32)
+        bucket_tok = bucket_tok.at[se, jnp.where(keep, rank, 0)].set(
+            jnp.where(keep, st, S).astype(jnp.int32), mode="drop")
+        # inverse map: original slot j -> flat bucket position (E*C = dropped)
+        pos = inv
+        slot_bucket = jnp.where(keep[pos], se[pos] * C + rank[pos],
+                                n_experts * C).astype(jnp.int32)  # (S*k,)
+        return bucket_tok, slot_bucket
+
+    bucket_tok, slot_bucket = jax.vmap(one_group)(x, idx)  # (G,E,C),(G,S*k)
+    x_pad = jnp.concatenate(
+        [x.astype(dt.compute), jnp.zeros((G, 1, d), dt.compute)], axis=1)
+    expert_in = jnp.take_along_axis(
+        x_pad[:, :, None, :], bucket_tok.reshape(G, -1, 1, 1), axis=1
+    ).reshape(G, n_experts, C, d)
+    expert_out = _expert_ffn(p, expert_in, act, dt)
+    # combine: gather each token's k slots from the flat expert outputs
+    out_flat = jnp.concatenate(
+        [expert_out.reshape(G, n_experts * C, d),
+         jnp.zeros((G, 1, d), expert_out.dtype)], axis=1)
+    tok_out = jnp.take_along_axis(
+        out_flat[:, :, None, :], slot_bucket.reshape(G, -1, 1, 1), axis=1
+    ).reshape(G, S, top_k, d)
+    y = jnp.einsum("gskd,gsk->gsd", tok_out.astype(jnp.float32),
+                   weights).astype(x.dtype)
+    if "shared" in p:
+        y = y + mlp(p["shared"], x, act=act, dt=dt)
+    return y, aux
+
+
+def moe_apply(p: Params, x: jnp.ndarray, *, n_experts: int, top_k: int,
+              capacity_factor: float = 1.25, act: str = "silu",
+              impl: str = "einsum",
+              dt: DTypes = DEFAULT_DTYPES) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    fn = {"einsum": moe_einsum, "sorted": moe_sorted}[impl]
+    return fn(p, x, n_experts=n_experts, top_k=top_k,
+              capacity_factor=capacity_factor, act=act, dt=dt)

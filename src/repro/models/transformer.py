@@ -1,0 +1,342 @@
+"""Decoder-only LM assembly covering the dense / MoE / hybrid / SSM families.
+
+The layer stack is organised in *periods* (``cfg.layer_pattern``): parameters
+for each pattern position are stacked over ``n_periods`` and the stack is a
+single ``lax.scan`` whose carry is the hidden state — i.e. the model depth is
+literally the paper's checkpoint chain, with uniform per-period states.  The
+remat/offload policy (``cfg.remat_policy``) decides where each period
+boundary lives (HBM / pinned host), turning the paper's asynchronous
+multistage checkpointing into a one-line config knob.
+
+Three entry points per model: ``train_loss``, ``prefill`` and ``decode``
+(one token against caches).  All are pure functions of (params, batch).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.core.layer_policy import remat_layer
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    DTypes, chunked_ce_loss, embed, init_embedding, init_rmsnorm, lm_logits,
+    rmsnorm, rope_table,
+)
+
+Params = Any
+
+
+def _dtypes(cfg: ArchConfig) -> DTypes:
+    return DTypes(compute=jnp.bfloat16)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg: ArchConfig, kind: str) -> Params:
+    d = cfg.d_model
+    keys = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"ln1": init_rmsnorm(d)}
+    if kind.startswith("attn"):
+        p["attn"] = attn_mod.init_attention(
+            keys[0], d, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+            qkv_bias=cfg.qkv_bias)
+    else:  # mamba
+        s = cfg.ssm
+        p["mamba"] = ssm_mod.init_mamba2(
+            keys[0], d, d_state=s.d_state, headdim=s.headdim,
+            expand=s.expand, ngroups=s.ngroups, conv_k=s.conv_k)
+    if cfg.use_post_norm:
+        p["ln1_post"] = init_rmsnorm(d)
+    has_ffn = kind in ("attn", "attn_local", "attn_moe", "mamba_moe")
+    if has_ffn:
+        p["ln2"] = init_rmsnorm(d)
+        if kind.endswith("_moe"):
+            p["moe"] = moe_mod.init_moe(
+                keys[1], d, cfg.d_ff, cfg.moe.n_experts,
+                shared_expert=cfg.moe.shared_expert)
+        else:
+            p["mlp"] = moe_mod.init_mlp(keys[1], d, cfg.d_ff)
+        if cfg.use_post_norm:
+            p["ln2_post"] = init_rmsnorm(d)
+    return p
+
+
+def init_lm(key, cfg: ArchConfig) -> Params:
+    ke, kl, ku = jax.random.split(key, 3)
+    params: Dict[str, Any] = {
+        "embed": init_embedding(ke, cfg.padded_vocab, cfg.d_model),
+        "final_norm": init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = init_embedding(ku, cfg.padded_vocab, cfg.d_model)
+    layer_keys = jax.random.split(kl, cfg.period)
+    layers = {}
+    for j, kind in enumerate(cfg.layer_pattern):
+        pkeys = jax.random.split(layer_keys[j], cfg.n_periods)
+        layers[f"pos{j}"] = jax.vmap(
+            lambda k: _init_layer(k, cfg, kind))(pkeys)
+    params["layers"] = layers
+    return params
+
+
+def unembed_weight(params: Params, cfg: ArchConfig) -> jnp.ndarray:
+    return (params["embed"]["emb"] if cfg.tie_embeddings
+            else params["unembed"]["emb"])
+
+
+# ---------------------------------------------------------------------------
+# layer application (full-sequence path)
+# ---------------------------------------------------------------------------
+
+
+def _post(p, name, y, cfg, dt):
+    return rmsnorm(p[name], y, dt=dt) if cfg.use_post_norm else y
+
+
+def _ffn(p, h, kind, cfg, dt):
+    if not any(k in p for k in ("mlp", "moe")):
+        return h, jnp.float32(0.0)
+    y = rmsnorm(p["ln2"], h, dt=dt)
+    if "moe" in p:
+        y, aux = moe_mod.moe_apply(
+            p["moe"], y, n_experts=cfg.moe.n_experts, top_k=cfg.moe.top_k,
+            capacity_factor=cfg.moe.capacity_factor, act=cfg.mlp_act,
+            impl=cfg.moe_impl, dt=dt)
+    else:
+        y, aux = moe_mod.mlp(p["mlp"], y, act=cfg.mlp_act, dt=dt), jnp.float32(0.0)
+    return h + _post(p, "ln2_post", y, cfg, dt), aux
+
+
+def _apply_layer_seq(p, x, kind, cfg: ArchConfig, rope, dt,
+                     causal: bool = True):
+    """Full-sequence layer (training / prefill compute, no cache output)."""
+    y = rmsnorm(p["ln1"], x, dt=dt)
+    if kind.startswith("attn"):
+        window = cfg.window if kind == "attn_local" else None
+        y = attn_mod.attention(
+            p["attn"], y, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.hd, rope=rope, causal=causal, window=window,
+            softcap=cfg.attn_softcap, scale=cfg.query_scale,
+            chunk=cfg.attn_chunk, dt=dt)
+    else:
+        s = cfg.ssm
+        y = ssm_mod.mamba2_block(
+            p["mamba"], y, d_state=s.d_state, headdim=s.headdim,
+            expand=s.expand, ngroups=s.ngroups, conv_k=s.conv_k,
+            chunk=s.chunk, dt=dt)
+    h = x + _post(p, "ln1_post", y, cfg, dt)
+    return _ffn(p, h, kind, cfg, dt)
+
+
+def _scan_stack(params, x, cfg: ArchConfig, rope, dt, causal=True):
+    """Scan the period-stacked layers; returns (x, total_aux)."""
+
+    def period_body(lp, x):
+        aux_t = jnp.float32(0.0)
+        for j, kind in enumerate(cfg.layer_pattern):
+            x, aux = _apply_layer_seq(lp[f"pos{j}"], x, kind, cfg, rope, dt,
+                                      causal)
+            aux_t += aux
+        return x, aux_t
+
+    wrapped = remat_layer(period_body, cfg.remat_policy, tag_input=True)
+
+    def body(carry, lp):
+        x, aux_t = carry
+        x, aux = wrapped(lp, x)
+        return (x, aux_t + aux), None
+
+    (x, aux_t), _ = lax.scan(body, (x, jnp.float32(0.0)), params["layers"],
+                             unroll=cfg.scan_unroll)
+    return x, aux_t
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+
+def train_loss(params: Params, batch: Dict[str, jnp.ndarray],
+               cfg: ArchConfig) -> jnp.ndarray:
+    """batch["tokens"]: (B, S+1) int32.  Mean next-token NLL (+ MoE aux)."""
+    dt = _dtypes(cfg)
+    tokens = batch["tokens"]
+    inp, labels = tokens[:, :-1], tokens[:, 1:]
+    S = inp.shape[1]
+    h = embed(params["embed"], inp, dt)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, dt.compute)
+    h = constrain(h, "act")
+    rope = rope_table(S, cfg.hd, cfg.rope_theta)
+    h, aux = _scan_stack(params, h, cfg, rope, dt)
+    h = rmsnorm(params["final_norm"], h, dt=dt)
+    loss = chunked_ce_loss(h, unembed_weight(params, cfg), labels,
+                           chunk=cfg.ce_chunk, logit_cap=cfg.logit_softcap,
+                           mask=batch.get("mask"),
+                           valid_vocab=cfg.vocab)
+    coef = cfg.moe.aux_coef if cfg.moe else 0.0
+    return loss + coef * aux / max(1, cfg.n_layers)
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Params:
+    """Zero caches for decode.  Leading axis of every leaf: n_periods."""
+    cache: Dict[str, Any] = {}
+    for j, kind in enumerate(cfg.layer_pattern):
+        if kind.startswith("attn"):
+            shape = (cfg.n_periods, batch, max_len, cfg.n_kv_heads, cfg.hd)
+            cache[f"pos{j}"] = {"k": jnp.zeros(shape, jnp.bfloat16),
+                                "v": jnp.zeros(shape, jnp.bfloat16)}
+        else:
+            s = cfg.ssm
+            d_in = s.expand * cfg.d_model
+            nheads = d_in // s.headdim
+            conv_dim = d_in + 2 * s.ngroups * s.d_state
+            cache[f"pos{j}"] = {
+                "conv": jnp.zeros((cfg.n_periods, batch, s.conv_k - 1,
+                                   conv_dim), jnp.float32),
+                "ssm": jnp.zeros((cfg.n_periods, batch, nheads, s.headdim,
+                                  s.d_state), jnp.float32),
+            }
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# decode (one token against the cache)
+# ---------------------------------------------------------------------------
+
+
+def _apply_layer_decode(p, x, kind, cfg: ArchConfig, cache_j, pos, dt):
+    y = rmsnorm(p["ln1"], x, dt=dt)
+    if kind.startswith("attn"):
+        window = cfg.window if kind == "attn_local" else None
+        y, ck, cv = attn_mod.decode_attention(
+            p["attn"], y, cache_j["k"], cache_j["v"], pos,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+            rope_theta=cfg.rope_theta, window=window,
+            softcap=cfg.attn_softcap, scale=cfg.query_scale, dt=dt)
+        new_cache = {"k": ck, "v": cv}
+    else:
+        s = cfg.ssm
+        y, conv, sst = ssm_mod.mamba2_decode_step(
+            p["mamba"], y, cache_j["conv"], cache_j["ssm"],
+            d_state=s.d_state, headdim=s.headdim, expand=s.expand,
+            ngroups=s.ngroups, conv_k=s.conv_k, dt=dt)
+        new_cache = {"conv": conv, "ssm": sst}
+    h = x + _post(p, "ln1_post", y, cfg, dt)
+    h, _ = _ffn(p, h, kind, cfg, dt)
+    return h, new_cache
+
+
+def decode(params: Params, cache: Params, tokens: jnp.ndarray,
+           pos: jnp.ndarray, cfg: ArchConfig):
+    """One decode step.  tokens: (B, 1); pos: scalar int32 (current length).
+    Returns (logits (B, V) fp32, new_cache)."""
+    dt = _dtypes(cfg)
+    h = embed(params["embed"], tokens, dt)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, dt.compute)
+
+    def body(carry, xs):
+        x = carry
+        lp, cache_p = xs
+        new_cache_p = {}
+        for j, kind in enumerate(cfg.layer_pattern):
+            x, nc = _apply_layer_decode(lp[f"pos{j}"], x, kind, cfg,
+                                        cache_p[f"pos{j}"], pos, dt)
+            new_cache_p[f"pos{j}"] = nc
+        return x, new_cache_p
+
+    h, new_cache = lax.scan(body, h, (params["layers"], cache))
+    h = rmsnorm(params["final_norm"], h, dt=dt)
+    logits = lm_logits(h[:, 0], unembed_weight(params, cfg),
+                       cfg.logit_softcap, valid_vocab=cfg.vocab)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# prefill (full sequence -> caches + last-position logits)
+# ---------------------------------------------------------------------------
+
+
+def _prefill_layer(p, x, kind, cfg: ArchConfig, rope, dt):
+    y = rmsnorm(p["ln1"], x, dt=dt)
+    if kind.startswith("attn"):
+        window = cfg.window if kind == "attn_local" else None
+        B, S, _ = y.shape
+        q, k, v = attn_mod._project_qkv(p["attn"], y, cfg.n_heads,
+                                        cfg.n_kv_heads, cfg.hd, dt)
+        from repro.models.layers import apply_rope
+        q, k = apply_rope(q, *rope), apply_rope(k, *rope)
+        if S > 2048:
+            o = attn_mod.chunked_attention(q, k, v, True, window,
+                                           cfg.attn_softcap, cfg.attn_chunk,
+                                           cfg.query_scale)
+        else:
+            o = attn_mod.reference_attention(q, k, v, True, window,
+                                             cfg.attn_softcap, cfg.query_scale)
+        from repro.models.layers import dense
+        y = dense(p["attn"]["wo"], o.reshape(B, S, cfg.n_heads * cfg.hd), dt)
+        new_cache = {"k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16)}
+    else:
+        s = cfg.ssm
+        y, (conv_st, ssm_st) = ssm_mod.mamba2_block(
+            p["mamba"], y, d_state=s.d_state, headdim=s.headdim,
+            expand=s.expand, ngroups=s.ngroups, conv_k=s.conv_k,
+            chunk=s.chunk, dt=dt, return_state=True)
+        new_cache = {"conv": conv_st, "ssm": ssm_st}
+    h = x + _post(p, "ln1_post", y, cfg, dt)
+    h, _ = _ffn(p, h, kind, cfg, dt)
+    return h, new_cache
+
+
+def prefill(params: Params, tokens: jnp.ndarray, cfg: ArchConfig):
+    """Process the prompt.  tokens: (B, S).  Returns (last_logits, cache)."""
+    dt = _dtypes(cfg)
+    h = embed(params["embed"], tokens, dt)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, dt.compute)
+    return prefill_from_hidden(params, h, cfg)
+
+
+def prefill_from_hidden(params: Params, h: jnp.ndarray, cfg: ArchConfig):
+    """Prefill from already-embedded hidden states (shared with the VLM)."""
+    dt = _dtypes(cfg)
+    S = h.shape[1]
+    h = constrain(h, "act")
+    rope = rope_table(S, cfg.hd, cfg.rope_theta)
+
+    def period_body(lp, x):
+        caches = {}
+        for j, kind in enumerate(cfg.layer_pattern):
+            x, nc = _prefill_layer(lp[f"pos{j}"], x, kind, cfg, rope, dt)
+            caches[f"pos{j}"] = nc
+        return x, caches
+
+    wrapped = remat_layer(
+        lambda lp, x: period_body(lp, x), cfg.remat_policy, tag_input=True)
+
+    def body(x, lp):
+        x, caches = wrapped(lp, x)
+        return x, caches
+
+    h, cache = lax.scan(body, h, params["layers"])
+    h = rmsnorm(params["final_norm"], h, dt=dt)
+    logits = lm_logits(h[:, -1], unembed_weight(params, cfg),
+                       cfg.logit_softcap, valid_vocab=cfg.vocab)
+    return logits, cache

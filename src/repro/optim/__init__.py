@@ -1,0 +1,7 @@
+from repro.optim.optimizers import (
+    Optimizer, adamw, rmsprop, sgd, clip_by_global_norm, cosine_schedule,
+    constant_schedule,
+)
+
+__all__ = ["Optimizer", "adamw", "rmsprop", "sgd", "clip_by_global_norm",
+           "cosine_schedule", "constant_schedule"]

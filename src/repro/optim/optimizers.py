@@ -1,0 +1,131 @@
+"""Optimizers (pure pytree transforms, optax-style init/update pairs).
+
+``rmsprop`` matches the paper's LSTM experiment (§5: a manual RMSProp);
+``adamw`` is the production default for the transformer archs.  Optimizer
+state shards exactly like the parameters (same pytree structure), which is
+what keeps the 42–52B MoE configs inside per-chip HBM under FSDP.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+tmap = jax.tree_util.tree_map
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Params], Any]
+    update: Callable[[Params, Any, Params, jnp.ndarray], Tuple[Params, Any]]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+def constant_schedule(lr: float) -> Callable:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1) -> Callable:
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac * lr + (1 - final_frac) * lr * 0.5 * (
+            1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+
+    return f
+
+
+def clip_by_global_norm(grads: Params, max_norm: float) -> Tuple[Params, jnp.ndarray]:
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                      for l in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return tmap(lambda g: g * scale, grads), gn
+
+
+def adamw(lr: Callable | float, *, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          max_grad_norm: Optional[float] = 1.0) -> Optimizer:
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        return {
+            "m": tmap(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "v": tmap(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        }
+
+    def update(grads, state, params, step):
+        if max_grad_norm is not None:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        g32 = tmap(lambda g: g.astype(jnp.float32), grads)
+        m = tmap(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], g32)
+        v = tmap(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], g32)
+        t = step.astype(jnp.float32) + 1.0
+        lr_t = sched(step)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(p, m_, v_):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype)
+
+        new_params = tmap(upd, params, m, v)
+        return new_params, {"m": m, "v": v}
+
+    return Optimizer(init=init, update=update)
+
+
+def rmsprop(lr: Callable | float = 1e-3, *, decay: float = 0.9,
+            eps: float = 1e-8) -> Optimizer:
+    """The paper's §5 optimizer (manual RMSProp in its LSTM test case)."""
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        return {"sq": tmap(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        g32 = tmap(lambda g: g.astype(jnp.float32), grads)
+        sq = tmap(lambda s, g: decay * s + (1 - decay) * g * g,
+                  state["sq"], g32)
+        lr_t = sched(step)
+        new_params = tmap(
+            lambda p, g, s: (p.astype(jnp.float32) -
+                             lr_t * g / (jnp.sqrt(s) + eps)).astype(p.dtype),
+            params, g32, sq)
+        return new_params, {"sq": sq}
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(lr: Callable | float = 1e-2, momentum: float = 0.0) -> Optimizer:
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        if momentum:
+            return {"mom": tmap(lambda p: jnp.zeros_like(p, jnp.float32),
+                                params)}
+        return {}
+
+    def update(grads, state, params, step):
+        lr_t = sched(step)
+        g32 = tmap(lambda g: g.astype(jnp.float32), grads)
+        if momentum:
+            mom = tmap(lambda m, g: momentum * m + g, state["mom"], g32)
+            new_params = tmap(
+                lambda p, m: (p.astype(jnp.float32) - lr_t * m).astype(p.dtype),
+                params, mom)
+            return new_params, {"mom": mom}
+        new_params = tmap(
+            lambda p, g: (p.astype(jnp.float32) - lr_t * g).astype(p.dtype),
+            params, g32)
+        return new_params, state
+
+    return Optimizer(init=init, update=update)

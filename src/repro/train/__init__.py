@@ -1,0 +1,6 @@
+from repro.train.step import (
+    TrainState, init_train_state, make_train_step, make_serve_steps,
+)
+
+__all__ = ["TrainState", "init_train_state", "make_train_step",
+           "make_serve_steps"]

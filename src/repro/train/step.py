@@ -1,0 +1,144 @@
+"""Train / serve step builders.
+
+``make_train_step`` assembles the jitted training step from a ModelAPI +
+optimizer, with:
+
+* microbatch gradient accumulation (``lax.scan`` over microbatches — keeps
+  the activation working set at 1/k while the paper's offload policy keeps
+  the per-microbatch boundaries in host memory);
+* optional int8+error-feedback cross-pod gradient reduction
+  (``cross_pod="int8_ef"``) via a shard_map-manual pod axis;
+* donated state buffers (in-place update on device).
+
+``make_serve_steps`` builds the prefill and decode steps (decode donates the
+cache — the KV update is in-place).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import compression as comp
+from repro.models.model_factory import ModelAPI
+from repro.optim.optimizers import Optimizer
+
+Params = Any
+TrainState = Dict[str, Any]  # {"params", "opt", "step", ("ef")}
+
+
+def init_train_state(api: ModelAPI, optimizer: Optimizer, key,
+                     error_feedback: bool = False) -> TrainState:
+    params = api.init(key)
+    state = {"params": params, "opt": optimizer.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    if error_feedback:
+        state["ef"] = comp.init_error_feedback(params)
+    return state
+
+
+def _split_microbatches(batch: Dict[str, jnp.ndarray], k: int):
+    def rs(x):
+        assert x.shape[0] % k == 0, (x.shape, k)
+        return x.reshape((k, x.shape[0] // k) + x.shape[1:])
+
+    return jax.tree_util.tree_map(rs, batch)
+
+
+def make_train_step(api: ModelAPI, optimizer: Optimizer, *,
+                    grad_accum: int = 1, cross_pod: str = "auto",
+                    mesh: Optional[Mesh] = None,
+                    donate: bool = True) -> Callable:
+    """Returns ``step_fn(state, batch) -> (state, metrics)`` (un-jitted; the
+    launcher jits with in/out shardings).
+
+    ``cross_pod``: "auto" — let GSPMD insert the f32 all-reduce;
+    "int8_ef" — shard_map-manual pod axis with compressed reduction
+    (requires ``mesh`` with a "pod" axis and ``error_feedback`` state).
+    """
+
+    def loss_fn(params, batch):
+        return api.train_loss(params, batch)
+
+    def grads_of(params, batch):
+        if grad_accum == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+        micro = _split_microbatches(batch, grad_accum)
+
+        def body(carry, mb):
+            loss_acc, g_acc = carry
+            loss, g = jax.value_and_grad(loss_fn)(params, mb)
+            return (loss_acc + loss,
+                    jax.tree_util.tree_map(jnp.add, g_acc, g)), None
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), _ = jax.lax.scan(body, (jnp.float32(0.0), zeros),
+                                        micro)
+        scale = 1.0 / grad_accum
+        return loss * scale, jax.tree_util.tree_map(
+            lambda g: g * scale, grads)
+
+    def apply_update(state, loss, grads):
+        new_params, new_opt = optimizer.update(
+            grads, state["opt"], state["params"], state["step"])
+        out = dict(state, params=new_params, opt=new_opt,
+                   step=state["step"] + 1)
+        metrics = {"loss": loss.astype(jnp.float32),
+                   "grad_norm": jnp.sqrt(sum(
+                       jnp.sum(jnp.square(g.astype(jnp.float32)))
+                       for g in jax.tree_util.tree_leaves(grads)))}
+        return out, metrics
+
+    if cross_pod == "int8_ef":
+        if mesh is None or "pod" not in mesh.axis_names:
+            raise ValueError("int8_ef needs a mesh with a 'pod' axis")
+
+        def per_pod(state, batch):
+            loss, grads = grads_of(state["params"], batch)
+            grads, new_ef = comp.compressed_mean(grads, "pod",
+                                                 state.get("ef"))
+            loss = jax.lax.pmean(loss, "pod")
+            new_state, metrics = apply_update(state, loss, grads)
+            if "ef" in state:
+                new_state["ef"] = new_ef
+            return new_state, metrics
+
+        def step_fn(state, batch):
+            # partial-manual shard_map: only the pod axis is manual; the
+            # data/model axes stay under GSPMD inside the body.
+            specs_state = jax.tree_util.tree_map(lambda _: P(), state)
+            specs_batch = jax.tree_util.tree_map(
+                lambda x: P("pod", *(None,) * (x.ndim - 1)), batch)
+            return jax.shard_map(
+                per_pod, mesh=mesh,
+                in_specs=(specs_state, specs_batch),
+                out_specs=(specs_state,
+                           jax.tree_util.tree_map(lambda _: P(),
+                                                  {"loss": 0, "grad_norm": 0})),
+                axis_names={"pod"},
+                check_vma=False,
+            )(state, batch)
+
+        return step_fn
+
+    def step_fn(state, batch):
+        loss, grads = grads_of(state["params"], batch)
+        return apply_update(state, loss, grads)
+
+    return step_fn
+
+
+def make_serve_steps(api: ModelAPI):
+    """(prefill_fn, decode_fn); decode donates the cache buffers."""
+
+    def prefill_fn(params, batch):
+        return api.prefill(params, batch)
+
+    def decode_fn(params, cache, batch):
+        return api.decode(params, cache, batch)
+
+    return prefill_fn, decode_fn

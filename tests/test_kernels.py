@@ -1,0 +1,121 @@
+"""Pallas kernels vs pure-jnp oracles, interpret mode, shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.models.attention import reference_attention
+from repro.models.ssm import ssd_sequential
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------- flash attn
+@pytest.mark.parametrize("S,H,G,D,bq,bk", [
+    (128, 4, 4, 32, 64, 64),      # MHA
+    (256, 8, 2, 64, 64, 128),     # GQA, rectangular blocks
+    (64, 2, 1, 128, 64, 64),      # MQA, big head dim
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes(S, H, G, D, bq, bk, dtype):
+    B = 2
+    q = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, H, D), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, G, D), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 3), (B, S, G, D), dtype)
+    out = ops.flash_attention(q, k, v, block_q=bq, block_k=bk,
+                              interpret=True)
+    want = reference_attention(q, k, v)
+    tol = 2e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.array(out, np.float32),
+                               np.array(want, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("kw", [
+    dict(window=64), dict(softcap=30.0), dict(causal=False),
+    dict(window=32, softcap=15.0),
+])
+def test_flash_attention_features(kw):
+    B, S, H, G, D = 1, 128, 4, 2, 32
+    q = jax.random.normal(jax.random.fold_in(KEY, 4), (B, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(KEY, 5), (B, S, G, D))
+    v = jax.random.normal(jax.random.fold_in(KEY, 6), (B, S, G, D))
+    out = ops.flash_attention(q, k, v, block_q=32, block_k=32,
+                              interpret=True, **kw)
+    want = reference_attention(q, k, v, **kw)
+    np.testing.assert_allclose(np.array(out), np.array(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_ref_oracle_self_consistent():
+    B, S, D = 3, 64, 16
+    q = jax.random.normal(jax.random.fold_in(KEY, 7), (B, S, D))
+    k = jax.random.normal(jax.random.fold_in(KEY, 8), (B, S, D))
+    v = jax.random.normal(jax.random.fold_in(KEY, 9), (B, S, D))
+    a = ref.flash_attention_ref(q, k, v)
+    b = reference_attention(q[:, :, None, :], k[:, :, None, :],
+                            v[:, :, None, :])[:, :, 0, :]
+    np.testing.assert_allclose(np.array(a), np.array(b), rtol=1e-5,
+                               atol=1e-5)
+
+
+# ------------------------------------------------------------------ ssd scan
+@pytest.mark.parametrize("T,H,G,P,N,chunk", [
+    (64, 4, 2, 16, 8, 16),
+    (128, 2, 1, 32, 16, 32),
+    (32, 8, 8, 8, 8, 32),   # chunk == T
+])
+def test_ssd_scan_shapes(T, H, G, P, N, chunk):
+    B = 2
+    x = jax.random.normal(jax.random.fold_in(KEY, 11), (B, T, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(KEY, 12),
+                                           (B, T, H)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(KEY, 13), (H,)) * 0.3)
+    b = jax.random.normal(jax.random.fold_in(KEY, 14), (B, T, G, N)) * 0.5
+    c = jax.random.normal(jax.random.fold_in(KEY, 15), (B, T, G, N)) * 0.5
+    y, h = ops.ssd_scan(x, dt, A, b, c, chunk=chunk, interpret=True)
+    y_ref, h_ref = ssd_sequential(x, dt, A, b, c)
+    np.testing.assert_allclose(np.array(y), np.array(y_ref), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.array(h), np.array(h_ref), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_ssd_kernel_vs_flat_ref():
+    BH, T, P, N = 3, 32, 8, 4
+    x = jax.random.normal(jax.random.fold_in(KEY, 16), (BH, T, P)) * 0.5
+    la = -jax.nn.softplus(jax.random.normal(jax.random.fold_in(KEY, 17),
+                                            (BH, T)))
+    b = jax.random.normal(jax.random.fold_in(KEY, 18), (BH, T, N)) * 0.5
+    c = jax.random.normal(jax.random.fold_in(KEY, 19), (BH, T, N)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(KEY, 20),
+                                           (BH, T)))
+    from repro.kernels.ssd_scan import ssd_scan as raw
+    y, h = raw(x, la, b, c, dt, chunk=8, interpret=True)
+    y_ref, h_ref = ref.ssd_scan_ref(x, la, b, c, dt)
+    np.testing.assert_allclose(np.array(y), np.array(y_ref), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.array(h), np.array(h_ref), rtol=2e-4,
+                               atol=2e-4)
+
+
+# ----------------------------------------------------------------- lstm cell
+@pytest.mark.parametrize("B,Dx,Dh,bb", [(8, 16, 32, 4), (16, 8, 8, 16),
+                                        (4, 64, 128, 2)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lstm_cell(B, Dx, Dh, bb, dtype):
+    x = jax.random.normal(jax.random.fold_in(KEY, 21), (B, Dx), dtype)
+    h = jax.random.normal(jax.random.fold_in(KEY, 22), (B, Dh), dtype)
+    c = jax.random.normal(jax.random.fold_in(KEY, 23), (B, Dh), dtype)
+    w = jax.random.normal(jax.random.fold_in(KEY, 24),
+                          (Dx + Dh, 4 * Dh), dtype) * 0.1
+    bias = jnp.zeros((4 * Dh,), dtype)
+    hn, cn = ops.lstm_cell(x, h, c, w, bias, block_b=bb, interpret=True)
+    hr, cr = ref.lstm_cell_ref(x.astype(jnp.float32), h.astype(jnp.float32),
+                               c.astype(jnp.float32), w.astype(jnp.float32),
+                               bias.astype(jnp.float32))
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.array(hn, np.float32), np.array(hr),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.array(cn, np.float32), np.array(cr),
+                               rtol=tol, atol=tol)

@@ -1,0 +1,129 @@
+"""Compiled path: multistage_scan must match lax.scan in values and grads,
+and must actually offload (device_put to host in the grad jaxpr)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import lax
+
+from repro.core.multistage_scan import (bptt_grad, choose_interval,
+                                        multistage_scan)
+
+W = jax.random.normal(jax.random.PRNGKey(0), (16, 16)) * 0.3
+C0 = jax.random.normal(jax.random.PRNGKey(1), (4, 16))
+XS = jax.random.normal(jax.random.PRNGKey(2), (24, 4, 16)) * 0.1
+
+
+def body(c, x):
+    c = jnp.tanh(c @ W + x)
+    return c, jnp.sum(c ** 2)
+
+
+def loss_ref(c0):
+    _, ys = lax.scan(body, c0, XS)
+    return jnp.sum(ys)
+
+
+@pytest.mark.parametrize("kw", [
+    dict(interval=8), dict(interval=8, offload=False), dict(interval=24),
+    dict(interval=12, nested_intervals=(4,)),
+    dict(interval=24, nested_intervals=(6, 2)), dict(interval=1),
+])
+def test_matches_lax_scan(kw):
+    ref_v, ref_g = jax.value_and_grad(loss_ref)(C0)
+
+    def loss_ms(c0):
+        _, ys = multistage_scan(body, c0, XS, **kw)
+        return jnp.sum(ys)
+
+    v, g = jax.jit(jax.value_and_grad(loss_ms))(C0)
+    np.testing.assert_allclose(float(v), float(ref_v), rtol=1e-5)
+    np.testing.assert_allclose(np.array(g), np.array(ref_g),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_rejects_non_dividing_interval():
+    with pytest.raises(ValueError):
+        multistage_scan(body, C0, XS, interval=7)
+
+
+def test_choose_interval():
+    assert choose_interval(24, 7) == 6
+    assert choose_interval(24, 100) == 24
+    assert choose_interval(17, 4) == 1  # prime length
+
+
+def test_offload_emits_host_device_put():
+    """The boundary carries must be placed on the host in the grad jaxpr —
+    this is the paper's Level-2 store, compiled."""
+
+    def loss_ms(c0):
+        _, ys = multistage_scan(body, c0, XS, interval=8)
+        return jnp.sum(ys)
+
+    jaxpr = str(jax.make_jaxpr(jax.grad(loss_ms))(C0))
+    assert "<host>" in jaxpr, "no host placement found in grad jaxpr"
+    assert "ms_boundary" in jaxpr
+
+
+def test_no_offload_keeps_device():
+    def loss_ms(c0):
+        _, ys = multistage_scan(body, c0, XS, interval=8, offload=False)
+        return jnp.sum(ys)
+
+    jaxpr = str(jax.make_jaxpr(jax.grad(loss_ms))(C0))
+    assert "<host>" not in jaxpr
+
+
+def test_bptt_grad_params():
+    params = {"W": W}
+
+    def step_loss(p, c, x):
+        c = jnp.tanh(c @ p["W"] + x)
+        return c, jnp.sum(c ** 2)
+
+    def ref(p):
+        def b(c, x):
+            return step_loss(p, c, x)
+        _, ys = lax.scan(b, C0, XS)
+        return jnp.sum(ys)
+
+    v, g = bptt_grad(step_loss, params, C0, XS, interval=8)
+    rv_, rg = jax.value_and_grad(ref)(params)
+    np.testing.assert_allclose(float(v), float(rv_), rtol=1e-5)
+    np.testing.assert_allclose(np.array(g["W"]), np.array(rg["W"]),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_memory_scales_with_interval_not_length():
+    """Compiled analogue of the paper's Fig 4: the live boundary set is
+    n/I states; remat keeps the rest transient.  We check the jaxpr-level
+    residual count (number of host boundary tensors) == n/I."""
+    def count_host_puts(n, interval):
+        xs = jnp.zeros((n, 4, 16))
+
+        def loss_ms(c0):
+            _, ys = multistage_scan(body, c0, xs, interval=interval)
+            return jnp.sum(ys)
+
+        jaxpr = str(jax.make_jaxpr(jax.grad(loss_ms))(C0))
+        return jaxpr.count("<host>")
+
+    # the stacked Level-2 residual's leading dim must be exactly n/I
+    import re
+
+    def host_stack_dims(n, interval):
+        xs = jnp.zeros((n, 4, 16))
+
+        def loss_ms(c0):
+            _, ys = multistage_scan(body, c0, xs, interval=interval)
+            return jnp.sum(ys)
+
+        s = str(jax.make_jaxpr(jax.grad(loss_ms))(C0))
+        return sorted({int(m.split("[")[1].split(",")[0])
+                       for m in re.findall(r"f32<host>\[[0-9]+,[0-9,]*\]", s)
+                       if m.count(",") == 2})
+
+    assert 6 in host_stack_dims(48, 8)    # 48/8 boundaries on the host
+    assert 4 in host_stack_dims(48, 12)   # 48/12
+    assert count_host_puts(48, 8) > 0

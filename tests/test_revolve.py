@@ -1,0 +1,53 @@
+"""Revolve: closed form vs DP, schedule optimality, hypothesis invariants."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import revolve as rv
+
+
+def test_closed_form_matches_dp():
+    for n in range(1, 36):
+        for s in range(1, 7):
+            assert rv.optimal_advances(n, s) == rv.optimal_advances_dp(n, s)
+
+
+def test_beta_binomial():
+    assert rv.beta(3, 2) == 10
+    assert rv.beta(1, 5) == 6
+    assert rv.beta(5, 0) == 1
+
+
+def test_recompute_factor_limits():
+    # everything fits -> no recomputation
+    assert rv.recompute_factor(50, 100) == pytest.approx(1.0, abs=0.03)
+    # the paper's Fig 3 operating point
+    assert rv.recompute_factor(1024, 100) == pytest.approx(1.902, abs=0.01)
+    # monotone in n (fixed s)
+    rs = [rv.recompute_factor(n, 16) for n in (64, 256, 1024, 4096)]
+    assert rs == sorted(rs)
+
+
+@settings(deadline=None, max_examples=60)
+@given(n=st.integers(1, 300), s=st.integers(1, 12))
+def test_schedule_is_optimal_and_slot_safe(n, s):
+    sched = rv.revolve_schedule(n, s)
+    assert rv.count_advances(sched) == rv.optimal_advances(n, s)
+    assert rv.count_backwards(sched) == n
+    assert rv.peak_slots(sched) <= s
+    # backward steps must visit n-1 .. 0 exactly in order
+    assert list(rv.iter_backward_indices(sched)) == list(range(n - 1, -1, -1))
+
+
+@settings(deadline=None, max_examples=30)
+@given(n=st.integers(2, 200), s=st.integers(1, 10))
+def test_optimal_advances_bounds(n, s):
+    t = rv.optimal_advances(n, s)
+    assert n - 1 <= t <= n * (n - 1) // 2
+    # monotone: more memory never hurts
+    assert rv.optimal_advances(n, s + 1) <= t
+
+
+def test_schedule_executes_with_offset():
+    sched = rv.revolve_schedule(10, 3, offset=7)
+    idxs = list(rv.iter_backward_indices(sched))
+    assert idxs == list(range(16, 6, -1))

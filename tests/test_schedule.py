@@ -1,0 +1,58 @@
+"""Multistage schedule: the paper's central claims as executable properties."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import revolve as rv
+from repro.core import schedule as ms
+
+
+@settings(deadline=None, max_examples=40)
+@given(n=st.integers(1, 400), interval=st.integers(1, 64),
+       s=st.integers(1, 16))
+def test_schedule_accounting(n, interval, s):
+    sched = ms.multistage_schedule(n, interval, s)
+    assert sched.num_segments == math.ceil(n / interval)
+    assert sched.l2_stores() == sched.num_segments
+    assert sched.total_advances() == \
+        round(ms.multistage_recompute_factor(n, interval, s) * max(n - 1, 1))
+
+
+def test_paper_claim_constant_overhead_in_n():
+    """T_async's recompute factor depends on I, not n (paper §3)."""
+    s, interval = 10, 32
+    rs = [ms.multistage_recompute_factor(n, interval, s)
+          for n in (256, 1024, 4096, 16384)]
+    assert max(rs) - min(rs) < 0.02
+    # while classic Revolve keeps growing
+    rv_rs = [rv.recompute_factor(n, s) for n in (256, 1024, 4096, 16384)]
+    assert rv_rs[-1] - rv_rs[0] > 0.5
+
+
+@settings(deadline=None, max_examples=40)
+@given(n=st.integers(2, 600), interval=st.integers(2, 64),
+       s=st.integers(2, 32))
+def test_paper_claim_async_never_slower_than_revolve(n, interval, s):
+    """Paper §3: R(I, s) <= R(n, s) whenever I <= n — exactly true under the
+    paper's convention; the physical count adds the initial sweep
+    (n/(n-1)) on the multistage side."""
+    if interval > n:
+        return
+    assert ms.multistage_recompute_factor_paper(n, interval, s) <= \
+        rv.recompute_factor(n, s) + 1e-9
+    assert ms.multistage_recompute_factor(n, interval, s) <= \
+        rv.recompute_factor(n, s) + n / (n - 1) + 1e-9
+
+
+def test_fits_in_memory_needs_no_revolve():
+    sched = ms.multistage_schedule(64, 8, s_l1=8)
+    assert not sched.segment_schedules  # store-all within every segment
+
+
+def test_small_l1_triggers_revolve_inside_interval():
+    sched = ms.multistage_schedule(64, 16, s_l1=4)
+    assert sched.segment_schedules
+    for b, seg in sched.segment_schedules.items():
+        assert rv.count_advances(seg) == rv.optimal_advances(16, 4)
+        assert rv.peak_slots(seg) <= 4

@@ -1,0 +1,107 @@
+"""Sharding rules: divisibility-safe param specs, cache specs, batch specs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.distributed.sharding import (batch_shardings, cache_shardings,
+                                        fit_spec_to_shape, param_pspec,
+                                        params_shardings)
+
+
+def _mesh(shape=(1, 1), names=("data", "model")):
+    devs = np.array(jax.devices()[:1]).reshape((1,) * len(shape))
+    devs = np.broadcast_to(devs, tuple(1 for _ in shape))
+    return Mesh(devs, names)
+
+
+class FakeMesh:
+    """Shape-only stand-in so rules can be tested without 256 devices."""
+
+    def __init__(self, **axes):
+        self.axis_names = tuple(axes)
+        self.shape = dict(axes)
+
+
+def test_param_rules_paths():
+    leaf2 = jax.ShapeDtypeStruct((64, 128), jnp.float32)       # unstacked
+    leaf3 = jax.ShapeDtypeStruct((4, 64, 128), jnp.float32)    # stacked
+    leaf1 = jax.ShapeDtypeStruct((64,), jnp.float32)
+
+    def spec_for(path, leaf):
+        keys = [jax.tree_util.DictKey(p) for p in path.split("/")]
+        return param_pspec(keys, leaf)
+
+    assert spec_for("embed/emb", leaf2) == P("model", None)
+    # stacked leaves (leading n_periods axis) get a None prefix
+    assert spec_for("layers/pos0/attn/wq/w", leaf3) == \
+        P(None, "data", "model")
+    assert spec_for("layers/pos0/attn/wo/w", leaf3) == \
+        P(None, "model", "data")
+    assert spec_for("layers/pos0/mlp/gate/w", leaf3) == \
+        P(None, "data", "model")
+    assert spec_for("opt/m/layers/pos0/mlp/down/w", leaf3) == \
+        P(None, "model", "data")
+    assert spec_for("final_norm/scale", leaf1) == P(None)
+    leaf4 = jax.ShapeDtypeStruct((4, 16, 64, 128), jnp.float32)
+    assert spec_for("layers/pos1/moe/w_gate", leaf4) == \
+        P(None, "model", "data", None)
+
+
+def test_fit_spec_drops_non_divisible():
+    mesh = FakeMesh(data=16, model=16)
+    # vocab 51865 not divisible by 16 -> replicated on that dim
+    assert fit_spec_to_shape(mesh, P("model", None), (51865, 384)) == \
+        P(None, None)
+    assert fit_spec_to_shape(mesh, P("model", None), (51872, 384)) == \
+        P("model", None)
+    # missing axis dropped
+    mesh2 = FakeMesh(data=16)
+    assert fit_spec_to_shape(mesh2, P("data", "model"), (32, 32)) == \
+        P("data", None)
+    # tuple axes filtered
+    assert fit_spec_to_shape(mesh2, P(("pod", "data"), None), (32, 4)) == \
+        P(("data",), None)
+
+
+def test_cache_specs_adaptive():
+    mesh = FakeMesh(data=16, model=16)
+    from repro.distributed.sharding import cache_pspec
+    # big batch, divisible kv heads
+    assert cache_pspec("pos0/k", (10, 128, 32768, 16, 128), mesh) == \
+        P(None, ("data",), None, "model", None)
+    # kv heads not divisible -> shard head_dim instead
+    assert cache_pspec("pos0/k", (10, 128, 32768, 20, 128), mesh) == \
+        P(None, ("data",), None, None, "model")
+    # batch 1 -> shard the sequence axis
+    assert cache_pspec("pos0/k", (10, 1, 524288, 8, 128), mesh) == \
+        P(None, None, ("data",), None, "model")
+    # ssm state: heads over model
+    assert cache_pspec("pos0/ssm", (48, 128, 32, 64, 128), mesh) == \
+        P(None, ("data",), "model", None, None)
+
+
+def test_real_shardings_build_on_one_device():
+    """NamedShardings must build for every arch's full param struct on the
+    degenerate 1x1 mesh (smoke for the rule table)."""
+    devs = np.array(jax.devices()[:1]).reshape(1, 1)
+    mesh = Mesh(devs, ("data", "model"))
+    from repro.models import get_model
+    for name in ("qwen1.5-4b", "jamba-v0.1-52b", "whisper-tiny"):
+        cfg = get_config(name, smoke=True)
+        api = get_model(cfg)
+        struct = jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0)))
+        sh = params_shardings(mesh, struct)
+        assert len(jax.tree_util.tree_leaves(sh)) == \
+            len(jax.tree_util.tree_leaves(struct))
+
+
+def test_batch_shardings_scalar_and_small_batch():
+    devs = np.array(jax.devices()[:1]).reshape(1, 1)
+    mesh = Mesh(devs, ("data", "model"))
+    out = batch_shardings(mesh, {
+        "tokens": jax.ShapeDtypeStruct((4, 33), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32)})
+    assert out["pos"].spec == P()

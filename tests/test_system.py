@@ -1,0 +1,102 @@
+"""End-to-end behaviour: the paper's claims on a real model (LSTM BPTT),
+the training launcher, the serving launcher, and checkpoint-resume — the
+integration layer over everything below it."""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CheckpointExecutor
+from repro.core.schedule import multistage_recompute_factor
+from repro.models.lstm import (bptt_loss_and_grad, forward_loss, init_lstm,
+                               init_state, make_operators)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def lstm_setup():
+    T, B, V = 65, 4, 64
+    params = init_lstm(KEY, V, 16, 32)
+    tokens = jax.random.randint(jax.random.fold_in(KEY, 1), (B, T + 1), 0, V)
+    ref_loss, ref_grad = jax.value_and_grad(forward_loss)(params, tokens)
+    return params, tokens, ref_loss, ref_grad
+
+
+def _grads_close(g, ref):
+    for k in ref:
+        np.testing.assert_allclose(np.array(g[k]), np.array(ref[k]),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_paper_pipeline_all_strategies_same_gradients(lstm_setup):
+    """The paper's core promise: checkpointing strategies change memory and
+    compute, never the result."""
+    params, tokens, ref_loss, ref_grad = lstm_setup
+    fwd, bwd, seed, n = make_operators(params, tokens)
+    ex = CheckpointExecutor(fwd, bwd)
+    s0 = init_state(tokens.shape[0], 32)
+
+    (_, g), st_conv = ex.run_conventional(s0, n, seed())
+    _grads_close(g, ref_grad)
+    (_, g), st_rev = ex.run_revolve(s0, n, seed(), s=6)
+    _grads_close(g, ref_grad)
+    (_, g), st_ms = ex.run_multistage(s0, n, seed(), interval=8, s_l1=6)
+    _grads_close(g, ref_grad)
+
+    # memory: conventional stores n states; multistage peaks at O(interval)
+    assert st_conv.peak_l1_states == n
+    assert st_ms.peak_l1_states <= 8
+    # compute: multistage recompute factor is the closed-form one
+    assert st_ms.recompute_factor == pytest.approx(
+        multistage_recompute_factor(n, 8, 6))
+    # and beats Revolve's advance count at equal fast memory
+    assert st_ms.advances <= st_rev.advances + n
+
+
+def test_compiled_bptt_matches(lstm_setup):
+    params, tokens, ref_loss, ref_grad = lstm_setup
+    v, g = bptt_loss_and_grad(params, tokens, interval=13, offload=True)
+    np.testing.assert_allclose(float(v), float(ref_loss), rtol=1e-5)
+    _grads_close(g, ref_grad)
+
+
+def test_train_launcher_end_to_end():
+    from repro.launch.train import main
+    with tempfile.TemporaryDirectory() as d:
+        state = main(["--arch", "mamba2-370m", "--smoke", "--steps", "6",
+                      "--ckpt-dir", d, "--ckpt-every", "3"])
+        assert int(state["step"]) == 6
+        # resume continues from the checkpoint
+        state2 = main(["--arch", "mamba2-370m", "--smoke", "--steps", "8",
+                       "--ckpt-dir", d, "--ckpt-every", "3"])
+        assert int(state2["step"]) == 8
+
+
+def test_serve_launcher_end_to_end():
+    from repro.launch.serve import main
+    toks = main(["--arch", "granite-3-2b", "--smoke", "--batch", "2",
+                 "--prompt-len", "8", "--decode-steps", "6"])
+    assert toks.shape == (2, 7)  # first token + 6 decoded
+    cfg_vocab = 512
+    assert toks.max() < cfg_vocab
+
+
+def test_lstm_training_converges_with_multistage():
+    """A few RMSProp steps through the full multistage pipeline must reduce
+    the loss on a fixed batch (the paper's §5 training setup, miniature)."""
+    from repro.optim import rmsprop
+    V, T, B = 64, 48, 4
+    params = init_lstm(jax.random.fold_in(KEY, 5), V, 16, 32)
+    tokens = jax.random.randint(jax.random.fold_in(KEY, 6), (B, T + 1), 0, V)
+    opt = rmsprop(5e-3)
+    opt_state = opt.init(params)
+    losses = []
+    for i in range(8):
+        loss, grads = bptt_loss_and_grad(params, tokens, interval=8)
+        params, opt_state = opt.update(grads, opt_state, params,
+                                       jnp.asarray(i))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0]

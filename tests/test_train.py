@@ -1,0 +1,218 @@
+"""Training substrate: optimization, accumulation, checkpointing,
+compression, fault tolerance, data pipeline."""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ckpt import CheckpointManager
+from repro.configs import SMOKE_SHAPE, get_config
+from repro.data import Prefetcher, SyntheticDataset
+from repro.distributed import compression as comp
+from repro.distributed.fault_tolerance import (StragglerWatchdog,
+                                               elastic_mesh, with_retries)
+from repro.models import get_model
+from repro.optim import adamw, rmsprop, sgd, clip_by_global_norm
+from repro.train import init_train_state, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen1.5-4b", smoke=True)
+    api = get_model(cfg)
+    opt = adamw(3e-3)
+    ds = SyntheticDataset(cfg, SMOKE_SHAPE)
+    batch = jax.tree_util.tree_map(jnp.asarray, ds.batch(0))
+    return cfg, api, opt, ds, batch
+
+
+def test_overfits_fixed_batch(setup):
+    cfg, api, opt, ds, batch = setup
+    state = init_train_state(api, opt, KEY)
+    step = jax.jit(make_train_step(api, opt))
+    losses = []
+    for _ in range(8):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 1.0
+    assert int(state["step"]) == 8
+
+
+def test_grad_accum_matches_full_batch(setup):
+    cfg, api, opt, ds, batch = setup
+    s0 = init_train_state(api, opt, jax.random.PRNGKey(7))
+    s1, m1 = jax.jit(make_train_step(api, opt))(s0, batch)
+    s2, m2 = jax.jit(make_train_step(api, opt, grad_accum=2))(s0, batch)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-3
+    assert abs(float(m1["grad_norm"]) - float(m2["grad_norm"])) < \
+        0.02 * float(m1["grad_norm"]) + 1e-3
+
+
+@pytest.mark.parametrize("make_opt", [lambda: rmsprop(1e-3),
+                                      lambda: sgd(1e-2, momentum=0.9)])
+def test_other_optimizers_reduce_loss(setup, make_opt):
+    cfg, api, _, ds, batch = setup
+    opt = make_opt()
+    state = init_train_state(api, opt, KEY)
+    step = jax.jit(make_train_step(api, opt))
+    l0 = lN = None
+    for i in range(6):
+        state, m = step(state, batch)
+        l0 = float(m["loss"]) if l0 is None else l0
+        lN = float(m["loss"])
+    assert lN < l0
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0), "b": jnp.full((3,), -10.0)}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    total = sum(float(jnp.sum(x ** 2))
+                for x in jax.tree_util.tree_leaves(clipped))
+    assert total == pytest.approx(1.0, rel=1e-5)
+    assert float(gn) == pytest.approx(np.sqrt(700.0), rel=1e-6)
+
+
+def test_checkpoint_roundtrip_and_resume(setup):
+    cfg, api, opt, ds, batch = setup
+    state = init_train_state(api, opt, KEY)
+    step = jax.jit(make_train_step(api, opt))
+    state, _ = step(state, batch)
+    with tempfile.TemporaryDirectory() as d:
+        with CheckpointManager(d, keep_last=2) as cm:
+            cm.save(state, 1)
+            state2, _ = step(state, batch)
+            cm.save(state2, 2)
+            cm.wait()
+            assert cm.all_steps() == [1, 2]
+            restored, s = cm.restore(state)
+            assert s == 2
+            for a, b in zip(jax.tree_util.tree_leaves(state2),
+                            jax.tree_util.tree_leaves(restored)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # garbage collection respects keep_last
+        with CheckpointManager(d, keep_last=1) as cm2:
+            cm2.save(restored, 3)
+            cm2.wait()
+            assert cm2.all_steps()[-1] == 3
+
+
+def test_checkpoint_atomic_publish():
+    with tempfile.TemporaryDirectory() as d:
+        with CheckpointManager(d) as cm:
+            cm.save({"x": jnp.ones((8,))}, 1)
+            cm.wait()
+            import os
+            assert not any(p.endswith(".tmp") for p in os.listdir(d))
+
+
+# ---------------------------------------------------------------- compression
+@settings(deadline=None, max_examples=25)
+@given(scale=st.floats(1e-4, 1e3))
+def test_quantization_error_bound(scale):
+    x = jax.random.normal(jax.random.PRNGKey(3), (64,)) * scale
+    q, s = comp.quantize(x)
+    err = float(jnp.max(jnp.abs(comp.dequantize(q, s) - x)))
+    assert err <= comp.quantization_error_bound(x) * 1.01 + 1e-12
+    assert q.dtype == jnp.int8
+
+
+def test_error_feedback_reduces_bias():
+    """Repeated quantisation with EF must track the true running sum."""
+    x = jax.random.normal(jax.random.PRNGKey(4), (256,)) * 0.01
+    e = jnp.zeros_like(x)
+    acc_q = jnp.zeros_like(x)
+    for _ in range(50):
+        g = x + e
+        q, s = comp.quantize(g)
+        dq = comp.dequantize(q, s)
+        e = g - dq
+        acc_q = acc_q + dq
+    true = x * 50
+    rel = float(jnp.linalg.norm(acc_q - true) / jnp.linalg.norm(true))
+    assert rel < 0.01  # EF keeps the accumulated error tiny
+
+
+def test_compressed_mean_single_axis():
+    """compressed_mean over a trivial 1-device mesh axis is exact dequant."""
+    from jax.sharding import Mesh
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    import numpy as np
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1), ("pod",))
+    tree = {"w": jnp.linspace(-1, 1, 32)}
+
+    def f(t):
+        m, e = comp.compressed_mean(t, "pod")
+        return m, e
+
+    m, e = shard_map(f, mesh=mesh, in_specs=(P(),), out_specs=(P(), P()))(tree)
+    np.testing.assert_allclose(np.array(m["w"]), np.array(tree["w"]),
+                               atol=comp.quantization_error_bound(tree["w"]))
+    np.testing.assert_allclose(np.array(m["w"] + e["w"]),
+                               np.array(tree["w"]), atol=1e-6)
+
+
+# ------------------------------------------------------------ fault tolerance
+def test_straggler_watchdog():
+    import time
+    wd = StragglerWatchdog(warmup=2, threshold=1.5)
+    for step in range(4):
+        wd.start()
+        time.sleep(0.01)
+        assert not wd.stop(step)
+    wd.start()
+    time.sleep(0.1)
+    assert wd.stop(4)
+    assert wd.slow_steps and wd.slow_steps[0][0] == 4
+
+
+def test_elastic_mesh_shrinks_data_axis():
+    mesh = elastic_mesh(1, model_parallelism=1)
+    assert mesh.shape["data"] == 1 and mesh.shape["model"] == 1
+    with pytest.raises(RuntimeError):
+        elastic_mesh(0)
+
+
+def test_with_retries():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("preempted")
+        return 42
+
+    assert with_retries(flaky, retries=3)() == 42
+    assert calls["n"] == 3
+
+
+# --------------------------------------------------------------------- data
+def test_synthetic_data_deterministic():
+    cfg = get_config("yi-6b", smoke=True)
+    ds1 = SyntheticDataset(cfg, SMOKE_SHAPE, seed=1)
+    ds2 = SyntheticDataset(cfg, SMOKE_SHAPE, seed=1)
+    np.testing.assert_array_equal(ds1.batch(5)["tokens"],
+                                  ds2.batch(5)["tokens"])
+    assert not np.array_equal(ds1.batch(5)["tokens"], ds1.batch(6)["tokens"])
+    assert ds1.batch(0)["tokens"].max() < cfg.vocab
+
+
+def test_prefetcher_order_and_close():
+    it = Prefetcher(iter(range(10)), depth=3)
+    assert list(it) == list(range(10))
+    it2 = Prefetcher(iter(range(1000)), depth=2)
+    assert next(it2) == 0
+    it2.close()
+
+
+def test_host_sharded_batches():
+    cfg = get_config("yi-6b", smoke=True)
+    a = SyntheticDataset(cfg, SMOKE_SHAPE, host_id=0, num_hosts=2).batch(0)
+    b = SyntheticDataset(cfg, SMOKE_SHAPE, host_id=1, num_hosts=2).batch(0)
+    assert a["tokens"].shape[0] == SMOKE_SHAPE.global_batch // 2
+    assert not np.array_equal(a["tokens"], b["tokens"])
