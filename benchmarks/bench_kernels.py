@@ -3,10 +3,8 @@ numerics check, plus the analytic VMEM/roofline characteristics of each
 Pallas kernel at production shapes (the kernels execute on TPU; on CPU we
 report the model: bytes saved vs the XLA path).
 """
-import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.perfmodel import TPU_V5E
 

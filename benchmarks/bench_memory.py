@@ -6,7 +6,6 @@ Conventional grows linearly in depth; Revolve is capped at s states;
 multistage is capped at max(s, interval) states regardless of depth.
 """
 import jax
-import jax.numpy as jnp
 
 from repro.core import CheckpointExecutor
 from repro.models.lstm import init_lstm, init_state, make_operators
@@ -43,8 +42,8 @@ def run(depths=(32, 64, 128, 256, 512)):
     return [one_depth(d) for d in depths]
 
 
-def main():
-    rows = run()
+def main(smoke: bool = False):
+    rows = run((32, 64, 160) if smoke else (32, 64, 128, 256, 512))
     cols = list(rows[0])
     print(",".join(cols))
     for r in rows:

@@ -5,6 +5,7 @@
 Each module prints a CSV block and asserts its paper-claim invariants.
 """
 import argparse
+import inspect
 import sys
 import time
 
@@ -23,15 +24,20 @@ ALL = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced workloads for CI (minutes, not hours)")
     args = ap.parse_args()
     failures = []
     for name, fn in ALL:
         if args.only and args.only not in name:
             continue
+        kwargs = {}
+        if args.smoke and "smoke" in inspect.signature(fn).parameters:
+            kwargs["smoke"] = True
         print(f"\n== {name} ==")
         t0 = time.time()
         try:
-            fn()
+            fn(**kwargs)
             print(f"-- ok in {time.time()-t0:.1f}s")
         except Exception as e:  # keep going; report at the end
             import traceback

@@ -10,7 +10,6 @@ Reports, per depth (the paper's Figs 4 & 5):
 Run: PYTHONPATH=src python examples/lstm_paper.py [--depths 64 128 256]
 """
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,6 @@
+"""Reproduction of "Backpropagation for long sequences: beyond memory
+constraints with constant overheads" — asynchronous multistage checkpointing
+in JAX, from the paper-faithful threaded executor to a drop-in
+``value_and_grad_offloaded`` autodiff front-end (``repro.api``)."""
+
+__version__ = "0.1.0"

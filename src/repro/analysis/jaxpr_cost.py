@@ -25,7 +25,6 @@ from functools import reduce
 from typing import Any, Dict
 
 import jax
-import jax.numpy as jnp
 from jax.extend import core
 
 _VIEW_OPS = {

@@ -1,0 +1,25 @@
+"""Differentiable front-end: the paper's multistage checkpointing as a
+drop-in ``jax.value_and_grad``.
+
+    from repro import api
+
+    vg = api.value_and_grad_offloaded(model.train_loss)   # or a ChainSpec
+    loss, grads = vg(params, batch)                       # O(I + s) Level-1
+
+See ``repro.api.frontend`` for the transform, ``repro.api.chain`` for the
+chain decomposition it differentiates, and ``repro.api.autotune`` for the
+§3 schedule selection (``I = ceil(T_T/T_A)``) from measured or roofline
+times.
+"""
+from repro.api.autotune import AutoTuner, GLOBAL_TUNER, TuneResult
+from repro.api.chain import ChainSpec, chain_length
+from repro.api.frontend import (OffloadConfig, checkpointed_bptt,
+                                last_stats, last_tune, offloaded_loss,
+                                value_and_grad_offloaded)
+
+__all__ = [
+    "AutoTuner", "GLOBAL_TUNER", "TuneResult",
+    "ChainSpec", "chain_length",
+    "OffloadConfig", "checkpointed_bptt", "last_stats", "last_tune",
+    "offloaded_loss", "value_and_grad_offloaded",
+]

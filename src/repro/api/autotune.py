@@ -1,0 +1,180 @@
+"""Schedule auto-tuning from the paper's §3 performance model.
+
+The multistage strategy has two knobs: the Level-2 store interval ``I`` and
+the Level-1 Revolve slot count ``s``.  §3 gives the optimum directly:
+``I = ceil(T_T / T_A)`` — the smallest interval at which the asynchronous
+Level-2 transfers keep up with compute, so the forward pass never stalls and
+the recompute factor stays at the constant ``R(I, s)``.
+
+Two ways to obtain ``(T_A, T_T)``:
+
+* **measure** — time the jitted forward step and a Level-2 store of the
+  boundary state on the live engine (done on the first call of an offloaded
+  gradient function, then cached per ``(model, seq-len, hardware)``);
+* **roofline** — derive them from compiled-HLO roofline terms via
+  ``repro.core.perfmodel.times_from_roofline`` (the dry-run path; no
+  execution needed).
+
+The measured interval is snapped with ``choose_interval`` onto a divisor of
+the chain length when one exists nearby (the compiled ``multistage_scan``
+path requires exact divisibility; the executor path merely prefers even
+segments), and the result is cached so subsequent steps pay nothing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+
+from repro.core.multistage_scan import choose_interval
+from repro.core.perfmodel import (HardwareSpec, StepTimes, optimal_interval,
+                                  times_from_roofline)
+from repro.core.storage import tree_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    """A chosen schedule plus the measurements behind it."""
+
+    interval: int
+    slots: int
+    t_a: float            # forward time of one chain step (s)
+    t_t: float            # Level-2 transfer time of one boundary state (s)
+    state_bytes: int
+    n: int
+    source: str           # "measured" | "roofline" | "manual"
+
+    @property
+    def never_stalls(self) -> bool:
+        return self.t_t <= self.interval * self.t_a
+
+
+def snap_interval(n: int, target: int) -> int:
+    """Snap the §3 optimum onto the chain: prefer the largest divisor of
+    ``n`` that is <= target (even segments, compiled-path compatible), but
+    never shrink below half the optimum — a too-small interval stalls the
+    forward pass on stores (e.g. prime ``n`` would otherwise snap to 1)."""
+    target = max(1, min(target, n))
+    d = choose_interval(n, target)
+    return d if d >= max(1, target // 2) else target
+
+
+def default_slots(interval: int, l1_budget_states: int = 16) -> int:
+    """Level-1 slots for Revolve inside one interval.  ``interval <= s``
+    degenerates to store-all within the segment (R(I, s) == 1, the paper's
+    preferred operating point); larger intervals get the full budget."""
+    return max(1, min(interval, l1_budget_states))
+
+
+class AutoTuner:
+    """Measures (T_A, T_T) once and caches the chosen schedule.
+
+    Cache key: ``(name, n, state_bytes, level2-kind, backend)`` — the
+    model/chain identity, sequence length, boundary-state size, Level-2
+    medium and compute hardware, i.e. everything the §3 optimum depends on.
+    """
+
+    def __init__(self, l1_budget_states: int = 16, repeats: int = 3):
+        self.l1_budget_states = l1_budget_states
+        self.repeats = repeats
+        self._cache: Dict[Tuple, TuneResult] = {}
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------ cache
+    def _key(self, name: str, n: int, state_bytes: int,
+             level2: str) -> Tuple:
+        # T_T depends on the Level-2 medium, so the backend kind is part of
+        # the identity — a RAM-tuned interval must never be reused for disk.
+        return (name, n, state_bytes, level2, jax.default_backend())
+
+    def lookup(self, name: str, n: int, state_bytes: int,
+               level2: str) -> Optional[TuneResult]:
+        with self._lock:
+            return self._cache.get(self._key(name, n, state_bytes, level2))
+
+    def store(self, name: str, n: int, state_bytes: int, level2: str,
+              result: TuneResult) -> TuneResult:
+        with self._lock:
+            self._cache[self._key(name, n, state_bytes, level2)] = result
+        return result
+
+    def clear(self) -> None:
+        with self._lock:
+            self._cache.clear()
+
+    # ---------------------------------------------------------------- measure
+    def _time(self, fn: Callable[[], Any]) -> float:
+        fn()  # warmup (jit compile / first-touch)
+        t0 = time.perf_counter()
+        for _ in range(self.repeats):
+            fn()
+        return (time.perf_counter() - t0) / self.repeats
+
+    def measure(self, name: str, *, forward_step: Callable[[Any, int], Any],
+                state0: Any, n: int, backend: Any) -> TuneResult:
+        """Time one chain step and one Level-2 store; derive ``I`` per §3.
+
+        ``forward_step(state, k) -> state`` is the executor's forward op
+        (already jitted); ``backend`` is the Level-2 storage backend the run
+        will use (its put/delete pair is what we time).
+        """
+        state_bytes = tree_bytes(state0)
+        level2 = type(backend).__name__
+        cached = self.lookup(name, n, state_bytes, level2)
+        if cached is not None:
+            return cached
+
+        def one_step():
+            out = forward_step(state0, 0)
+            jax.block_until_ready(out)
+
+        t_a = self._time(one_step)
+
+        tune_key = ("__autotune__", name)
+
+        def one_store():
+            backend.put(tune_key, state0)
+
+        t_t = self._time(one_store)
+        backend.delete(tune_key)
+
+        interval = snap_interval(n, optimal_interval(t_t, t_a))
+        slots = default_slots(interval, self.l1_budget_states)
+        return self.store(name, n, state_bytes, level2, TuneResult(
+            interval=interval, slots=slots, t_a=t_a, t_t=t_t,
+            state_bytes=state_bytes, n=n, source="measured"))
+
+    # --------------------------------------------------------------- roofline
+    def from_roofline(self, name: str, *, n: int, step_flops: float,
+                      step_hbm_bytes: float, state_bytes: int,
+                      hw: HardwareSpec) -> TuneResult:
+        """Analytic path: derive the schedule from compiled-HLO roofline
+        terms (see ``analysis.roofline`` / ``launch.dryrun``) without running
+        a step — used when planning runs on hardware we are not on."""
+        level2 = f"roofline-{hw.name}"
+        cached = self.lookup(name, n, state_bytes, level2)
+        if cached is not None:
+            return cached
+        st: StepTimes = times_from_roofline(step_flops, step_hbm_bytes,
+                                            state_bytes, hw)
+        interval = snap_interval(n, st.interval)
+        slots = default_slots(interval, self.l1_budget_states)
+        return self.store(name, n, state_bytes, level2, TuneResult(
+            interval=interval, slots=slots, t_a=st.t_a, t_t=st.t_t,
+            state_bytes=state_bytes, n=n, source="roofline"))
+
+    def manual(self, name: str, *, n: int, interval: int,
+               slots: Optional[int] = None,
+               state_bytes: int = 0) -> TuneResult:
+        return TuneResult(
+            interval=max(1, min(interval, n)),
+            slots=slots if slots is not None
+            else default_slots(interval, self.l1_budget_states),
+            t_a=0.0, t_t=0.0, state_bytes=state_bytes, n=n, source="manual")
+
+
+# The process-wide tuner used by the front-end when none is supplied.
+GLOBAL_TUNER = AutoTuner()

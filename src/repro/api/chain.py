@@ -1,0 +1,131 @@
+"""Chain decomposition of a loss function.
+
+The paper's machinery applies to any loss of the form
+
+    carry_0, xs = prelude(params, batch)
+    carry_{k+1} = body(params, carry_k, xs_k, batch)        k in [0, n)
+    loss        = readout(params, carry_n, batch)
+
+— an RNN/SSM scan over time (``xs`` = per-step tokens), or a deep network
+scanned over depth (``xs`` = the stacked per-layer parameters; the layer-input
+activation is the carry).  ``ChainSpec`` captures that decomposition; the
+front-end (``repro.api.frontend``) differentiates through it with the
+checkpointing executor instead of storing every carry.
+
+Only ``params``, the carry, and the *inexact* (float/complex) leaves of
+``xs`` are differentiated; ``batch`` and integer ``xs`` leaves (token ids)
+are treated as constants.  Gradients that flow out of the chain through
+``carry_0`` and ``xs`` are pulled back through ``prelude`` by ordinary
+autodiff, so stacked-layer gradients scatter back into ``params`` for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Tuple
+
+import jax
+import numpy as np
+
+Params = Any
+Carry = Any
+Batch = Any
+
+PreludeFn = Callable[[Params, Batch], Tuple[Carry, Any]]
+BodyFn = Callable[[Params, Carry, Any, Batch], Carry]
+ReadoutFn = Callable[[Params, Carry, Batch], Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainSpec:
+    """A loss expressed as prelude -> n x body -> readout.
+
+    Frozen (hashable) so it can ride through ``jax.custom_vjp``'s static
+    arguments and key the per-spec jit caches.  ``name`` doubles as the
+    autotuner cache key component.
+    """
+
+    prelude: PreludeFn
+    body: BodyFn
+    readout: ReadoutFn
+    name: str = "chain"
+
+    def loss_fn(self) -> Callable[[Params, Batch], Any]:
+        """The undecomposed loss — reference semantics for the front-end
+        (and the function ``jax.value_and_grad`` would differentiate)."""
+
+        def loss(params, batch):
+            carry, xs = self.prelude(params, batch)
+            n = chain_length(xs)
+
+            def step(c, x):
+                return self.body(params, c, x, batch), None
+
+            carry, _ = jax.lax.scan(step, carry, xs, length=n)
+            return self.readout(params, carry, batch)
+
+        return loss
+
+
+def chain_length(xs: Any) -> int:
+    """Number of chain steps — the (uniform) leading axis of ``xs``."""
+    leaves = jax.tree_util.tree_leaves(xs)
+    if not leaves:
+        raise ValueError("chain xs must have at least one array leaf")
+    ns = {int(np.shape(leaf)[0]) for leaf in leaves}
+    if len(ns) != 1:
+        raise ValueError(f"inconsistent leading axes in chain xs: {ns}")
+    return ns.pop()
+
+
+def index_xs(xs: Any, k: int) -> Any:
+    """Slice step ``k``'s per-step input out of stacked ``xs`` (host-side)."""
+    return jax.tree_util.tree_map(lambda leaf: leaf[k], xs)
+
+
+# ---------------------------------------------------------------------------
+# inexact/nondiff partitioning (token ids ride along, but are not
+# differentiated — jax.vjp rejects integer primals)
+# ---------------------------------------------------------------------------
+
+
+def _dtype_of(leaf: Any) -> np.dtype:
+    # works for jax arrays, tracers, numpy arrays and python scalars alike
+    dt = getattr(leaf, "dtype", None)
+    return dt if dt is not None else np.asarray(leaf).dtype
+
+
+def _is_inexact(leaf: Any) -> bool:
+    dt = _dtype_of(leaf)
+    return np.issubdtype(dt, np.inexact) or "float" in str(dt)
+
+
+def diff_mask(tree: Any) -> Tuple[Any, Tuple[bool, ...]]:
+    """(treedef, per-leaf inexact mask) for a pytree — both hashable."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return treedef, tuple(_is_inexact(leaf) for leaf in leaves)
+
+
+def partition(tree: Any, mask: Tuple[bool, ...]):
+    """Split flattened leaves into (diff_leaves, nondiff_leaves) lists."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    diff = [leaf for leaf, m in zip(leaves, mask) if m]
+    nondiff = [leaf for leaf, m in zip(leaves, mask) if not m]
+    return diff, nondiff
+
+
+def combine(diff, nondiff, treedef, mask: Tuple[bool, ...]) -> Any:
+    """Inverse of :func:`partition`: re-interleave and unflatten."""
+    diff_it, nondiff_it = iter(diff), iter(nondiff)
+    leaves = [next(diff_it) if m else next(nondiff_it) for m in mask]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def zero_cotangent(leaf: Any):
+    """The cotangent jax.custom_vjp expects for an untouched primal leaf:
+    zeros for inexact dtypes, a float0 array for integer/bool dtypes."""
+    shape = np.shape(leaf)
+    if _is_inexact(leaf):
+        import jax.numpy as jnp
+
+        return jnp.zeros(shape, _dtype_of(leaf))
+    return np.zeros(shape, jax.dtypes.float0)

@@ -1,0 +1,509 @@
+"""Drop-in autodiff front-end for asynchronous multistage checkpointing.
+
+``value_and_grad_offloaded(loss)`` is the paper's technique packaged the way
+``jax.value_and_grad`` is: you hand it a loss, you get back a function
+returning ``(loss, grads)``.  The difference is *how* the backward pass runs:
+
+* the forward chain executes step by step while the ``AsyncTransferEngine``
+  streams every ``I``-th carry to Level-2 storage (host RAM or disk) on a
+  background thread;
+* the backward pass replays segments from Level 2 with double-buffered
+  prefetch, running Revolve inside each interval — peak Level-1 memory is
+  ``O(I + s)``, independent of chain length, at a constant recompute factor.
+
+Mechanically this is a ``jax.custom_vjp`` whose fwd/bwd rules escape the
+tracer via ``jax.experimental.io_callback``: the traced residual is just the
+chain inputs plus an integer handle; the Level-2 state lives host-side in a
+run registry between the two callbacks.  That makes the transform compose
+with ``jax.value_and_grad`` / ``jax.jit`` like any other JAX function, while
+the actual store/prefetch machinery stays the paper-faithful threaded
+executor (``repro.core.executor``).
+
+The schedule ``(I, s)`` is chosen by ``repro.api.autotune`` from measured
+``T_A``/``T_T`` on the first call (``I = ceil(T_T/T_A)``, §3) and cached per
+(model, seq-len, hardware); pass ``interval=`` to pin it manually.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import itertools
+import shutil
+import threading
+import warnings
+import weakref
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import io_callback
+
+from repro.api import autotune as at
+from repro.api.chain import (ChainSpec, chain_length, combine, diff_mask,
+                             index_xs, partition, zero_cotangent, _dtype_of,
+                             _is_inexact)
+from repro.core.executor import CheckpointExecutor, ExecutionStats
+from repro.core.storage import AsyncTransferEngine, DiskStorage, RAMStorage
+
+STRATEGIES = ("multistage_async", "revolve", "conventional")
+
+
+@dataclasses.dataclass(frozen=True)
+class OffloadConfig:
+    """Static (hashable) knobs of one offloaded-gradient transform."""
+
+    strategy: str = "multistage_async"
+    interval: Optional[int] = None    # None -> autotune (I = ceil(T_T/T_A))
+    slots: Optional[int] = None       # Level-1 Revolve slots; None -> budget
+    storage: str = "ram"              # "ram" | "disk"
+    storage_dir: Optional[str] = None
+    autotune: bool = True
+    tuner_id: int = 0                 # key into the tuner registry
+
+    def __post_init__(self):
+        if self.strategy not in STRATEGIES:
+            raise ValueError(
+                f"unknown strategy {self.strategy!r}; known: {STRATEGIES}")
+
+
+@dataclasses.dataclass(frozen=True)
+class _Static:
+    """Everything the custom_vjp rules need that must stay out of the trace."""
+
+    spec: ChainSpec
+    cfg: OffloadConfig
+    xs_treedef: Any
+    xs_mask: Tuple[bool, ...]
+
+
+# ---------------------------------------------------------------------------
+# tuner + run registries (host side)
+# ---------------------------------------------------------------------------
+
+# Weak registry: a custom tuner lives exactly as long as its owner holds it
+# (dropping the transform frees the tuner; lookups then fall back to the
+# global tuner).  GLOBAL_TUNER itself is kept alive by its module.
+_TUNERS: "weakref.WeakValueDictionary[int, at.AutoTuner]" = \
+    weakref.WeakValueDictionary({0: at.GLOBAL_TUNER})
+_TUNER_IDS = itertools.count(1)
+
+
+def _register_tuner(tuner: Optional[at.AutoTuner]) -> int:
+    if tuner is None or tuner is at.GLOBAL_TUNER:
+        return 0
+    tid = next(_TUNER_IDS)
+    _TUNERS[tid] = tuner
+    return tid
+
+
+@dataclasses.dataclass
+class _RunRecord:
+    strategy: str
+    tune: at.TuneResult
+    run: Any = None                   # MultistageRun for multistage_async
+    tmpdir: Optional[str] = None      # auto-created disk Level-2 directory
+
+    def dispose(self) -> None:
+        if self.run is not None:
+            self.run.close()
+        if self.tmpdir is not None:
+            shutil.rmtree(self.tmpdir, ignore_errors=True)
+            self.tmpdir = None
+
+
+_RUNS: Dict[int, _RunRecord] = {}
+_RUNS_LOCK = threading.Lock()
+_HANDLES = itertools.count(1)
+# Backstop against pullbacks that are taken but never invoked (each holds an
+# engine + Level-2 states).  Generous: a legitimate program holds one live
+# run per offloaded chain between its forward and backward passes.
+_MAX_LIVE_RUNS = 64
+
+_LAST: Dict[str, Any] = {"stats": None, "tune": None}
+
+
+def last_stats() -> Optional[ExecutionStats]:
+    """ExecutionStats of the most recent offloaded backward pass (executor
+    instrumentation: peak Level-1 states/bytes, advances, stall times)."""
+    return _LAST["stats"]
+
+
+def last_tune() -> Optional[at.TuneResult]:
+    """The schedule the autotuner chose for the most recent forward pass."""
+    return _LAST["tune"]
+
+
+def _push_run(handle: int, rec: _RunRecord) -> None:
+    evicted = []
+    with _RUNS_LOCK:
+        _RUNS[handle] = rec
+        while len(_RUNS) > _MAX_LIVE_RUNS:
+            evicted.append(_RUNS.pop(min(_RUNS)))
+    for old in evicted:
+        old.dispose()
+
+
+def _pop_run(handle: int) -> _RunRecord:
+    with _RUNS_LOCK:
+        try:
+            return _RUNS.pop(handle)
+        except KeyError:
+            raise RuntimeError(
+                f"offloaded-chain run {handle} is no longer live (more than "
+                f"{_MAX_LIVE_RUNS} pullbacks held open, or backward called "
+                "twice); re-run the forward pass") from None
+
+
+def _make_backend(cfg: OffloadConfig):
+    """Returns (backend, tmpdir) — tmpdir is set when we created a temp
+    Level-2 directory that must be removed when the run is disposed."""
+    if cfg.storage == "disk":
+        if cfg.storage_dir is not None:
+            return DiskStorage(cfg.storage_dir), None
+        import tempfile
+
+        directory = tempfile.mkdtemp(prefix="repro_l2_")
+        return DiskStorage(directory), directory
+    if cfg.storage != "ram":
+        raise ValueError(f"unknown storage {cfg.storage!r} (ram|disk)")
+    return RAMStorage(), None
+
+
+# ---------------------------------------------------------------------------
+# per-spec jitted chain operators
+# ---------------------------------------------------------------------------
+
+
+class _Ops:
+    """Jitted forward/backward operators for one (spec, xs-structure)."""
+
+    def __init__(self, spec: ChainSpec, xs_treedef, xs_mask):
+        self.spec = spec
+
+        @jax.jit
+        def fwd(params, state, x, batch):
+            return spec.body(params, state, x, batch)
+
+        @jax.jit
+        def scan_fwd(params, carry0, xs, batch):
+            def step(c, x):
+                return spec.body(params, c, x, batch), None
+
+            carry, _ = lax.scan(step, carry0, xs)
+            return carry
+
+        @jax.jit
+        def bwd(params, state, x_diff, x_nondiff, batch, dcarry, gacc):
+            def f(p, c, xd):
+                x = combine(xd, x_nondiff, xs_treedef, xs_mask)
+                return spec.body(p, c, x, batch)
+
+            _, vjp = jax.vjp(f, params, state, x_diff)
+            dp, dc, dxd = vjp(dcarry)
+            gacc = jax.tree_util.tree_map(jnp.add, gacc, dp)
+            return dc, gacc, dxd
+
+        @jax.jit
+        def zero_grads(params):
+            return jax.tree_util.tree_map(
+                lambda p: jnp.zeros(jnp.shape(p), _dtype_of(p)), params)
+
+        self.fwd = fwd
+        self.scan_fwd = scan_fwd
+        self.bwd = bwd
+        self.zero_grads = zero_grads
+
+
+@functools.lru_cache(maxsize=128)
+def _get_ops(spec: ChainSpec, xs_treedef, xs_mask) -> _Ops:
+    return _Ops(spec, xs_treedef, xs_mask)
+
+
+# ---------------------------------------------------------------------------
+# host-side callbacks (run outside the trace)
+# ---------------------------------------------------------------------------
+
+
+def _resolve_schedule(static: _Static, ops: _Ops, params, carry0, xs, batch,
+                      n: int, backend) -> at.TuneResult:
+    cfg = static.cfg
+    tuner = _TUNERS.get(cfg.tuner_id, at.GLOBAL_TUNER)
+    if cfg.interval is not None:
+        return tuner.manual(static.spec.name, n=n, interval=cfg.interval,
+                            slots=cfg.slots)
+    if cfg.strategy != "multistage_async" or not cfg.autotune or \
+            backend is None:
+        interval = max(1, min(n, 32))
+        return tuner.manual(static.spec.name, n=n, interval=interval,
+                            slots=cfg.slots)
+
+    def forward_step(state, k):
+        return ops.fwd(params, state, index_xs(xs, k), batch)
+
+    tune = tuner.measure(static.spec.name, forward_step=forward_step,
+                         state0=carry0, n=n, backend=backend)
+    if cfg.slots is not None:
+        tune = dataclasses.replace(tune, slots=cfg.slots)
+    return tune
+
+
+def _fwd_callback(static: _Static, params, carry0, xs, batch):
+    spec, cfg = static.spec, static.cfg
+    ops = _get_ops(spec, static.xs_treedef, static.xs_mask)
+    n = chain_length(xs)
+    handle = next(_HANDLES)
+
+    def fwd_op(state, k):
+        return ops.fwd(params, state, index_xs(xs, k), batch)
+
+    if cfg.strategy == "multistage_async":
+        backend, tmpdir = _make_backend(cfg)
+        engine = None
+        try:
+            tune = _resolve_schedule(static, ops, params, carry0, xs, batch,
+                                     n, backend)
+            engine = AsyncTransferEngine(backend)
+            ex = CheckpointExecutor(fwd_op, None)
+            x_n, run = ex.multistage_forward(
+                carry0, n, interval=tune.interval, s_l1=tune.slots,
+                engine=engine)
+        except BaseException:
+            # multistage_forward treats a passed-in engine as borrowed and
+            # won't close it on error — it is ours, so close it here.
+            if engine is not None:
+                engine.close()
+            if tmpdir is not None:
+                shutil.rmtree(tmpdir, ignore_errors=True)
+            raise
+        # the run borrows nothing: it owns the engine and must close it
+        run.own_engine = True
+        _push_run(handle, _RunRecord(cfg.strategy, tune, run, tmpdir=tmpdir))
+    else:
+        tune = _resolve_schedule(static, ops, params, carry0, xs, batch, n,
+                                 None)
+        x_n = ops.scan_fwd(params, carry0, xs, batch)
+        _push_run(handle, _RunRecord(cfg.strategy, tune))
+    _LAST["tune"] = tune
+    return x_n, np.int32(handle)
+
+
+def _bwd_callback(static: _Static, handle, params, carry0, xs, batch, dcarry):
+    spec = static.spec
+    rec = _pop_run(int(handle))
+    ops = _get_ops(spec, static.xs_treedef, static.xs_mask)
+    n = chain_length(xs)
+    xs_diff, xs_nondiff = partition(xs, static.xs_mask)
+    collect_dx = any(static.xs_mask)
+    dx_slices: Dict[int, Any] = {}
+
+    def fwd_op(state, k):
+        return ops.fwd(params, state, index_xs(xs, k), batch)
+
+    def bwd_op(state, adjoint, k):
+        dc, gacc = adjoint
+        xd = [leaf[k] for leaf in xs_diff]
+        xnd = [leaf[k] for leaf in xs_nondiff]
+        dc, gacc, dxd = ops.bwd(params, state, xd, xnd, batch, dc, gacc)
+        if collect_dx:
+            dx_slices[k] = dxd
+        return dc, gacc
+
+    ex = CheckpointExecutor(fwd_op, bwd_op)
+    adjoint0 = (dcarry, ops.zero_grads(params))
+    try:
+        if rec.strategy == "multistage_async":
+            adjoint, stats = ex.multistage_reverse(rec.run, adjoint0)
+        elif rec.strategy == "revolve":
+            adjoint, stats = ex.run_revolve(carry0, n, adjoint0,
+                                            s=rec.tune.slots)
+        else:  # conventional
+            adjoint, stats = ex.run_conventional(carry0, n, adjoint0)
+    finally:
+        rec.dispose()  # idempotent: reverse already closed the run's engine
+    _LAST["stats"] = stats
+    dcarry0, gparams = adjoint
+    dxs_diff = [
+        jnp.stack([dx_slices[k][i] for k in range(n)])
+        for i in range(len(xs_diff))
+    ] if collect_dx else []
+    return gparams, dcarry0, dxs_diff
+
+
+# ---------------------------------------------------------------------------
+# the custom_vjp chain
+# ---------------------------------------------------------------------------
+
+
+def _sds(tree):
+    return jax.tree_util.tree_map(
+        lambda leaf: jax.ShapeDtypeStruct(np.shape(leaf), _dtype_of(leaf)),
+        tree)
+
+
+def _chain_primal(static: _Static, params, carry0, xs, batch):
+    """Primal: semantically just the scan (value-only calls never pay for
+    checkpointing); differentiation swaps in the executor via fwd/bwd."""
+    spec = static.spec
+
+    def step(c, x):
+        return spec.body(params, c, x, batch), None
+
+    carry, _ = lax.scan(step, carry0, xs)
+    return carry
+
+
+_chain = jax.custom_vjp(_chain_primal, nondiff_argnums=(0,))
+
+
+def _chain_fwd(static: _Static, params, carry0, xs, batch):
+    out_sds = jax.eval_shape(
+        functools.partial(_chain_primal, static),
+        params, carry0, xs, batch)
+    for leaf in jax.tree_util.tree_leaves(out_sds):
+        if not _is_inexact(leaf):
+            raise TypeError(
+                "chain carry leaves must be inexact (float) arrays; fold "
+                "integer state into xs/batch instead")
+    carry_n, handle = io_callback(
+        functools.partial(_fwd_callback, static),
+        (out_sds, jax.ShapeDtypeStruct((), np.int32)),
+        params, carry0, xs, batch)
+    return carry_n, (params, carry0, xs, batch, handle)
+
+
+def _chain_bwd(static: _Static, res, dcarry):
+    params, carry0, xs, batch, handle = res
+    xs_diff, xs_nondiff = partition(xs, static.xs_mask)
+    out_sds = (_sds(params), _sds(carry0), _sds(xs_diff))
+    gparams, dcarry0, dxs_diff = io_callback(
+        functools.partial(_bwd_callback, static), out_sds,
+        handle, params, carry0, xs, batch, dcarry)
+    dxs = combine(dxs_diff, [zero_cotangent(leaf) for leaf in xs_nondiff],
+                  static.xs_treedef, static.xs_mask)
+    dbatch = jax.tree_util.tree_map(zero_cotangent, batch)
+    return gparams, dcarry0, dxs, dbatch
+
+
+_chain.defvjp(_chain_fwd, _chain_bwd)
+
+
+# ---------------------------------------------------------------------------
+# public front-end
+# ---------------------------------------------------------------------------
+
+
+def _as_chain_spec(loss_fn) -> Optional[ChainSpec]:
+    if isinstance(loss_fn, ChainSpec):
+        return loss_fn
+    return getattr(loss_fn, "chain_spec", None)
+
+
+def offloaded_loss(spec: ChainSpec, cfg: OffloadConfig
+                   ) -> Callable[[Any, Any], Any]:
+    """The loss with its chain segment rerouted through the checkpointing
+    executor.  Differentiable; prelude/readout gradients flow via ordinary
+    autodiff (stacked-layer cotangents scatter back into params through the
+    prelude's vjp)."""
+
+    def loss(params, batch):
+        carry0, xs = spec.prelude(params, batch)
+        treedef, mask = diff_mask(xs)
+        static = _Static(spec=spec, cfg=cfg, xs_treedef=treedef, xs_mask=mask)
+        carry_n = _chain(static, params, carry0, xs, batch)
+        return spec.readout(params, carry_n, batch)
+
+    return loss
+
+
+def value_and_grad_offloaded(
+    loss_fn,
+    *,
+    strategy: str = "multistage_async",
+    interval: Optional[int] = None,
+    slots: Optional[int] = None,
+    storage: str = "ram",
+    storage_dir: Optional[str] = None,
+    autotune: bool = True,
+    tuner: Optional[at.AutoTuner] = None,
+    fallback: bool = True,
+) -> Callable[[Any, Any], Tuple[Any, Any]]:
+    """Drop-in ``jax.value_and_grad`` with multistage-offloaded backprop.
+
+    ``loss_fn`` is a :class:`ChainSpec`, or a callable carrying one as a
+    ``chain_spec`` attribute (the model factory attaches these).  A plain
+    callable with no chain structure falls back to ``jax.value_and_grad``
+    when ``fallback=True`` (with a warning), so call sites can pass whatever
+    loss they have.
+
+    Returns ``f(params, batch) -> (loss, grads)``.
+
+    Keyword args: ``strategy`` is one of ``multistage_async`` (the paper:
+    async Level-2 stores every ``I`` steps + prefetch, Revolve inside
+    intervals), ``revolve`` (single-stage baseline) or ``conventional``
+    (store everything); ``interval``/``slots`` pin the schedule, otherwise
+    the autotuner measures ``T_A``/``T_T`` on first call and applies §3's
+    ``I = ceil(T_T/T_A)``; ``storage`` picks the Level-2 backend.
+    """
+    spec = _as_chain_spec(loss_fn)
+    if spec is None:
+        if not fallback:
+            raise TypeError(
+                "loss_fn has no chain decomposition (expected a ChainSpec "
+                "or a callable with a .chain_spec attribute)")
+        warnings.warn(
+            "value_and_grad_offloaded: loss has no chain decomposition; "
+            "falling back to jax.value_and_grad (no offloading)",
+            stacklevel=2)
+        return jax.value_and_grad(loss_fn)
+
+    cfg = OffloadConfig(strategy=strategy, interval=interval, slots=slots,
+                        storage=storage, storage_dir=storage_dir,
+                        autotune=autotune, tuner_id=_register_tuner(tuner))
+    vg = jax.value_and_grad(offloaded_loss(spec, cfg))
+    vg.chain_spec = spec
+    vg.offload_config = cfg
+    # keep the weak registry entry alive for as long as the transform is
+    vg.tuner = tuner
+    return vg
+
+
+def checkpointed_bptt(
+    body: Callable[[Any, Any, Any], Tuple[Any, Any]],
+    **opts,
+) -> Callable[[Any, Any, Any], Tuple[Any, Any]]:
+    """BPTT through ``lax.scan``-style chains with offloaded checkpointing.
+
+    ``body(params, carry, x) -> (carry, loss_k)`` is one chain step (an RNN
+    time step, a transformer layer, ...).  Returns
+    ``bptt(params, carry0, xs) -> (total_loss, grads)`` where ``total_loss``
+    is the sum of the per-step losses and ``grads`` matches ``params`` —
+    the multistage counterpart of
+    ``jax.value_and_grad(lambda p: sum-of-scan(body))``.
+
+    Keyword options are those of :func:`value_and_grad_offloaded`.
+    """
+
+    def prelude(params, batch):
+        carry0, xs = batch
+        return (carry0, jnp.zeros((), jnp.float32)), xs
+
+    def chain_body(params, c, x, batch):
+        carry, acc = c
+        carry, loss_k = body(params, carry, x)
+        return carry, acc + jnp.sum(loss_k).astype(jnp.float32)
+
+    def readout(params, c, batch):
+        return c[1]
+
+    spec = ChainSpec(prelude, chain_body, readout,
+                     name=getattr(body, "__name__", "bptt"))
+    vg = value_and_grad_offloaded(spec, **opts)
+
+    def bptt(params, carry0, xs):
+        return vg(params, (carry0, xs))
+
+    bptt.chain_spec = spec
+    return bptt

@@ -96,6 +96,35 @@ class _L1Slots:
         return len(self._slots)
 
 
+@dataclass
+class MultistageRun:
+    """In-flight state of a split forward/reverse multistage execution.
+
+    Produced by :meth:`CheckpointExecutor.multistage_forward`; consumed by
+    :meth:`CheckpointExecutor.multistage_reverse`.  Holds the engine with the
+    (possibly still in-flight) Level-2 boundary stores, so the reverse sweep
+    can start from Level 2 alone — no Level-1 state survives between phases.
+    """
+
+    n: int
+    interval: int
+    s_l1: int
+    engine: AsyncTransferEngine
+    stats: ExecutionStats
+    slots: "_L1Slots"
+    sched: ms.MultistageSchedule
+    rev_actions: list = field(default_factory=list)
+    own_engine: bool = True
+    closed: bool = False
+
+    def close(self) -> None:
+        """Release the Level-2 engine (idempotent; no-op for borrowed
+        engines)."""
+        if not self.closed and self.own_engine:
+            self.engine.close()
+        self.closed = True
+
+
 class CheckpointExecutor:
     def __init__(self, forward_op: ForwardOp, backward_op: BackwardOp):
         self.forward_op = forward_op
@@ -174,14 +203,19 @@ class CheckpointExecutor:
                 stats.backwards += 1
         return adjoint
 
-    def run_multistage(self, state0: Any, n: int, adjoint0: Any, *,
-                       interval: int, s_l1: int,
-                       engine: Optional[AsyncTransferEngine] = None,
-                       final_hook: Optional[Callable[[Any], Any]] = None):
-        """The paper's asynchronous multistage strategy.
+    def multistage_forward(self, state0: Any, n: int, *, interval: int,
+                           s_l1: int,
+                           engine: Optional[AsyncTransferEngine] = None,
+                           ) -> "tuple[Any, MultistageRun]":
+        """Phase 1 of the split multistage API: advance the chain to ``x_n``
+        while the engine asynchronously streams every ``interval``-th state to
+        Level 2.  Returns ``(x_n, run)``; hand ``run`` to
+        :meth:`multistage_reverse` (or call ``run.close()`` to abandon it).
 
-        Returns (adjoint, stats).  ``engine`` defaults to an async engine over
-        host-RAM Level-2 storage.
+        The split exists so a differentiable front-end (``repro.api``) can run
+        the forward pass when autodiff requests the primal and the reverse
+        sweep later, when the cotangent arrives — with the Level-2 stores
+        still in flight in between.
         """
         own_engine = engine is None
         if engine is None:
@@ -189,12 +223,15 @@ class CheckpointExecutor:
         stats = ExecutionStats(n=n)
         slots = _L1Slots(stats)
         sched = ms.multistage_schedule(n, interval, s_l1)
+        fwd_actions, rev_actions = self._split_schedule(sched)
+        run = MultistageRun(n=n, interval=interval, s_l1=s_l1, engine=engine,
+                            stats=stats, slots=slots, sched=sched,
+                            rev_actions=rev_actions, own_engine=own_engine)
         t0 = time.perf_counter()
         try:
             current = state0
             current_idx = 0
-            adjoint = adjoint0
-            for a in sched.actions:
+            for a in fwd_actions:
                 if a.op is MOp.STORE_L2:
                     assert current_idx == a.index, (current_idx, a)
                     engine.store_async(a.index, current)
@@ -203,9 +240,27 @@ class CheckpointExecutor:
                     current = self._advance(current, a.index, a.end, stats)
                     current_idx = a.end
                     slots.note_extra(tree_bytes(current))
-                    if current_idx == n and final_hook is not None:
-                        adjoint = final_hook(current)
-                elif a.op is MOp.WAIT_STORES:
+        except BaseException:
+            run.close()  # don't leak the writer thread / Level-2 states
+            raise
+        stats.l2_stores = engine.num_stores
+        stats.wall_s += time.perf_counter() - t0
+        return current, run
+
+    def multistage_reverse(self, run: "MultistageRun", adjoint0: Any):
+        """Phase 2: join outstanding stores, then reverse the chain segment by
+        segment with double-buffered Level-2 prefetch and Revolve inside each
+        interval.  Returns ``(adjoint, stats)`` and closes the engine if this
+        run owns it.
+        """
+        engine, stats, slots = run.engine, run.stats, run.slots
+        t0 = time.perf_counter()
+        try:
+            current: Any = None
+            current_idx = -1
+            adjoint = adjoint0
+            for a in run.rev_actions:
+                if a.op is MOp.WAIT_STORES:
                     engine.wait_stores()
                 elif a.op is MOp.PREFETCH_L2:
                     engine.prefetch_async(a.index)
@@ -218,7 +273,8 @@ class CheckpointExecutor:
                 elif a.op is MOp.REVERSE_SEGMENT:
                     assert current_idx == a.index, (current_idx, a)
                     adjoint = self._reverse_segment(
-                        a.index, a.end, current, adjoint, sched, slots, stats
+                        a.index, a.end, current, adjoint, run.sched, slots,
+                        stats
                     )
                     current_idx = -1  # consumed
             stats.l2_stores = engine.num_stores
@@ -226,10 +282,37 @@ class CheckpointExecutor:
             stats.store_stall_s = engine.store_stall_s
             stats.prefetch_stall_s = engine.prefetch_stall_s
         finally:
-            if own_engine:
-                engine.close()
-        stats.wall_s = time.perf_counter() - t0
+            run.close()
+        stats.wall_s += time.perf_counter() - t0
         return adjoint, stats
+
+    @staticmethod
+    def _split_schedule(sched: ms.MultistageSchedule):
+        """Partition the flat action stream at the forward/reverse boundary
+        (the WAIT_STORES barrier emitted by ``multistage_schedule``)."""
+        for i, a in enumerate(sched.actions):
+            if a.op is MOp.WAIT_STORES:
+                return sched.actions[:i], sched.actions[i:]
+        return list(sched.actions), []
+
+    def run_multistage(self, state0: Any, n: int, adjoint0: Any, *,
+                       interval: int, s_l1: int,
+                       engine: Optional[AsyncTransferEngine] = None,
+                       final_hook: Optional[Callable[[Any], Any]] = None):
+        """The paper's asynchronous multistage strategy (single-shot form:
+        forward phase, optional loss/adjoint seeding hook on ``x_n``, reverse
+        phase).  Returns (adjoint, stats).  ``engine`` defaults to an async
+        engine over host-RAM Level-2 storage.
+        """
+        x_n, run = self.multistage_forward(state0, n, interval=interval,
+                                           s_l1=s_l1, engine=engine)
+        if final_hook is not None:
+            try:
+                adjoint0 = final_hook(x_n)
+            except BaseException:
+                run.close()
+                raise
+        return self.multistage_reverse(run, adjoint0)
 
     def _reverse_segment(self, b: int, e: int, x_b: Any, adjoint: Any,
                          sched: ms.MultistageSchedule, slots: _L1Slots,

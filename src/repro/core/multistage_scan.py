@@ -27,8 +27,6 @@ activations does not fit in Level 1.
 """
 from __future__ import annotations
 
-import math
-from functools import partial
 from typing import Any, Callable, Optional, Sequence, Tuple
 
 import jax

@@ -14,6 +14,7 @@ the host.  This module centralises those knobs.
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Optional, Sequence
 
 import jax
@@ -109,6 +110,32 @@ def make_policy(name: str) -> Any:
 
 def policy_names() -> Sequence[str]:
     return sorted(_POLICIES)
+
+
+@functools.lru_cache(maxsize=1)
+def host_offload_supported() -> bool:
+    """Whether this backend/jaxlib lowers offload remat policies to host
+    memory-space transfers.
+
+    TPU (and recent GPU) runtimes do; CPU builds typically reject the
+    ``TransferToMemoryKind`` placement or silently keep residuals on device.
+    Callers (``repro.api`` strategy selection, platform-dependent tests) use
+    this to fall back to the thread-based executor path, which works
+    everywhere.
+    """
+    import jax.numpy as jnp
+
+    def f(x):
+        x = checkpoint_name(x, LAYER_INPUT)
+        return jnp.sum(jnp.tanh(x) ** 2)
+
+    try:
+        pol = make_policy("offload_layer")
+        jaxpr = str(jax.make_jaxpr(
+            jax.grad(jax.checkpoint(f, policy=pol)))(jnp.ones((2, 2))))
+        return "<host>" in jaxpr
+    except Exception:
+        return False
 
 
 # ---------------------------------------------------------------------------

@@ -11,7 +11,6 @@ reshard_state.
 from __future__ import annotations
 
 import logging
-import math
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, List, Optional, Tuple

@@ -1,0 +1,2 @@
+"""Entry points: training/serving launchers, dry-run compiler analysis,
+mesh construction and reporting."""

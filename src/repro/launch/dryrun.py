@@ -36,7 +36,6 @@ import traceback
 import jax
 import jax.numpy as jnp
 
-from repro.analysis.jaxpr_cost import jaxpr_cost
 from repro.analysis.roofline import (build_report, collective_bytes,
                                      save_report)
 from repro.configs import applicable_shapes, get_config

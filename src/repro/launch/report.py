@@ -4,7 +4,6 @@
 """
 import argparse
 import json
-from collections import defaultdict
 
 
 def fmt_table(rows, cols, headers=None):

@@ -17,7 +17,6 @@ Two execution paths, both exposed here:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Optional, Tuple
 
 import jax
@@ -122,6 +121,37 @@ def forward_loss(params: Params, tokens: jnp.ndarray) -> jnp.ndarray:
     (h, c, acc), _ = jax.lax.scan(body, (h0, c0, acc0),
                                   jnp.arange(Tp1 - 1))
     return acc
+
+
+# ---------------------------------------------------------------------------
+# Chain decomposition (repro.api): time is the checkpoint chain
+# ---------------------------------------------------------------------------
+
+
+def train_chain(cfg=None):
+    """``repro.api.ChainSpec`` for :func:`forward_loss`: one recurrence per
+    chain step (the paper's §5 setup), carry ``(h, c, loss_acc)``, per-step
+    inputs the (non-differentiated) token/target columns."""
+    from repro.api.chain import ChainSpec
+
+    def prelude(params, batch):
+        tokens = batch["tokens"]
+        B = tokens.shape[0]
+        carry0 = init_state(B, params["w"].shape[1] // 4)
+        xs = (tokens[:, :-1].T, tokens[:, 1:].T)  # (T, B) each
+        return carry0, xs
+
+    def body(params, carry, x, batch):
+        h, c, acc = carry
+        tok, tgt = x
+        h, c, nll = step_loss(params, h, c, tok, tgt)
+        return (h, c, acc + nll)
+
+    def readout(params, carry, batch):
+        return carry[2]
+
+    name = f"{cfg.name}-time" if cfg is not None else "lstm-time"
+    return ChainSpec(prelude, body, readout, name=name)
 
 
 # ---------------------------------------------------------------------------

@@ -13,10 +13,9 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict
+from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.models import encdec, lstm, transformer, vlm
@@ -32,19 +31,33 @@ class ModelAPI:
     prefill: Callable
     decode: Callable
     init_cache: Callable  # (batch, max_len) -> cache pytree
+    # ChainSpec decomposition of train_loss for repro.api's offloaded
+    # autodiff (None when the family has no uniform chain structure yet).
+    train_chain: Any = None
+
+
+def _attach_chain(loss_fn: Callable, chain_spec) -> Callable:
+    """Tag a loss callable with its chain decomposition so
+    ``repro.api.value_and_grad_offloaded(api.train_loss)`` just works."""
+    if chain_spec is not None:
+        loss_fn.chain_spec = chain_spec
+    return loss_fn
 
 
 def get_model(cfg: ArchConfig) -> ModelAPI:
     if cfg.family in ("dense", "moe", "hybrid", "ssm"):
+        chain = transformer.train_chain(cfg)
         return ModelAPI(
             cfg=cfg,
             init=lambda key: transformer.init_lm(key, cfg),
-            train_loss=lambda p, b: transformer.train_loss(p, b, cfg),
+            train_loss=_attach_chain(
+                lambda p, b: transformer.train_loss(p, b, cfg), chain),
             prefill=lambda p, b: transformer.prefill(p, b["tokens"], cfg),
             decode=lambda p, c, b: transformer.decode(
                 p, c, b["tokens"], b["pos"], cfg),
             init_cache=lambda batch, max_len: transformer.init_cache(
                 cfg, batch, max_len),
+            train_chain=chain,
         )
     if cfg.family == "vlm":
         return ModelAPI(
@@ -73,11 +86,13 @@ def get_model(cfg: ArchConfig) -> ModelAPI:
         def _loss(p, b):
             return lstm.forward_loss(p, b["tokens"])
 
+        chain = lstm.train_chain(cfg)
         return ModelAPI(
             cfg=cfg,
             init=lambda key: lstm.init_lstm(key, cfg.vocab, cfg.d_model,
                                             cfg.d_ff),
-            train_loss=_loss,
+            train_loss=_attach_chain(_loss, chain),
             prefill=None, decode=None, init_cache=None,
+            train_chain=chain,
         )
     raise ValueError(f"unknown family {cfg.family!r}")

@@ -17,7 +17,7 @@ chunk axis offloads every I-th chunk state to host memory.
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

@@ -13,8 +13,7 @@ Three entry points per model: ``train_loss``, ``prefill`` and ``decode``
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -187,6 +186,56 @@ def train_loss(params: Params, batch: Dict[str, jnp.ndarray],
                            valid_vocab=cfg.vocab)
     coef = cfg.moe.aux_coef if cfg.moe else 0.0
     return loss + coef * aux / max(1, cfg.n_layers)
+
+
+# ---------------------------------------------------------------------------
+# chain decomposition (repro.api): depth is the checkpoint chain
+# ---------------------------------------------------------------------------
+
+
+def train_chain(cfg: ArchConfig):
+    """``repro.api.ChainSpec`` decomposition of :func:`train_loss`.
+
+    The chain axis is *depth*: one period of the layer pattern is one chain
+    step, the hidden state (plus the MoE aux accumulator) is the carry, and
+    the stacked per-period parameters are the per-step inputs ``xs`` — so
+    their gradients flow back into ``params["layers"]`` through the
+    prelude's vjp.  Values and gradients match ``train_loss`` exactly; only
+    the activation-memory strategy differs.
+    """
+    from repro.api.chain import ChainSpec
+
+    dt = _dtypes(cfg)
+
+    def prelude(params, batch):
+        inp = batch["tokens"][:, :-1]
+        h = embed(params["embed"], inp, dt)
+        if cfg.embed_scale:
+            h = h * jnp.asarray(cfg.d_model ** 0.5, dt.compute)
+        h = constrain(h, "act")
+        return (h, jnp.zeros((), jnp.float32)), params["layers"]
+
+    def body(params, carry, lp, batch):
+        x, aux_t = carry
+        S = batch["tokens"].shape[1] - 1
+        rope = rope_table(S, cfg.hd, cfg.rope_theta)
+        for j, kind in enumerate(cfg.layer_pattern):
+            x, aux = _apply_layer_seq(lp[f"pos{j}"], x, kind, cfg, rope, dt)
+            aux_t = aux_t + aux
+        return x, aux_t
+
+    def readout(params, carry, batch):
+        x, aux_t = carry
+        labels = batch["tokens"][:, 1:]
+        h = rmsnorm(params["final_norm"], x, dt=dt)
+        loss = chunked_ce_loss(h, unembed_weight(params, cfg), labels,
+                               chunk=cfg.ce_chunk, logit_cap=cfg.logit_softcap,
+                               mask=batch.get("mask"),
+                               valid_vocab=cfg.vocab)
+        coef = cfg.moe.aux_coef if cfg.moe else 0.0
+        return loss + coef * aux_t / max(1, cfg.n_layers)
+
+    return ChainSpec(prelude, body, readout, name=f"{cfg.name}-depth")
 
 
 # ---------------------------------------------------------------------------

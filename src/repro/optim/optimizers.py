@@ -8,7 +8,6 @@ what keeps the 42–52B MoE configs inside per-chip HBM under FSDP.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax

@@ -15,7 +15,6 @@ cache — the KV update is in-place).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, Optional
 
 import jax
@@ -51,21 +50,46 @@ def _split_microbatches(batch: Dict[str, jnp.ndarray], k: int):
 def make_train_step(api: ModelAPI, optimizer: Optimizer, *,
                     grad_accum: int = 1, cross_pod: str = "auto",
                     mesh: Optional[Mesh] = None,
-                    donate: bool = True) -> Callable:
+                    donate: bool = True,
+                    strategy: Optional[str] = None,
+                    offload_opts: Optional[Dict[str, Any]] = None) -> Callable:
     """Returns ``step_fn(state, batch) -> (state, metrics)`` (un-jitted; the
     launcher jits with in/out shardings).
 
     ``cross_pod``: "auto" — let GSPMD insert the f32 all-reduce;
     "int8_ef" — shard_map-manual pod axis with compressed reduction
     (requires ``mesh`` with a "pod" axis and ``error_feedback`` state).
+
+    ``strategy``: None — plain ``jax.value_and_grad`` (activation memory set
+    by the model's ``remat_policy``); "multistage_async" / "revolve" /
+    "conventional" — route the backward pass through
+    ``repro.api.value_and_grad_offloaded`` over the model's chain
+    decomposition (``api.train_chain``), keeping peak Level-1 activations
+    O(interval + slots) regardless of depth/sequence length.
+    ``offload_opts`` are forwarded (interval=, slots=, storage=, ...).
     """
 
     def loss_fn(params, batch):
         return api.train_loss(params, batch)
 
+    value_and_grad = jax.value_and_grad(loss_fn)
+    if strategy is not None:
+        if api.train_chain is None:
+            raise ValueError(
+                f"model family {api.cfg.family!r} has no chain decomposition;"
+                " cannot use an offloaded strategy")
+        if grad_accum != 1:
+            raise ValueError(
+                "offloaded strategies handle memory via checkpointing; "
+                "combine with grad_accum is not supported yet")
+        from repro.api import value_and_grad_offloaded
+
+        value_and_grad = value_and_grad_offloaded(
+            api.train_chain, strategy=strategy, **(offload_opts or {}))
+
     def grads_of(params, batch):
         if grad_accum == 1:
-            return jax.value_and_grad(loss_fn)(params, batch)
+            return value_and_grad(params, batch)
         micro = _split_microbatches(batch, grad_accum)
 
         def body(carry, mb):

@@ -1,0 +1,37 @@
+"""Optional-dependency guard for ``hypothesis`` (declared in the ``test``
+extra, see pyproject.toml).
+
+Property-test modules import ``given``/``settings``/``st`` from here instead
+of from ``hypothesis`` directly, so collection never hard-errors when the
+optional dep is missing: with hypothesis installed the real objects are
+re-exported; without it the property tests are individually marked skip
+(the example-based tests in the same module still run).
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without the extra
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _StrategyStub:
+        """Stands in for ``hypothesis.strategies`` at decoration time."""
+
+        def __getattr__(self, name):
+            def _strategy(*args, **kwargs):
+                return None
+
+            return _strategy
+
+    st = _StrategyStub()
+
+    def given(*args, **kwargs):
+        return pytest.mark.skip(
+            reason="hypothesis not installed (pip install -e .[test])")
+
+    def settings(*args, **kwargs):
+        def _decorate(fn):
+            return fn
+
+        return _decorate

@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import pytest
 from jax import lax
 
-from repro.analysis.jaxpr_cost import cost_of_fn, jaxpr_cost
+from repro.analysis.jaxpr_cost import cost_of_fn
 from repro.analysis.roofline import (build_report, collective_bytes,
                                      split_fabric)
 

@@ -15,6 +15,7 @@ KEY = jax.random.PRNGKey(0)
 ALL = ASSIGNED + ["lstm-paper"]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", ALL)
 def test_train_step_smoke(name):
     cfg = get_config(name, smoke=True)
@@ -29,6 +30,7 @@ def test_train_step_smoke(name):
         assert bool(jnp.all(jnp.isfinite(leaf))), name
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", [n for n in ASSIGNED])
 def test_prefill_and_decode_smoke(name):
     cfg = get_config(name, smoke=True)
@@ -52,6 +54,7 @@ def test_prefill_and_decode_smoke(name):
     assert changed
 
 
+@pytest.mark.slow
 def test_prefill_decode_consistency_dense():
     """logits(prefill over t tokens) == logits after t-1 decode steps."""
     cfg = get_config("yi-6b", smoke=True)

@@ -6,8 +6,13 @@ import numpy as np
 import pytest
 from jax import lax
 
+from repro.core import offload as ofl
 from repro.core.multistage_scan import (bptt_grad, choose_interval,
                                         multistage_scan)
+
+requires_host_offload = pytest.mark.skipif(
+    not ofl.host_offload_supported(),
+    reason="backend does not lower host-offload remat policies (needs TPU)")
 
 W = jax.random.normal(jax.random.PRNGKey(0), (16, 16)) * 0.3
 C0 = jax.random.normal(jax.random.PRNGKey(1), (4, 16))
@@ -53,6 +58,7 @@ def test_choose_interval():
     assert choose_interval(17, 4) == 1  # prime length
 
 
+@requires_host_offload
 def test_offload_emits_host_device_put():
     """The boundary carries must be placed on the host in the grad jaxpr —
     this is the paper's Level-2 store, compiled."""
@@ -95,6 +101,7 @@ def test_bptt_grad_params():
                                rtol=1e-4, atol=1e-6)
 
 
+@requires_host_offload
 def test_memory_scales_with_interval_not_length():
     """Compiled analogue of the paper's Fig 4: the live boundary set is
     n/I states; remat keeps the rest transient.  We check the jaxpr-level

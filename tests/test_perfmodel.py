@@ -2,7 +2,7 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # optional dep, see shim
 
 from repro.core import perfmodel as pm
 from repro.core import revolve as rv

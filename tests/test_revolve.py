@@ -1,6 +1,6 @@
 """Revolve: closed form vs DP, schedule optimality, hypothesis invariants."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # optional dep, see shim
 
 from repro.core import revolve as rv
 

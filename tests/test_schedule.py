@@ -1,8 +1,7 @@
 """Multistage schedule: the paper's central claims as executable properties."""
 import math
 
-import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # optional dep, see shim
 
 from repro.core import revolve as rv
 from repro.core import schedule as ms

@@ -2,8 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # optional dep, see shim
 
 from repro.models.layers import DTypes
 from repro.models.ssm import (init_mamba2, mamba2_block, mamba2_decode_step,

@@ -63,6 +63,7 @@ def test_compiled_bptt_matches(lstm_setup):
     _grads_close(g, ref_grad)
 
 
+@pytest.mark.slow
 def test_train_launcher_end_to_end():
     from repro.launch.train import main
     with tempfile.TemporaryDirectory() as d:
@@ -75,6 +76,7 @@ def test_train_launcher_end_to_end():
         assert int(state2["step"]) == 8
 
 
+@pytest.mark.slow
 def test_serve_launcher_end_to_end():
     from repro.launch.serve import main
     toks = main(["--arch", "granite-3-2b", "--smoke", "--batch", "2",
@@ -84,6 +86,7 @@ def test_serve_launcher_end_to_end():
     assert toks.max() < cfg_vocab
 
 
+@pytest.mark.slow
 def test_lstm_training_converges_with_multistage():
     """A few RMSProp steps through the full multistage pipeline must reduce
     the loss on a fixed batch (the paper's §5 training setup, miniature)."""

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # optional dep, see shim
 
 from repro.ckpt import CheckpointManager
 from repro.configs import SMOKE_SHAPE, get_config
@@ -31,6 +31,7 @@ def setup():
     return cfg, api, opt, ds, batch
 
 
+@pytest.mark.slow
 def test_overfits_fixed_batch(setup):
     cfg, api, opt, ds, batch = setup
     state = init_train_state(api, opt, KEY)
@@ -43,6 +44,7 @@ def test_overfits_fixed_batch(setup):
     assert int(state["step"]) == 8
 
 
+@pytest.mark.slow
 def test_grad_accum_matches_full_batch(setup):
     cfg, api, opt, ds, batch = setup
     s0 = init_train_state(api, opt, jax.random.PRNGKey(7))
@@ -55,6 +57,7 @@ def test_grad_accum_matches_full_batch(setup):
 
 @pytest.mark.parametrize("make_opt", [lambda: rmsprop(1e-3),
                                       lambda: sgd(1e-2, momentum=0.9)])
+@pytest.mark.slow
 def test_other_optimizers_reduce_loss(setup, make_opt):
     cfg, api, _, ds, batch = setup
     opt = make_opt()
