@@ -1,14 +1,25 @@
-"""Paper Figure 5: measured recompute factor vs depth on the LSTM.
+"""Paper Figure 5: measured recompute factor vs depth on the LSTM — plus the
+engine comparison the plan -> compile -> execute refactor is for.
 
-Executes all three strategies and reports measured advance counts (the
-recompute factor) plus wall time and Level-2 stall instrumentation — the
-paper's claim is that the async factor stays flat while Revolve's grows.
+Three sections:
 
-Two sections: the raw executor (paper-faithful driver) and the same
-comparison through the ``repro.api`` autodiff front-end
-(``value_and_grad_offloaded``), which must show identical memory behaviour
-while also producing gradients that match plain ``jax.value_and_grad``.
+1. the raw executor (paper-faithful interpreted driver) across strategies,
+   reporting measured advance counts (the recompute factor), wall time,
+   Level-2 stall instrumentation and **host dispatch counts**;
+2. the same comparison through the ``repro.api`` autodiff front-end
+   (``value_and_grad_offloaded``), which must show identical memory
+   behaviour while also producing gradients that match plain
+   ``jax.value_and_grad``;
+3. segment-compiled vs interpreted engine head-to-head at n >= 256: the
+   compiled path must be strictly faster and drop Python dispatches from
+   O(n) to O(n/I) (both asserted).
+
+``main`` returns a JSON-serialisable payload; ``benchmarks/run.py --smoke``
+writes it to ``BENCH_overhead.json`` at the repo root for the CI perf
+trajectory.
 """
+import time
+
 import jax
 import jax.numpy as jnp
 
@@ -43,6 +54,8 @@ def one_depth(depth: int):
         "async_prefetch_stall_ms": st_m.prefetch_stall_s * 1e3,
         "revolve_wall_s": st_r.wall_s,
         "async_wall_s": st_m.wall_s,
+        "revolve_dispatches": st_r.host_dispatches,
+        "async_dispatches": st_m.host_dispatches,
     }
 
 
@@ -57,7 +70,10 @@ def run(depths=(48, 96, 192, 384, 768)):
 
 def one_depth_api(depth: int):
     """Drive all three strategies through ``value_and_grad_offloaded`` and
-    record the executor instrumentation the front-end surfaces."""
+    record the executor instrumentation the front-end surfaces.  The
+    multistage strategy runs on the interpreted engine here so its advance
+    counts stay comparable with the raw-executor section; the compiled
+    engine gets its own head-to-head below."""
     key = jax.random.PRNGKey(0)
     params = init_lstm(key, vocab=96, d_embed=16, d_hidden=64)
     tokens = jax.random.randint(jax.random.fold_in(key, 1), (4, depth + 1),
@@ -73,7 +89,8 @@ def one_depth_api(depth: int):
     for strat, opts in [
         ("conventional", {}),
         ("revolve", dict(slots=S_SLOTS)),
-        ("multistage_async", dict(interval=INTERVAL, slots=S_SLOTS)),
+        ("multistage_async", dict(interval=INTERVAL, slots=S_SLOTS,
+                                  engine="interpreted")),
     ]:
         vg = api.value_and_grad_offloaded(spec, strategy=strat, **opts)
         v, g = vg(params, batch)
@@ -87,6 +104,7 @@ def one_depth_api(depth: int):
         row[f"{short}_R"] = st.recompute_factor
         row[f"{short}_peak_l1"] = st.peak_l1_states
         row[f"{short}_wall_s"] = st.wall_s
+        row[f"{short}_dispatches"] = st.host_dispatches
     return row
 
 
@@ -94,13 +112,69 @@ def run_api(depths=(48, 96, 192)):
     return [one_depth_api(d) for d in depths]
 
 
-def main(smoke: bool = False):
-    rows = run((48, 96) if smoke else (48, 96, 192, 384, 768))
+# ---------------------------------------------------------------------------
+# segment-compiled vs interpreted engine (the refactor's headline claim)
+# ---------------------------------------------------------------------------
+
+
+def engine_comparison(depth: int = 256):
+    """Same chain, same schedule, both engines: the compiled path must cut
+    host dispatches from O(n) to O(n/I) and be strictly faster on the wall
+    clock (warmed up so one-time compilation is excluded — the per-length
+    compile-once property itself is asserted in tests)."""
+    key = jax.random.PRNGKey(0)
+    params = init_lstm(key, vocab=96, d_embed=16, d_hidden=64)
+    tokens = jax.random.randint(jax.random.fold_in(key, 1), (4, depth + 1),
+                                0, 96)
+    batch = {"tokens": tokens}
+    from repro.models.lstm import train_chain
+
+    spec = train_chain()
+    out = {"depth": depth, "interval": INTERVAL}
+    grads = {}
+    for engine in ("interpreted", "compiled"):
+        vg = api.value_and_grad_offloaded(
+            spec, strategy="multistage_async", interval=INTERVAL,
+            slots=S_SLOTS, engine=engine)
+        vg(params, batch)  # warmup: trace + compile everything once
+        t0 = time.perf_counter()
+        v, g = vg(params, batch)
+        jax.block_until_ready((v, g))
+        wall = time.perf_counter() - t0
+        st = api.last_stats()
+        grads[engine] = g
+        out[f"{engine}_wall_s"] = wall
+        out[f"{engine}_dispatches"] = st.host_dispatches
+        out[f"{engine}_R"] = st.recompute_factor
+        out[f"{engine}_peak_l1_states"] = st.peak_l1_states
+    err = max(float(jnp.max(jnp.abs(a - b) / (1.0 + jnp.abs(b))))
+              for a, b in zip(
+                  jax.tree_util.tree_leaves(grads["compiled"]),
+                  jax.tree_util.tree_leaves(grads["interpreted"])))
+    assert err < 1e-4, f"engine gradient mismatch: {err}"
+    # O(n) -> O(n/I): the interpreted engine dispatches per step (forward +
+    # replay + backward), the compiled one twice per segment.
+    num_segments = -(-depth // INTERVAL)
+    assert out["compiled_dispatches"] == 2 * num_segments, out
+    assert out["interpreted_dispatches"] >= 2 * depth, out
+    assert out["compiled_dispatches"] * 4 <= out["interpreted_dispatches"]
+    # the headline: segment compilation beats the per-step interpreter
+    assert out["compiled_wall_s"] < out["interpreted_wall_s"], out
+    out["speedup"] = out["interpreted_wall_s"] / out["compiled_wall_s"]
+    return out
+
+
+def _print_rows(rows):
     cols = list(rows[0])
     print(",".join(cols))
     for r in rows:
         print(",".join(f"{r[c]:.4f}" if isinstance(r[c], float) else str(r[c])
                        for c in cols))
+
+
+def main(smoke: bool = False):
+    rows = run((48, 96) if smoke else (48, 96, 192, 384, 768))
+    _print_rows(rows)
     # measured == model, for both strategies
     for r in rows:
         assert abs(r["revolve_R"] - r["revolve_R_model"]) < 1e-9
@@ -118,11 +192,7 @@ def main(smoke: bool = False):
 
     print("\n# through the api front-end (gradients checked vs autodiff)")
     arows = run_api((48,) if smoke else (48, 96, 192))
-    cols = list(arows[0])
-    print(",".join(cols))
-    for r in arows:
-        print(",".join(f"{r[c]:.4f}" if isinstance(r[c], float) else str(r[c])
-                       for c in cols))
+    _print_rows(arows)
     for r in arows:
         # conventional stores the whole chain; the paper's strategy caps
         # Level-1 at max(interval, slots) regardless of depth
@@ -130,6 +200,15 @@ def main(smoke: bool = False):
         assert r["rev_peak_l1"] <= S_SLOTS
         assert r["async_peak_l1"] <= max(INTERVAL, S_SLOTS)
     assert arows[-1]["async_R"] - arows[0]["async_R"] < 0.05
+
+    print("\n# segment-compiled vs interpreted engine (multistage, n=256)")
+    comparison = engine_comparison(256)
+    _print_rows([comparison])
+    print(f"# compiled engine speedup: {comparison['speedup']:.2f}x, "
+          f"dispatches {comparison['interpreted_dispatches']} -> "
+          f"{comparison['compiled_dispatches']}")
+
+    return {"executor": rows, "api": arows, "engine_comparison": comparison}
 
 
 if __name__ == "__main__":

@@ -1,11 +1,18 @@
 """Benchmark harness — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--smoke]
 
 Each module prints a CSV block and asserts its paper-claim invariants.
+Modules may *return* a JSON-serialisable payload; the overhead benchmark's
+payload (recompute factor, stall seconds, wall time and host-dispatch counts
+per strategy, plus the compiled-vs-interpreted engine comparison) is written
+to ``BENCH_overhead.json`` at the repo root — CI uploads it on main as the
+perf-trajectory artifact.
 """
 import argparse
 import inspect
+import json
+import os
 import sys
 import time
 
@@ -20,6 +27,9 @@ ALL = [
     ("kernel_rooflines", bench_kernels.main),
 ]
 
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OVERHEAD_JSON = os.path.join(REPO_ROOT, "BENCH_overhead.json")
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -28,6 +38,7 @@ def main() -> None:
                     help="reduced workloads for CI (minutes, not hours)")
     args = ap.parse_args()
     failures = []
+    payloads = {}
     for name, fn in ALL:
         if args.only and args.only not in name:
             continue
@@ -37,12 +48,18 @@ def main() -> None:
         print(f"\n== {name} ==")
         t0 = time.time()
         try:
-            fn(**kwargs)
+            payloads[name] = fn(**kwargs)
             print(f"-- ok in {time.time()-t0:.1f}s")
         except Exception as e:  # keep going; report at the end
             import traceback
             traceback.print_exc()
             failures.append((name, repr(e)))
+    overhead = payloads.get("fig5_measured_overhead")
+    if overhead is not None:
+        with open(OVERHEAD_JSON, "w") as f:
+            json.dump({"smoke": args.smoke, "payload": overhead}, f,
+                      indent=2, sort_keys=True)
+        print(f"\nwrote {OVERHEAD_JSON}")
     if failures:
         print("\nBENCH FAILURES:", failures)
         sys.exit(1)

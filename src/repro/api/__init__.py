@@ -6,6 +6,13 @@ drop-in ``jax.value_and_grad``.
     vg = api.value_and_grad_offloaded(model.train_loss)   # or a ChainSpec
     loss, grads = vg(params, batch)                       # O(I + s) Level-1
 
+Gradients run on the plan -> compile -> execute engine: the chain is split
+into per-interval segments (``repro.core.schedule.SegmentPlan``), each
+compiled once into a jitted advance / checkpointed-vjp reverse pair
+(``repro.core.compiled_ops``), and driven with asynchronous Level-2
+store/prefetch by the executor — O(n/I) host dispatches per pass.  Pass
+``engine="interpreted"`` for the step-granular interpreter.
+
 See ``repro.api.frontend`` for the transform, ``repro.api.chain`` for the
 chain decomposition it differentiates, and ``repro.api.autotune`` for the
 §3 schedule selection (``I = ceil(T_T/T_A)``) from measured or roofline
@@ -13,13 +20,15 @@ times.
 """
 from repro.api.autotune import AutoTuner, GLOBAL_TUNER, TuneResult
 from repro.api.chain import ChainSpec, chain_length
-from repro.api.frontend import (OffloadConfig, checkpointed_bptt,
+from repro.api.frontend import (ENGINES, STORAGE_KINDS, STRATEGIES,
+                                OffloadConfig, checkpointed_bptt,
                                 last_stats, last_tune, offloaded_loss,
                                 value_and_grad_offloaded)
 
 __all__ = [
     "AutoTuner", "GLOBAL_TUNER", "TuneResult",
     "ChainSpec", "chain_length",
+    "ENGINES", "STORAGE_KINDS", "STRATEGIES",
     "OffloadConfig", "checkpointed_bptt", "last_stats", "last_tune",
     "offloaded_loss", "value_and_grad_offloaded",
 ]

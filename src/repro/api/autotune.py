@@ -113,13 +113,27 @@ class AutoTuner:
             fn()
         return (time.perf_counter() - t0) / self.repeats
 
-    def measure(self, name: str, *, forward_step: Callable[[Any, int], Any],
-                state0: Any, n: int, backend: Any) -> TuneResult:
-        """Time one chain step and one Level-2 store; derive ``I`` per §3.
+    def measure(self, name: str, *,
+                forward_step: Optional[Callable[[Any, int], Any]] = None,
+                state0: Any, n: int, backend: Any,
+                forward_segment: Optional[Callable[[Any], Any]] = None,
+                segment_len: int = 1) -> TuneResult:
+        """Time the forward compute and one Level-2 store; derive ``I`` per §3.
 
-        ``forward_step(state, k) -> state`` is the executor's forward op
-        (already jitted); ``backend`` is the Level-2 storage backend the run
-        will use (its put/delete pair is what we time).
+        Two probes, matching the two execution engines:
+
+        * ``forward_step(state, k) -> state`` — the step-granular interpreter
+          op; one timed call gives ``T_A`` directly (but includes the per-step
+          Python dispatch overhead).
+        * ``forward_segment(state) -> state`` over ``segment_len`` steps — a
+          compiled ``advance_segment`` probe; ``T_A`` is the segment time
+          divided by its length, i.e. the *amortised* per-step time the
+          segment-compiled engine actually achieves.  This is the honest
+          input to ``I = ceil(T_T/T_A)``: the compiled engine's smaller
+          ``T_A`` correctly yields a larger interval.
+
+        ``backend`` is the Level-2 storage backend the run will use (its
+        put/delete pair is what we time).
         """
         state_bytes = tree_bytes(state0)
         level2 = type(backend).__name__
@@ -127,11 +141,20 @@ class AutoTuner:
         if cached is not None:
             return cached
 
-        def one_step():
-            out = forward_step(state0, 0)
-            jax.block_until_ready(out)
+        if forward_segment is not None:
+            def one_probe():
+                jax.block_until_ready(forward_segment(state0))
 
-        t_a = self._time(one_step)
+            t_a = self._time(one_probe) / max(1, segment_len)
+        else:
+            if forward_step is None:
+                raise TypeError("measure() needs forward_step or "
+                                "forward_segment")
+
+            def one_probe():
+                jax.block_until_ready(forward_step(state0, 0))
+
+            t_a = self._time(one_probe)
 
         tune_key = ("__autotune__", name)
 

@@ -4,12 +4,15 @@
 ``jax.value_and_grad`` is: you hand it a loss, you get back a function
 returning ``(loss, grads)``.  The difference is *how* the backward pass runs:
 
-* the forward chain executes step by step while the ``AsyncTransferEngine``
-  streams every ``I``-th carry to Level-2 storage (host RAM or disk) on a
-  background thread;
+* the forward chain executes as compiled per-interval segments (one jitted
+  ``lax.scan`` call each) while the ``AsyncTransferEngine`` streams every
+  ``I``-th carry to Level-2 storage (host RAM, disk, or int8-compressed) on
+  a background thread;
 * the backward pass replays segments from Level 2 with double-buffered
-  prefetch, running Revolve inside each interval — peak Level-1 memory is
-  ``O(I + s)``, independent of chain length, at a constant recompute factor.
+  prefetch, each reversed by one compiled checkpointed-vjp call — peak
+  Level-1 memory is ``O(I + s)``, independent of chain length, at a constant
+  recompute factor and O(n/I) host dispatches (pass ``engine="interpreted"``
+  for the step-granular paper-faithful interpreter).
 
 Mechanically this is a ``jax.custom_vjp`` whose fwd/bwd rules escape the
 tracer via ``jax.experimental.io_callback``: the traced residual is just the
@@ -45,10 +48,13 @@ from repro.api import autotune as at
 from repro.api.chain import (ChainSpec, chain_length, combine, diff_mask,
                              index_xs, partition, zero_cotangent, _dtype_of,
                              _is_inexact)
+from repro.core.compiled_ops import CompiledChainOps, CompiledSegmentRunner
 from repro.core.executor import CheckpointExecutor, ExecutionStats
-from repro.core.storage import AsyncTransferEngine, DiskStorage, RAMStorage
+from repro.core.storage import AsyncTransferEngine, make_backend
 
 STRATEGIES = ("multistage_async", "revolve", "conventional")
+ENGINES = ("compiled", "interpreted")
+STORAGE_KINDS = ("ram", "disk", "compressed")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,15 +64,20 @@ class OffloadConfig:
     strategy: str = "multistage_async"
     interval: Optional[int] = None    # None -> autotune (I = ceil(T_T/T_A))
     slots: Optional[int] = None       # Level-1 Revolve slots; None -> budget
-    storage: str = "ram"              # "ram" | "disk"
+    storage: str = "ram"              # "ram" | "disk" | "compressed"
     storage_dir: Optional[str] = None
     autotune: bool = True
     tuner_id: int = 0                 # key into the tuner registry
+    engine: str = "compiled"          # "compiled" (per-segment XLA calls) |
+    #                                   "interpreted" (per-step Python ops)
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:
             raise ValueError(
                 f"unknown strategy {self.strategy!r}; known: {STRATEGIES}")
+        if self.engine not in ENGINES:
+            raise ValueError(
+                f"unknown engine {self.engine!r}; known: {ENGINES}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,8 +118,13 @@ class _RunRecord:
     tmpdir: Optional[str] = None      # auto-created disk Level-2 directory
 
     def dispose(self) -> None:
+        # Best-effort: a stale run's pending transfer error (engine.close
+        # re-raises) must never crash the healthy call that evicted it.
         if self.run is not None:
-            self.run.close()
+            try:
+                self.run.close()
+            except Exception:
+                pass
         if self.tmpdir is not None:
             shutil.rmtree(self.tmpdir, ignore_errors=True)
             self.tmpdir = None
@@ -158,18 +174,23 @@ def _pop_run(handle: int) -> _RunRecord:
 
 
 def _make_backend(cfg: OffloadConfig):
-    """Returns (backend, tmpdir) — tmpdir is set when we created a temp
-    Level-2 directory that must be removed when the run is disposed."""
-    if cfg.storage == "disk":
-        if cfg.storage_dir is not None:
-            return DiskStorage(cfg.storage_dir), None
-        import tempfile
+    """Build the Level-2 backend from the pluggable registry
+    (``repro.core.storage.make_backend`` — unknown kinds raise there, so
+    backends added via ``register_backend`` work here unmodified).  Returns
+    (backend, tmpdir) — tmpdir is set when we created a temp Level-2
+    directory that must be removed when the run is disposed."""
+    tmpdir = None
+    kwargs = {}
+    if cfg.storage == "disk" or (cfg.storage == "compressed"
+                                 and cfg.storage_dir is not None):
+        directory = cfg.storage_dir
+        if directory is None:
+            import tempfile
 
-        directory = tempfile.mkdtemp(prefix="repro_l2_")
-        return DiskStorage(directory), directory
-    if cfg.storage != "ram":
-        raise ValueError(f"unknown storage {cfg.storage!r} (ram|disk)")
-    return RAMStorage(), None
+            directory = tempfile.mkdtemp(prefix="repro_l2_")
+            tmpdir = directory
+        kwargs["directory"] = directory
+    return make_backend(cfg.storage, **kwargs), tmpdir
 
 
 # ---------------------------------------------------------------------------
@@ -178,10 +199,15 @@ def _make_backend(cfg: OffloadConfig):
 
 
 class _Ops:
-    """Jitted forward/backward operators for one (spec, xs-structure)."""
+    """Jitted operators for one (spec, xs-structure): per-step forward /
+    backward for the interpreted engine, plus the per-segment compiled ops
+    (``CompiledChainOps``) the segment-compiled engine dispatches.  The LRU
+    over this class *is* the compile cache — a second transform over the same
+    spec reuses every compiled segment."""
 
     def __init__(self, spec: ChainSpec, xs_treedef, xs_mask):
         self.spec = spec
+        self.cops = CompiledChainOps(spec.body, xs_treedef, xs_mask)
 
         @jax.jit
         def fwd(params, state, x, batch):
@@ -240,11 +266,42 @@ def _resolve_schedule(static: _Static, ops: _Ops, params, carry0, xs, batch,
         return tuner.manual(static.spec.name, n=n, interval=interval,
                             slots=cfg.slots)
 
-    def forward_step(state, k):
-        return ops.fwd(params, state, index_xs(xs, k), batch)
+    # T_A depends on the execution engine (amortised compiled segments vs
+    # per-step dispatch), so the engine is part of the tuner cache identity.
+    tune_name = f"{static.spec.name}:{cfg.engine}"
+    if cfg.engine == "compiled":
+        # T_A is the *amortised* per-step time of a compiled segment, not a
+        # per-step dispatch: probe one advance_segment over a short prefix.
+        # Snap the probe length onto a divisor of n so it coincides with a
+        # snap_interval candidate — when the tuner then picks it, the probe
+        # compile is the run's compile, not a throwaway.
+        from repro.core.multistage_scan import choose_interval
 
-    tune = tuner.measure(static.spec.name, forward_step=forward_step,
-                         state0=carry0, n=n, backend=backend)
+        cap = max(1, min(n, 32))
+        cand = choose_interval(n, cap)
+        # don't let a prime-ish n shrink the probe to a few steps — the
+        # amortised measurement needs a real segment
+        probe_len = cand if cand >= min(cap, 8) else cap
+        xs_probe = jax.tree_util.tree_map(lambda leaf: leaf[:probe_len], xs)
+
+        def forward_segment(state):
+            if ops.cops.donates_carry:
+                # advance_segment donates its carry on accelerators; the
+                # probe reuses state0 across repeats, so feed it a copy.
+                state = jax.tree_util.tree_map(
+                    lambda x: jnp.array(x, copy=True), state)
+            return ops.cops.advance_segment(params, state, xs_probe, batch)
+
+        tune = tuner.measure(tune_name,
+                             forward_segment=forward_segment,
+                             segment_len=probe_len,
+                             state0=carry0, n=n, backend=backend)
+    else:
+        def forward_step(state, k):
+            return ops.fwd(params, state, index_xs(xs, k), batch)
+
+        tune = tuner.measure(tune_name, forward_step=forward_step,
+                             state0=carry0, n=n, backend=backend)
     if cfg.slots is not None:
         tune = dataclasses.replace(tune, slots=cfg.slots)
     return tune
@@ -267,14 +324,24 @@ def _fwd_callback(static: _Static, params, carry0, xs, batch):
                                      n, backend)
             engine = AsyncTransferEngine(backend)
             ex = CheckpointExecutor(fwd_op, None)
+            runner = None
+            if cfg.engine == "compiled":
+                # one jitted advance/reverse call per segment (O(n/I) host
+                # dispatches); the runner also collects per-step input
+                # cotangents segment-wise during the reverse sweep
+                runner = CompiledSegmentRunner(ops.cops, params, xs, batch,
+                                               s_l1=tune.slots)
             x_n, run = ex.multistage_forward(
                 carry0, n, interval=tune.interval, s_l1=tune.slots,
-                engine=engine)
+                engine=engine, runner=runner)
         except BaseException:
             # multistage_forward treats a passed-in engine as borrowed and
             # won't close it on error — it is ours, so close it here.
             if engine is not None:
-                engine.close()
+                try:
+                    engine.close()
+                except Exception:
+                    pass
             if tmpdir is not None:
                 shutil.rmtree(tmpdir, ignore_errors=True)
             raise
@@ -313,6 +380,7 @@ def _bwd_callback(static: _Static, handle, params, carry0, xs, batch, dcarry):
 
     ex = CheckpointExecutor(fwd_op, bwd_op)
     adjoint0 = (dcarry, ops.zero_grads(params))
+    runner = rec.run.runner if rec.run is not None else None
     try:
         if rec.strategy == "multistage_async":
             adjoint, stats = ex.multistage_reverse(rec.run, adjoint0)
@@ -325,10 +393,16 @@ def _bwd_callback(static: _Static, handle, params, carry0, xs, batch, dcarry):
         rec.dispose()  # idempotent: reverse already closed the run's engine
     _LAST["stats"] = stats
     dcarry0, gparams = adjoint
-    dxs_diff = [
-        jnp.stack([dx_slices[k][i] for k in range(n)])
-        for i in range(len(xs_diff))
-    ] if collect_dx else []
+    if not collect_dx:
+        dxs_diff = []
+    elif isinstance(runner, CompiledSegmentRunner):
+        # per-segment stacked cotangents, stitched back into full arrays
+        dxs_diff = runner.collect_dx(rec.run.plan)
+    else:
+        dxs_diff = [
+            jnp.stack([dx_slices[k][i] for k in range(n)])
+            for i in range(len(xs_diff))
+        ]
     return gparams, dcarry0, dxs_diff
 
 
@@ -429,6 +503,7 @@ def value_and_grad_offloaded(
     autotune: bool = True,
     tuner: Optional[at.AutoTuner] = None,
     fallback: bool = True,
+    engine: str = "compiled",
 ) -> Callable[[Any, Any], Tuple[Any, Any]]:
     """Drop-in ``jax.value_and_grad`` with multistage-offloaded backprop.
 
@@ -445,7 +520,15 @@ def value_and_grad_offloaded(
     intervals), ``revolve`` (single-stage baseline) or ``conventional``
     (store everything); ``interval``/``slots`` pin the schedule, otherwise
     the autotuner measures ``T_A``/``T_T`` on first call and applies §3's
-    ``I = ceil(T_T/T_A)``; ``storage`` picks the Level-2 backend.
+    ``I = ceil(T_T/T_A)``; ``storage`` picks the Level-2 backend
+    (``"ram"``, ``"disk"``, or ``"compressed"`` — int8-quantised boundary
+    states, ~4x smaller at a bounded precision cost).
+
+    ``engine`` selects how segments execute: ``"compiled"`` (default) runs
+    one jitted ``lax.scan``/checkpointed-vjp call per segment — O(n/I) host
+    dispatches, compiled once per segment length; ``"interpreted"`` is the
+    step-granular paper-faithful interpreter (O(n) dispatches, exact
+    Revolve-optimal advance counts).
     """
     spec = _as_chain_spec(loss_fn)
     if spec is None:
@@ -461,7 +544,8 @@ def value_and_grad_offloaded(
 
     cfg = OffloadConfig(strategy=strategy, interval=interval, slots=slots,
                         storage=storage, storage_dir=storage_dir,
-                        autotune=autotune, tuner_id=_register_tuner(tuner))
+                        autotune=autotune, tuner_id=_register_tuner(tuner),
+                        engine=engine)
     vg = jax.value_and_grad(offloaded_loss(spec, cfg))
     vg.chain_spec = spec
     vg.offload_config = cfg

@@ -15,24 +15,38 @@ the compiled dry-run.
 from repro.core.revolve import (
     beta, optimal_advances, recompute_factor, revolve_schedule,
 )
-from repro.core.schedule import multistage_schedule, multistage_recompute_factor
+from repro.core.schedule import (
+    SegmentPlan, SegmentSpec, multistage_recompute_factor,
+    multistage_schedule, segment_plan,
+)
 from repro.core.perfmodel import (
     HardwareSpec, TPU_V5E, optimal_interval, t_inf, t_revolve, t_async,
     times_from_roofline,
 )
-from repro.core.storage import RAMStorage, DiskStorage, AsyncTransferEngine
-from repro.core.executor import CheckpointExecutor, ExecutionStats
+from repro.core.storage import (
+    AsyncTransferEngine, CompressedStorage, DiskStorage, RAMStorage,
+    make_backend, register_backend,
+)
+from repro.core.executor import (
+    CheckpointExecutor, ExecutionStats, InterpretedSegmentRunner,
+    MultistageRun,
+)
+from repro.core.compiled_ops import CompiledChainOps, CompiledSegmentRunner
 from repro.core.multistage_scan import multistage_scan, bptt_grad, choose_interval
 from repro.core.layer_policy import remat_layer, scan_layers, scan_layers_collect
 from repro.core import offload
 
 __all__ = [
     "beta", "optimal_advances", "recompute_factor", "revolve_schedule",
+    "SegmentPlan", "SegmentSpec", "segment_plan",
     "multistage_schedule", "multistage_recompute_factor",
     "HardwareSpec", "TPU_V5E", "optimal_interval", "t_inf", "t_revolve",
     "t_async", "times_from_roofline",
-    "RAMStorage", "DiskStorage", "AsyncTransferEngine",
-    "CheckpointExecutor", "ExecutionStats",
+    "RAMStorage", "DiskStorage", "CompressedStorage", "AsyncTransferEngine",
+    "make_backend", "register_backend",
+    "CheckpointExecutor", "ExecutionStats", "InterpretedSegmentRunner",
+    "MultistageRun",
+    "CompiledChainOps", "CompiledSegmentRunner",
     "multistage_scan", "bptt_grad", "choose_interval",
     "remat_layer", "scan_layers", "scan_layers_collect",
     "offload",

@@ -1,4 +1,5 @@
-"""pyrevolve-style checkpoint executor (the paper's §4, generalised).
+"""Checkpoint execution engine (the paper's §4, generalised) — the *execute*
+stage of the plan -> compile -> execute pipeline.
 
 The executor drives a *forward operator* and a *backward operator* through a
 checkpointing schedule, exactly like pyrevolve: the user supplies the two
@@ -24,6 +25,17 @@ Three strategies:
 * ``run_multistage``   — the paper's contribution: asynchronous Level-2
   stores every ``interval`` steps + prefetch during the reverse sweep;
   Revolve only *inside* intervals (recompute factor constant in ``n``).
+
+The multistage strategy is a thin driver over the
+:class:`~repro.core.schedule.SegmentPlan` IR: it interleaves
+``AsyncTransferEngine`` store/prefetch events with per-segment work delegated
+to a pluggable **segment runner**:
+
+* :class:`InterpretedSegmentRunner` (default) — walks the segment step by
+  step through ``forward_op``/``backward_op`` (O(n) host dispatches; the
+  paper-faithful interpreter, exact Revolve-optimal advance counts);
+* :class:`~repro.core.compiled_ops.CompiledSegmentRunner` — one jitted call
+  per segment (O(n/I) host dispatches; the fast path the API front-end uses).
 """
 from __future__ import annotations
 
@@ -33,8 +45,8 @@ from typing import Any, Callable, Dict, Optional
 
 from repro.core import revolve as rv
 from repro.core import schedule as ms
-from repro.core.revolve import Action, Op
-from repro.core.schedule import MAction, MOp
+from repro.core.revolve import Op
+from repro.core.schedule import SegmentPlan, SegmentSpec
 from repro.core.storage import AsyncTransferEngine, RAMStorage, tree_bytes
 
 ForwardOp = Callable[[Any, int], Any]
@@ -46,6 +58,7 @@ class ExecutionStats:
     n: int = 0
     advances: int = 0
     backwards: int = 0
+    host_dispatches: int = 0     # Python-level op/segment invocations
     peak_l1_states: int = 0
     peak_l1_bytes: int = 0
     l2_stores: int = 0
@@ -96,6 +109,85 @@ class _L1Slots:
         return len(self._slots)
 
 
+def _exec_revolve(forward_op: ForwardOp, backward_op: BackwardOp, sched,
+                  slots: _L1Slots, adjoint: Any,
+                  stats: ExecutionStats) -> Any:
+    """Interpret a Revolve action stream (used for the single-stage strategy
+    and for Revolve-inside-an-interval sub-plans)."""
+    current: Any = None
+    current_idx = -1
+    for a in sched:
+        if a.op is Op.RESTORE:
+            current = slots.restore(a.index)
+            current_idx = a.index
+        elif a.op is Op.ADVANCE:
+            assert current_idx == a.index, (current_idx, a)
+            for k in range(a.index, a.end):
+                current = forward_op(current, k)
+                stats.advances += 1
+                stats.host_dispatches += 1
+            current_idx = a.end
+        elif a.op is Op.STORE:
+            assert current_idx == a.index, (current_idx, a)
+            slots.store(a.index, current)
+        elif a.op is Op.FREE:
+            slots.free(a.index)
+        elif a.op is Op.BACKWARD:
+            assert current_idx == a.index, (current_idx, a)
+            adjoint = backward_op(current, adjoint, a.index)
+            stats.backwards += 1
+            stats.host_dispatches += 1
+    return adjoint
+
+
+class InterpretedSegmentRunner:
+    """Step-granular segment runner: the paper-faithful Python interpreter.
+
+    One ``forward_op``/``backward_op`` dispatch per chain step; reversal uses
+    the segment's Revolve sub-plan when it does not fit in Level 1, store-all
+    replay otherwise.  Advance counts are exactly Revolve-optimal (asserted
+    in tests); host dispatch count is O(n).
+    """
+
+    def __init__(self, forward_op: ForwardOp,
+                 backward_op: Optional[BackwardOp]):
+        self.forward_op = forward_op
+        self.backward_op = backward_op
+
+    def advance(self, state: Any, seg: SegmentSpec,
+                stats: ExecutionStats) -> Any:
+        for k in range(seg.begin, seg.end):
+            state = self.forward_op(state, k)
+            stats.advances += 1
+            stats.host_dispatches += 1
+        return state
+
+    def reverse(self, x_b: Any, adjoint: Any, seg: SegmentSpec,
+                slots: _L1Slots, stats: ExecutionStats) -> Any:
+        b, e = seg.begin, seg.end
+        if seg.revolve is not None:  # Revolve inside the interval
+            slots.store(b, x_b)
+            adjoint = _exec_revolve(self.forward_op, self.backward_op,
+                                    seg.revolve, slots, adjoint, stats)
+            slots.free(b)
+            return adjoint
+        # Store-all replay: the whole segment fits in Level 1.
+        states = {b: x_b}
+        current = x_b
+        for k in range(b + 1, e):
+            current = self.forward_op(current, k - 1)
+            stats.advances += 1
+            stats.host_dispatches += 1
+            states[k] = current
+            slots.store(k, current)  # accounting only
+        for k in range(e - 1, b - 1, -1):
+            adjoint = self.backward_op(states[k], adjoint, k)
+            stats.backwards += 1
+            stats.host_dispatches += 1
+            slots.free(k)
+        return adjoint
+
+
 @dataclass
 class MultistageRun:
     """In-flight state of a split forward/reverse multistage execution.
@@ -104,6 +196,11 @@ class MultistageRun:
     :meth:`CheckpointExecutor.multistage_reverse`.  Holds the engine with the
     (possibly still in-flight) Level-2 boundary stores, so the reverse sweep
     can start from Level 2 alone — no Level-1 state survives between phases.
+
+    ``plan`` is the :class:`~repro.core.schedule.SegmentPlan` IR both phases
+    drive; ``runner`` is the segment runner chosen at forward time (``None``
+    means the reversing executor builds an interpreted runner from its own
+    operators).
     """
 
     n: int
@@ -112,21 +209,37 @@ class MultistageRun:
     engine: AsyncTransferEngine
     stats: ExecutionStats
     slots: "_L1Slots"
-    sched: ms.MultistageSchedule
-    rev_actions: list = field(default_factory=list)
+    plan: SegmentPlan
+    runner: Any = None
     own_engine: bool = True
     closed: bool = False
 
     def close(self) -> None:
-        """Release the Level-2 engine (idempotent; no-op for borrowed
-        engines)."""
-        if not self.closed and self.own_engine:
-            self.engine.close()
+        """Release this run's Level-2 state (idempotent).
+
+        Boundary keys created by this run are always purged from the backend
+        (they are useless once the run is abandoned or finished); the engine
+        itself is only closed when this run owns it.  ``engine.close()``
+        re-raises pending transfer errors — callers cleaning up after another
+        exception should swallow those (see the executor's error paths).
+        """
+        if self.closed:
+            return
         self.closed = True
+        try:
+            for seg in self.plan.segments:
+                try:
+                    self.engine.delete(seg.begin)
+                except Exception:
+                    pass
+        finally:
+            if self.own_engine:
+                self.engine.close()
 
 
 class CheckpointExecutor:
-    def __init__(self, forward_op: ForwardOp, backward_op: BackwardOp):
+    def __init__(self, forward_op: Optional[ForwardOp] = None,
+                 backward_op: Optional[BackwardOp] = None):
         self.forward_op = forward_op
         self.backward_op = backward_op
 
@@ -135,6 +248,7 @@ class CheckpointExecutor:
         for k in range(b, e):
             state = self.forward_op(state, k)
             stats.advances += 1
+            stats.host_dispatches += 1
         return state
 
     # ------------------------------------------------------------ strategies
@@ -149,12 +263,14 @@ class CheckpointExecutor:
             slots.store(k, state)
             state = self.forward_op(state, k)
             stats.advances += 1
+            stats.host_dispatches += 1
         if final_hook is not None:
             adjoint0 = final_hook(state)
         adjoint = adjoint0
         for k in range(n - 1, -1, -1):
             adjoint = self.backward_op(slots.restore(k), adjoint, k)
             stats.backwards += 1
+            stats.host_dispatches += 1
             slots.free(k)
         stats.wall_s = time.perf_counter() - t0
         return adjoint, stats
@@ -176,41 +292,25 @@ class CheckpointExecutor:
             xn = self._advance(state0, 0, n, stats)
             adjoint0 = final_hook(xn)
         sched = rv.revolve_schedule(n, s)
-        adjoint = self._exec_revolve(sched, slots, adjoint0, stats)
+        adjoint = _exec_revolve(self.forward_op, self.backward_op, sched,
+                                slots, adjoint0, stats)
         stats.wall_s = time.perf_counter() - t0
         return adjoint, stats
-
-    def _exec_revolve(self, sched, slots: _L1Slots, adjoint: Any,
-                      stats: ExecutionStats) -> Any:
-        current: Any = None
-        current_idx = -1
-        for a in sched:
-            if a.op is Op.RESTORE:
-                current = slots.restore(a.index)
-                current_idx = a.index
-            elif a.op is Op.ADVANCE:
-                assert current_idx == a.index, (current_idx, a)
-                current = self._advance(current, a.index, a.end, stats)
-                current_idx = a.end
-            elif a.op is Op.STORE:
-                assert current_idx == a.index, (current_idx, a)
-                slots.store(a.index, current)
-            elif a.op is Op.FREE:
-                slots.free(a.index)
-            elif a.op is Op.BACKWARD:
-                assert current_idx == a.index, (current_idx, a)
-                adjoint = self.backward_op(current, adjoint, a.index)
-                stats.backwards += 1
-        return adjoint
 
     def multistage_forward(self, state0: Any, n: int, *, interval: int,
                            s_l1: int,
                            engine: Optional[AsyncTransferEngine] = None,
+                           runner: Any = None,
                            ) -> "tuple[Any, MultistageRun]":
         """Phase 1 of the split multistage API: advance the chain to ``x_n``
         while the engine asynchronously streams every ``interval``-th state to
         Level 2.  Returns ``(x_n, run)``; hand ``run`` to
         :meth:`multistage_reverse` (or call ``run.close()`` to abandon it).
+
+        ``runner`` selects the segment execution backend — ``None`` builds an
+        :class:`InterpretedSegmentRunner` over this executor's operators; pass
+        a :class:`~repro.core.compiled_ops.CompiledSegmentRunner` for one
+        compiled call per segment.
 
         The split exists so a differentiable front-end (``repro.api``) can run
         the forward pass when autodiff requests the primal and the reverse
@@ -222,26 +322,24 @@ class CheckpointExecutor:
             engine = AsyncTransferEngine(RAMStorage())
         stats = ExecutionStats(n=n)
         slots = _L1Slots(stats)
-        sched = ms.multistage_schedule(n, interval, s_l1)
-        fwd_actions, rev_actions = self._split_schedule(sched)
+        plan = ms.segment_plan(n, interval, s_l1)
         run = MultistageRun(n=n, interval=interval, s_l1=s_l1, engine=engine,
-                            stats=stats, slots=slots, sched=sched,
-                            rev_actions=rev_actions, own_engine=own_engine)
+                            stats=stats, slots=slots, plan=plan,
+                            runner=runner, own_engine=own_engine)
+        fwd_runner = runner if runner is not None else \
+            InterpretedSegmentRunner(self.forward_op, self.backward_op)
         t0 = time.perf_counter()
         try:
             current = state0
-            current_idx = 0
-            for a in fwd_actions:
-                if a.op is MOp.STORE_L2:
-                    assert current_idx == a.index, (current_idx, a)
-                    engine.store_async(a.index, current)
-                elif a.op is MOp.ADVANCE:
-                    assert current_idx == a.index, (current_idx, a)
-                    current = self._advance(current, a.index, a.end, stats)
-                    current_idx = a.end
-                    slots.note_extra(tree_bytes(current))
+            for seg in plan.segments:
+                engine.store_async(seg.begin, current)
+                current = fwd_runner.advance(current, seg, stats)
+                slots.note_extra(tree_bytes(current))
         except BaseException:
-            run.close()  # don't leak the writer thread / Level-2 states
+            try:  # don't leak the writer thread / Level-2 states; don't
+                run.close()  # let cleanup errors mask the original one
+            except Exception:
+                pass
             raise
         stats.l2_stores = engine.num_stores
         stats.wall_s += time.perf_counter() - t0
@@ -249,55 +347,46 @@ class CheckpointExecutor:
 
     def multistage_reverse(self, run: "MultistageRun", adjoint0: Any):
         """Phase 2: join outstanding stores, then reverse the chain segment by
-        segment with double-buffered Level-2 prefetch and Revolve inside each
-        interval.  Returns ``(adjoint, stats)`` and closes the engine if this
-        run owns it.
+        segment with double-buffered Level-2 prefetch and per-segment work
+        delegated to the run's segment runner.  Returns ``(adjoint, stats)``
+        and closes the engine if this run owns it.
         """
         engine, stats, slots = run.engine, run.stats, run.slots
+        runner = run.runner if run.runner is not None else \
+            InterpretedSegmentRunner(self.forward_op, self.backward_op)
+        segs = run.plan.segments
         t0 = time.perf_counter()
         try:
-            current: Any = None
-            current_idx = -1
             adjoint = adjoint0
-            for a in run.rev_actions:
-                if a.op is MOp.WAIT_STORES:
-                    engine.wait_stores()
-                elif a.op is MOp.PREFETCH_L2:
-                    engine.prefetch_async(a.index)
-                elif a.op is MOp.WAIT_PREFETCH:
-                    current = engine.wait_prefetch(a.index)
-                    current_idx = a.index
-                    slots.note_extra(tree_bytes(current))
-                elif a.op is MOp.FREE_L2:
-                    engine.delete(a.index)
-                elif a.op is MOp.REVERSE_SEGMENT:
-                    assert current_idx == a.index, (current_idx, a)
-                    adjoint = self._reverse_segment(
-                        a.index, a.end, current, adjoint, run.sched, slots,
-                        stats
-                    )
-                    current_idx = -1  # consumed
+            engine.wait_stores()
+            # Prefetch the last boundary immediately; then double-buffer.
+            engine.prefetch_async(segs[-1].begin)
+            for j in range(len(segs) - 1, -1, -1):
+                seg = segs[j]
+                if j > 0:
+                    engine.prefetch_async(segs[j - 1].begin)
+                x_b = engine.wait_prefetch(seg.begin)
+                slots.note_extra(tree_bytes(x_b))
+                adjoint = runner.reverse(x_b, adjoint, seg, slots, stats)
+                engine.delete(seg.begin)
             stats.l2_stores = engine.num_stores
             stats.l2_prefetches = engine.num_prefetches
             stats.store_stall_s = engine.store_stall_s
             stats.prefetch_stall_s = engine.prefetch_stall_s
-        finally:
-            run.close()
+        except BaseException:
+            try:
+                run.close()
+            except Exception:
+                pass
+            raise
+        run.close()
         stats.wall_s += time.perf_counter() - t0
         return adjoint, stats
-
-    @staticmethod
-    def _split_schedule(sched: ms.MultistageSchedule):
-        """Partition the flat action stream at the forward/reverse boundary
-        (the WAIT_STORES barrier emitted by ``multistage_schedule``)."""
-        for i, a in enumerate(sched.actions):
-            if a.op is MOp.WAIT_STORES:
-                return sched.actions[:i], sched.actions[i:]
-        return list(sched.actions), []
 
     def run_multistage(self, state0: Any, n: int, adjoint0: Any, *,
                        interval: int, s_l1: int,
                        engine: Optional[AsyncTransferEngine] = None,
+                       runner: Any = None,
                        final_hook: Optional[Callable[[Any], Any]] = None):
         """The paper's asynchronous multistage strategy (single-shot form:
         forward phase, optional loss/adjoint seeding hook on ``x_n``, reverse
@@ -305,34 +394,15 @@ class CheckpointExecutor:
         engine over host-RAM Level-2 storage.
         """
         x_n, run = self.multistage_forward(state0, n, interval=interval,
-                                           s_l1=s_l1, engine=engine)
+                                           s_l1=s_l1, engine=engine,
+                                           runner=runner)
         if final_hook is not None:
             try:
                 adjoint0 = final_hook(x_n)
             except BaseException:
-                run.close()
+                try:
+                    run.close()
+                except Exception:
+                    pass
                 raise
         return self.multistage_reverse(run, adjoint0)
-
-    def _reverse_segment(self, b: int, e: int, x_b: Any, adjoint: Any,
-                         sched: ms.MultistageSchedule, slots: _L1Slots,
-                         stats: ExecutionStats) -> Any:
-        seg = sched.segment_schedules.get(b)
-        if seg is not None:  # Revolve inside the interval
-            slots.store(b, x_b)
-            adjoint = self._exec_revolve(seg, slots, adjoint, stats)
-            slots.free(b)
-            return adjoint
-        # Store-all replay: the whole segment fits in Level 1.
-        states = {b: x_b}
-        current = x_b
-        for k in range(b + 1, e):
-            current = self.forward_op(current, k - 1)
-            stats.advances += 1
-            states[k] = current
-            slots.store(k, current)  # accounting only
-        for k in range(e - 1, b - 1, -1):
-            adjoint = self.backward_op(states[k], adjoint, k)
-            stats.backwards += 1
-            slots.free(k)
-        return adjoint

@@ -212,6 +212,18 @@ def _revolve(b: int, e: int, s: int, out: List[Action]) -> None:
     _revolve(b, mid, s, out)
 
 
+@functools.lru_cache(maxsize=1024)
+def revolve_subplan(n: int, s: int, offset: int = 0) -> tuple:
+    """Immutable Revolve sub-plan for one multistage segment.
+
+    Same action stream as :func:`revolve_schedule`, but returned as a tuple so
+    it can live inside the frozen ``SegmentPlan`` IR (``repro.core.schedule``)
+    and be shared across runs — segments of equal length and offset are
+    planned exactly once per process.
+    """
+    return tuple(revolve_schedule(n, s, offset=offset))
+
+
 # ---------------------------------------------------------------------------
 # Schedule accounting (used by tests and the perf model)
 # ---------------------------------------------------------------------------

@@ -19,9 +19,10 @@ from __future__ import annotations
 import enum
 import math
 from dataclasses import dataclass, field
-from typing import List
+from typing import List, Optional, Tuple
 
 from repro.core import revolve as rv
+from repro.core.revolve import Action
 
 
 class MOp(enum.Enum):
@@ -44,6 +45,98 @@ class MAction:
         if self.op in (MOp.ADVANCE, MOp.REVERSE_SEGMENT):
             return f"{self.op.name}({self.index}->{self.end})"
         return f"{self.op.name}({self.index})"
+
+
+# ---------------------------------------------------------------------------
+# SegmentPlan IR — the *plan* stage of the plan -> compile -> execute engine
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SegmentSpec:
+    """One interval of the chain, with everything needed to run it.
+
+    The forward phase stores ``x_begin`` to Level 2 and advances
+    ``[begin, end)``; the reverse phase prefetches ``x_begin`` back and
+    reverses the segment.  ``revolve`` is the intra-segment Revolve sub-plan
+    (``None`` when the whole segment fits in Level 1, i.e. store-all).
+    """
+
+    sid: int                 # segment ordinal, forward order
+    begin: int               # first step of the segment (== L2 boundary key)
+    end: int                 # exclusive
+    revolve: Optional[Tuple[Action, ...]] = None
+
+    @property
+    def length(self) -> int:
+        return self.end - self.begin
+
+    def __repr__(self) -> str:
+        mode = "revolve" if self.revolve is not None else "store-all"
+        return f"Segment#{self.sid}[{self.begin}:{self.end}|{mode}]"
+
+
+@dataclass(frozen=True)
+class SegmentPlan:
+    """Per-interval plan for an ``n``-step chain: the IR the executor drives
+    and the compile cache is keyed from.
+
+    Segments are listed in forward order; the reverse sweep walks them
+    backwards with double-buffered Level-2 prefetch (while segment ``j`` is
+    reversed, segment ``j-1``'s boundary is already in flight).  The legacy
+    flat ``MAction`` stream (``multistage_schedule``) is *derived* from this
+    plan, so the two can never disagree.
+    """
+
+    n: int
+    interval: int
+    s_l1: int
+    segments: Tuple[SegmentSpec, ...]
+
+    @property
+    def num_segments(self) -> int:
+        return len(self.segments)
+
+    def boundaries(self) -> List[int]:
+        return [seg.begin for seg in self.segments]
+
+    def segment_lengths(self) -> Tuple[int, ...]:
+        """Distinct segment lengths, descending — one compiled
+        advance/reverse pair exists per entry (the tail adds at most one)."""
+        return tuple(sorted({seg.length for seg in self.segments},
+                            reverse=True))
+
+    def reverse_advances(self) -> int:
+        total = 0
+        for seg in self.segments:
+            if seg.revolve is None:   # store-all replay: len-1 advances
+                total += seg.length - 1
+            else:
+                total += rv.count_advances(list(seg.revolve))
+        return total
+
+    def total_advances(self) -> int:
+        return self.n + self.reverse_advances()
+
+
+def segment_plan(n: int, interval: int, s_l1: int) -> SegmentPlan:
+    """Build the SegmentPlan IR for an n-step chain (validates arguments;
+    uneven tail segments are first-class — the last segment is simply
+    shorter)."""
+    if n < 1:
+        raise ValueError(f"need n >= 1, got {n}")
+    if interval < 1:
+        raise ValueError(f"need interval >= 1, got {interval}")
+    if s_l1 < 1:
+        raise ValueError(f"need s_l1 >= 1, got {s_l1}")
+    segments = []
+    for sid, b in enumerate(range(0, n, interval)):
+        e = min(b + interval, n)
+        sub = rv.revolve_subplan(e - b, s_l1, offset=b) if e - b > s_l1 \
+            else None
+        segments.append(SegmentSpec(sid=sid, begin=b, end=e, revolve=sub))
+    return SegmentPlan(n=n, interval=interval, s_l1=s_l1,
+                       segments=tuple(segments))
 
 
 @dataclass
@@ -110,40 +203,35 @@ def multistage_schedule(n: int, interval: int, s_l1: int) -> MultistageSchedule:
 
     If ``n <= interval`` there is only one segment and the schedule degenerates
     to classic Revolve, as §3 of the paper notes.
-    """
-    if n < 1:
-        raise ValueError(f"need n >= 1, got {n}")
-    if interval < 1:
-        raise ValueError(f"need interval >= 1, got {interval}")
-    if s_l1 < 1:
-        raise ValueError(f"need s_l1 >= 1, got {s_l1}")
 
+    The flat action stream is derived from the :class:`SegmentPlan` IR
+    (``segment_plan``) — the plan is the single source of truth; this view of
+    it exists for accounting, tests and debugging.
+    """
+    plan = segment_plan(n, interval, s_l1)
     sched = MultistageSchedule(n=n, interval=interval, s_l1=s_l1)
     acts = sched.actions
-    starts = list(range(0, n, interval))
+    segs = plan.segments
 
     # ---- forward phase ------------------------------------------------------
-    for b in starts:
-        e = min(b + interval, n)
-        acts.append(MAction(MOp.STORE_L2, b))
-        acts.append(MAction(MOp.ADVANCE, b, e))
+    for seg in segs:
+        acts.append(MAction(MOp.STORE_L2, seg.begin))
+        acts.append(MAction(MOp.ADVANCE, seg.begin, seg.end))
     acts.append(MAction(MOp.WAIT_STORES))
 
     # ---- reverse phase ------------------------------------------------------
     # Prefetch the last boundary immediately; then double-buffer.
-    acts.append(MAction(MOp.PREFETCH_L2, starts[-1]))
-    for j in range(len(starts) - 1, -1, -1):
-        b = starts[j]
-        e = min(b + interval, n)
+    acts.append(MAction(MOp.PREFETCH_L2, segs[-1].begin))
+    for j in range(len(segs) - 1, -1, -1):
+        seg = segs[j]
         if j > 0:
-            acts.append(MAction(MOp.PREFETCH_L2, starts[j - 1]))
-        acts.append(MAction(MOp.WAIT_PREFETCH, b))
-        acts.append(MAction(MOp.REVERSE_SEGMENT, b, e))
-        acts.append(MAction(MOp.FREE_L2, b))
-        seg_len = e - b
-        if seg_len > s_l1:
+            acts.append(MAction(MOp.PREFETCH_L2, segs[j - 1].begin))
+        acts.append(MAction(MOp.WAIT_PREFETCH, seg.begin))
+        acts.append(MAction(MOp.REVERSE_SEGMENT, seg.begin, seg.end))
+        acts.append(MAction(MOp.FREE_L2, seg.begin))
+        if seg.revolve is not None:
             # Segment does not fit in L1: Revolve within the interval.
-            sched.segment_schedules[b] = rv.revolve_schedule(seg_len, s_l1, offset=b)
+            sched.segment_schedules[seg.begin] = list(seg.revolve)
 
     return sched
 

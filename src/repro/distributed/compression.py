@@ -39,6 +39,27 @@ def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
     return q.astype(jnp.float32) * scale
 
 
+def quantize_np(x) -> Tuple["np.ndarray", "np.float32"]:
+    """Host-side (pure numpy) twin of :func:`quantize` — same scheme, same
+    error bound, but runs entirely on CPU threads.  Used by the Level-2
+    ``CompressedStorage`` backend, whose background writer/prefetch threads
+    must never enqueue work on the accelerator stream they are meant to
+    overlap with."""
+    import numpy as np
+
+    x32 = np.asarray(x, dtype=np.float32)
+    amax = float(np.max(np.abs(x32))) if x32.size else 0.0
+    scale = np.float32(max(amax, 1e-30) / 127.0)
+    q = np.clip(np.round(x32 / scale), -127, 127)
+    return q.astype(np.int8), scale
+
+
+def dequantize_np(q, scale):
+    import numpy as np
+
+    return np.asarray(q, dtype=np.float32) * np.float32(scale)
+
+
 def compressed_mean(tree: Params, axis_name: str,
                     error: Optional[Params] = None
                     ) -> Tuple[Params, Params]:

@@ -66,7 +66,11 @@ def make_train_step(api: ModelAPI, optimizer: Optimizer, *,
     ``repro.api.value_and_grad_offloaded`` over the model's chain
     decomposition (``api.train_chain``), keeping peak Level-1 activations
     O(interval + slots) regardless of depth/sequence length.
-    ``offload_opts`` are forwarded (interval=, slots=, storage=, ...).
+    ``offload_opts`` are forwarded (interval=, slots=, storage=, engine=,
+    ...); offloaded strategies run on the segment-compiled engine by default
+    (one XLA call per interval — O(n/I) host dispatches per train step), with
+    ``engine="interpreted"`` falling back to the step-granular interpreter
+    and ``storage="compressed"`` int8-quantising Level-2 boundary states.
     """
 
     def loss_fn(params, batch):

@@ -1,0 +1,18 @@
+"""Shared test helpers (the tests directory is on sys.path under pytest)."""
+import jax
+import jax.numpy as jnp
+
+
+def max_rel_err(g, ref):
+    """Elementwise max of |a-b| / (1 + |ref|) over two pytrees.
+
+    Scale-aware so fp32 reassociation (segment-compiled scans sum in a
+    different order than per-step replay) does not register as error on
+    large-magnitude gradients, while small-magnitude comparisons stay
+    effectively absolute."""
+    return max(
+        float(jnp.max(
+            jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))
+            / (1.0 + jnp.abs(b.astype(jnp.float32)))))
+        for a, b in zip(jax.tree_util.tree_leaves(g),
+                        jax.tree_util.tree_leaves(ref)))

@@ -17,11 +17,7 @@ from repro.models import get_model
 KEY = jax.random.PRNGKey(0)
 
 
-def _max_err(g, ref):
-    return max(
-        float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
-        for a, b in zip(jax.tree_util.tree_leaves(g),
-                        jax.tree_util.tree_leaves(ref)))
+from _helpers import max_rel_err as _max_err  # noqa: E402
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,223 @@
+"""Level-2 backend registry, the compressed backend, and the
+AsyncTransferEngine error/shutdown hardening."""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core.storage import (AsyncTransferEngine, CompressedStorage,
+                                DiskStorage, RAMStorage, make_backend,
+                                register_backend, tree_bytes)
+from repro.distributed.compression import quantization_error_bound
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_make_backend_kinds():
+    assert isinstance(make_backend("ram"), RAMStorage)
+    assert make_backend("ram", bandwidth=1e6).bandwidth == 1e6
+    with tempfile.TemporaryDirectory() as d:
+        disk = make_backend("disk", directory=d)
+        assert isinstance(disk, DiskStorage)
+    comp = make_backend("compressed")
+    assert isinstance(comp, CompressedStorage)
+    assert isinstance(comp.inner, RAMStorage)
+    with tempfile.TemporaryDirectory() as d:
+        comp_disk = make_backend("compressed", directory=d)
+        assert isinstance(comp_disk.inner, DiskStorage)
+
+
+def test_make_backend_unknown():
+    with pytest.raises(ValueError, match="unknown Level-2 backend"):
+        make_backend("tape")
+
+
+def test_register_backend_custom():
+    register_backend("null-test", lambda: RAMStorage())
+    assert isinstance(make_backend("null-test"), RAMStorage)
+
+
+def test_registered_backend_reachable_from_frontend():
+    """A backend added via register_backend works straight through
+    value_and_grad_offloaded(storage=...) — the front-end delegates
+    validation to the registry instead of a hardcoded list."""
+    instances = []
+
+    def factory():
+        b = RAMStorage()
+        instances.append(b)
+        return b
+
+    register_backend("tracking-ram", factory)
+    T, B, D = 16, 2, 4
+    params = {"W": jax.random.normal(KEY, (D, D)) * 0.3}
+    xs = jax.random.normal(jax.random.fold_in(KEY, 1), (T, B, D)) * 0.1
+
+    def body(p, c, x):
+        c = jnp.tanh(c @ p["W"] + x)
+        return c, jnp.sum(c ** 2)
+
+    bptt = api.checkpointed_bptt(body, strategy="multistage_async",
+                                 interval=4, slots=2, storage="tracking-ram")
+    v, g = bptt(params, jnp.zeros((B, D)), xs)
+    jax.block_until_ready(g)
+    assert instances and instances[-1].bytes_written > 0
+
+
+# ---------------------------------------------------------------------------
+# compressed backend
+# ---------------------------------------------------------------------------
+
+
+def test_compressed_roundtrip_error_bound():
+    tree = {
+        "big_f32": np.asarray(jax.random.normal(KEY, (64, 64))),
+        "small_f32": np.ones(3, np.float32),          # below min_bytes: raw
+        "ints": np.arange(512, dtype=np.int32),       # never quantised
+        "nested": (np.asarray(jax.random.normal(KEY, (32, 32))) * 7.0,),
+    }
+    store = CompressedStorage(min_bytes=256)
+    store.put("k", tree)
+    got = store.get("k")
+    # structure and dtypes are restored exactly
+    assert jax.tree_util.tree_structure(got) == \
+        jax.tree_util.tree_structure(tree)
+    np.testing.assert_array_equal(got["ints"], tree["ints"])
+    np.testing.assert_array_equal(got["small_f32"], tree["small_f32"])
+    for name in ("big_f32",):
+        bound = quantization_error_bound(tree[name])
+        assert float(np.max(np.abs(got[name] - tree[name]))) <= bound
+        assert got[name].dtype == tree[name].dtype
+    inner = tree["nested"][0]
+    assert float(np.max(np.abs(got["nested"][0] - inner))) <= \
+        quantization_error_bound(inner)
+    # wire accounting: int8 payloads shrink the float bulk ~4x
+    assert store.bytes_written < store.raw_bytes * 0.5
+    store.delete("k")
+    assert "k" not in store
+
+
+def test_compressed_through_engine():
+    backend = CompressedStorage()
+    tree = (np.asarray(jax.random.normal(KEY, (128,))) * 3.0,
+            np.arange(8, dtype=np.int64))
+    with AsyncTransferEngine(backend) as eng:
+        eng.store_async(0, tree)
+        eng.wait_stores()
+        eng.prefetch_async(0)
+        got = eng.wait_prefetch(0)
+    assert float(np.max(np.abs(got[0] - tree[0]))) <= \
+        quantization_error_bound(tree[0])
+    np.testing.assert_array_equal(got[1], tree[1])
+
+
+def test_compressed_storage_end_to_end_gradients():
+    """Offloaded gradients with int8-quantised boundary states: replay
+    starts from a bounded-error state, so gradients are close (not exact)
+    to autodiff — while the loss value (pure forward) stays exact."""
+    T, B, D = 32, 2, 8
+    params = {"W": jax.random.normal(KEY, (D, D)) * 0.3}
+    xs = jax.random.normal(jax.random.fold_in(KEY, 2), (T, B, D)) * 0.1
+    c0 = jnp.zeros((B, D))
+
+    def body(p, c, x):
+        c = jnp.tanh(c @ p["W"] + x)
+        return c, jnp.sum(c ** 2)
+
+    def ref_loss(p):
+        _, ls = jax.lax.scan(lambda c, x: body(p, c, x), c0, xs)
+        return jnp.sum(ls)
+
+    ref_v, ref_g = jax.value_and_grad(ref_loss)(params)
+    bptt = api.checkpointed_bptt(body, strategy="multistage_async",
+                                 interval=8, slots=4, storage="compressed")
+    v, g = bptt(params, c0, xs)
+    np.testing.assert_allclose(float(v), float(ref_v), rtol=1e-6)
+    err = float(jnp.max(jnp.abs(g["W"] - ref_g["W"])))
+    assert 0.0 < err < 5e-2  # bounded quantisation effect, not corruption
+
+
+# ---------------------------------------------------------------------------
+# engine error surfacing + shutdown robustness
+# ---------------------------------------------------------------------------
+
+
+class FailingBackend(RAMStorage):
+    def __init__(self, fail_puts=True, fail_gets=False):
+        super().__init__()
+        self.fail_puts = fail_puts
+        self.fail_gets = fail_gets
+
+    def put(self, key, tree):
+        if self.fail_puts:
+            raise IOError(f"put({key}) failed")
+        super().put(key, tree)
+
+    def get(self, key):
+        if self.fail_gets:
+            raise IOError(f"get({key}) failed")
+        return super().get(key)
+
+
+def _tree():
+    return {"a": np.ones((4, 4), np.float32)}
+
+
+def test_store_error_surfaces_on_wait_stores():
+    eng = AsyncTransferEngine(FailingBackend())
+    eng.store_async(0, _tree())
+    with pytest.raises(IOError, match="put"):
+        eng.wait_stores()
+    # error consumed: shutdown is then clean
+    eng.close()
+
+
+def test_store_error_surfaces_on_demand_fetch():
+    """The demand-fetch fallback in wait_prefetch must surface pending
+    writer errors instead of dying on a confusing KeyError."""
+    eng = AsyncTransferEngine(FailingBackend())
+    eng.store_async(0, _tree())
+    eng._join_stores()  # let the writer consume the item and record the error
+    with pytest.raises(IOError, match="put"):
+        eng.wait_prefetch(0)   # never prefetched -> demand path
+    eng.close()
+
+
+def test_prefetch_error_surfaces_on_wait():
+    backend = FailingBackend(fail_puts=False, fail_gets=True)
+    eng = AsyncTransferEngine(backend)
+    eng.store_async(0, _tree())
+    eng.wait_stores()
+    eng.prefetch_async(0)
+    with pytest.raises(IOError, match="get"):
+        eng.wait_prefetch(0)
+    eng.close()
+
+
+def test_close_survives_dead_writer():
+    """close() must not deadlock on Queue.join() when the writer thread died
+    with items still queued — it times out, raises, and leaves no thread."""
+    eng = AsyncTransferEngine(RAMStorage())
+    eng._stop.set()            # simulate writer death
+    eng._writer.join(timeout=2.0)
+    assert not eng._writer.is_alive()
+    eng.store_async(0, _tree())   # lands in the queue, never drained
+    with pytest.raises(RuntimeError, match="writer thread died"):
+        eng.close()
+
+
+def test_close_is_idempotent_after_error():
+    eng = AsyncTransferEngine(FailingBackend())
+    eng.store_async(0, _tree())
+    with pytest.raises(IOError):
+        eng.wait_stores()
+    eng.close()
+    eng.close()
