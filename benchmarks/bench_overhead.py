@@ -10,9 +10,12 @@ Three sections:
    (``value_and_grad_offloaded``), which must show identical memory
    behaviour while also producing gradients that match plain
    ``jax.value_and_grad``;
-3. segment-compiled vs interpreted engine head-to-head at n >= 256: the
-   compiled path must be strictly faster and drop Python dispatches from
-   O(n) to O(n/I) (both asserted).
+3. compiled / interpreted / scan engine head-to-head at n >= 256 over one
+   shared SegmentPlan: the XLA engines must be strictly faster than the
+   interpreter and drop Python dispatches from O(n) to O(n/I) (compiled)
+   and to O(1) (trace-native scan); peak *host* bytes are recorded so
+   BENCH_overhead.json tracks the Level-2 footprint across PRs (the
+   executor's measured high-water mark must equal the plan's model).
 
 ``main`` returns a JSON-serialisable payload; ``benchmarks/run.py --smoke``
 writes it to ``BENCH_overhead.json`` at the repo root for the CI perf
@@ -113,54 +116,96 @@ def run_api(depths=(48, 96, 192)):
 
 
 # ---------------------------------------------------------------------------
-# segment-compiled vs interpreted engine (the refactor's headline claim)
+# compiled vs interpreted vs scan engine (the refactor's headline claim)
 # ---------------------------------------------------------------------------
 
 
 def engine_comparison(depth: int = 256):
-    """Same chain, same schedule, both engines: the compiled path must cut
-    host dispatches from O(n) to O(n/I) and be strictly faster on the wall
-    clock (warmed up so one-time compilation is excluded — the per-length
-    compile-once property itself is asserted in tests)."""
+    """Same chain, same SegmentPlan, all three engines: wall clock, host
+    dispatches, recompute factor, peak Level-1 states and — the Level-2
+    footprint across PRs — peak *host* bytes.  The compiled path must cut
+    dispatches from O(n) to O(n/I); the trace-native scan path runs the
+    whole pass as one XLA call and must also beat the interpreter on the
+    wall clock (everything warmed up so one-time compilation is excluded).
+
+    The scan engine's schedule executes inside XLA, so its R / peak-L1 /
+    host-bytes entries are the plan's model values (identical plan by
+    construction — asserted via ``api.last_plan``); the executor engines
+    report measured values, letting the JSON artifact track model-vs-measured
+    drift across PRs.
+    """
+    from repro.core import schedule as ms_sched
+    from repro.core.storage import tree_bytes
+    from repro.models.lstm import train_chain
+
     key = jax.random.PRNGKey(0)
     params = init_lstm(key, vocab=96, d_embed=16, d_hidden=64)
     tokens = jax.random.randint(jax.random.fold_in(key, 1), (4, depth + 1),
                                 0, 96)
     batch = {"tokens": tokens}
-    from repro.models.lstm import train_chain
 
     spec = train_chain()
-    out = {"depth": depth, "interval": INTERVAL}
+    carry0, _ = spec.prelude(params, batch)
+    state_bytes = tree_bytes(carry0)
+    out = {"depth": depth, "interval": INTERVAL,
+           "state_bytes": state_bytes}
     grads = {}
-    for engine in ("interpreted", "compiled"):
+    plans = {}
+    for engine in ("interpreted", "compiled", "scan"):
         vg = api.value_and_grad_offloaded(
             spec, strategy="multistage_async", interval=INTERVAL,
             slots=S_SLOTS, engine=engine)
+        if engine == "scan":
+            vg = jax.jit(vg)   # trace-native: the whole pass is one XLA call
         vg(params, batch)  # warmup: trace + compile everything once
         t0 = time.perf_counter()
         v, g = vg(params, batch)
         jax.block_until_ready((v, g))
         wall = time.perf_counter() - t0
-        st = api.last_stats()
         grads[engine] = g
+        plan = api.last_plan()
+        plans[engine] = plan
         out[f"{engine}_wall_s"] = wall
-        out[f"{engine}_dispatches"] = st.host_dispatches
-        out[f"{engine}_R"] = st.recompute_factor
-        out[f"{engine}_peak_l1_states"] = st.peak_l1_states
-    err = max(float(jnp.max(jnp.abs(a - b) / (1.0 + jnp.abs(b))))
-              for a, b in zip(
-                  jax.tree_util.tree_leaves(grads["compiled"]),
-                  jax.tree_util.tree_leaves(grads["interpreted"])))
-    assert err < 1e-4, f"engine gradient mismatch: {err}"
-    # O(n) -> O(n/I): the interpreted engine dispatches per step (forward +
-    # replay + backward), the compiled one twice per segment.
-    num_segments = -(-depth // INTERVAL)
+        if engine == "scan":
+            # schedule compiled into the graph: model values from the plan
+            out[f"{engine}_dispatches"] = 1
+            out[f"{engine}_R"] = plan.total_advances() / (depth - 1)
+            out[f"{engine}_peak_l1_states"] = max(plan.interval, plan.s_l1)
+            out[f"{engine}_host_peak_bytes"] = \
+                plan.num_segments * state_bytes
+        else:
+            st = api.last_stats()
+            out[f"{engine}_dispatches"] = st.host_dispatches
+            out[f"{engine}_R"] = st.recompute_factor
+            out[f"{engine}_peak_l1_states"] = st.peak_l1_states
+            out[f"{engine}_host_peak_bytes"] = st.l2_peak_bytes
+    # one planner: every engine executed the identical SegmentPlan
+    ref_plan = ms_sched.segment_plan(depth, INTERVAL, S_SLOTS)
+    for engine, plan in plans.items():
+        assert plan.boundaries() == ref_plan.boundaries(), engine
+    # gradients agree pairwise
+    for a, b in (("compiled", "interpreted"), ("scan", "interpreted")):
+        err = max(float(jnp.max(jnp.abs(x - y) / (1.0 + jnp.abs(y))))
+                  for x, y in zip(jax.tree_util.tree_leaves(grads[a]),
+                                  jax.tree_util.tree_leaves(grads[b])))
+        assert err < 1e-4, f"{a} vs {b} gradient mismatch: {err}"
+    # O(n) -> O(n/I) -> O(1): the interpreted engine dispatches per step,
+    # the compiled one twice per segment, the scan engine once per pass.
+    num_segments = ref_plan.num_segments
     assert out["compiled_dispatches"] == 2 * num_segments, out
     assert out["interpreted_dispatches"] >= 2 * depth, out
     assert out["compiled_dispatches"] * 4 <= out["interpreted_dispatches"]
-    # the headline: segment compilation beats the per-step interpreter
+    assert out["scan_dispatches"] == 1
+    # Level-2 footprint: the executor's measured high-water mark equals the
+    # plan's model (every boundary live at the end of the forward sweep)
+    expected_host = num_segments * state_bytes
+    assert out["compiled_host_peak_bytes"] == expected_host, out
+    assert out["interpreted_host_peak_bytes"] == expected_host, out
+    # the headline: both XLA engines beat the per-step interpreter
     assert out["compiled_wall_s"] < out["interpreted_wall_s"], out
+    assert out["scan_wall_s"] < out["interpreted_wall_s"], out
     out["speedup"] = out["interpreted_wall_s"] / out["compiled_wall_s"]
+    out["scan_speedup"] = out["interpreted_wall_s"] / out["scan_wall_s"]
     return out
 
 
@@ -201,12 +246,16 @@ def main(smoke: bool = False):
         assert r["async_peak_l1"] <= max(INTERVAL, S_SLOTS)
     assert arows[-1]["async_R"] - arows[0]["async_R"] < 0.05
 
-    print("\n# segment-compiled vs interpreted engine (multistage, n=256)")
+    print("\n# compiled / interpreted / scan engine head-to-head "
+          "(multistage, n=256)")
     comparison = engine_comparison(256)
     _print_rows([comparison])
     print(f"# compiled engine speedup: {comparison['speedup']:.2f}x, "
+          f"scan engine speedup: {comparison['scan_speedup']:.2f}x, "
           f"dispatches {comparison['interpreted_dispatches']} -> "
-          f"{comparison['compiled_dispatches']}")
+          f"{comparison['compiled_dispatches']} -> "
+          f"{comparison['scan_dispatches']}; Level-2 peak "
+          f"{comparison['compiled_host_peak_bytes']/1e6:.2f} MB host")
 
     return {"executor": rows, "api": arows, "engine_comparison": comparison}
 

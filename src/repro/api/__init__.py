@@ -11,7 +11,10 @@ into per-interval segments (``repro.core.schedule.SegmentPlan``), each
 compiled once into a jitted advance / checkpointed-vjp reverse pair
 (``repro.core.compiled_ops``), and driven with asynchronous Level-2
 store/prefetch by the executor — O(n/I) host dispatches per pass.  Pass
-``engine="interpreted"`` for the step-granular interpreter.
+``engine="interpreted"`` for the step-granular interpreter, or
+``engine="scan"`` for the trace-native path (one XLA call, composes with
+``jax.jit`` / ``jax.vmap`` / mesh sharding) — all engines execute the
+same ``SegmentPlan`` (``api.last_plan()``).
 
 See ``repro.api.frontend`` for the transform, ``repro.api.chain`` for the
 chain decomposition it differentiates, and ``repro.api.autotune`` for the
@@ -22,13 +25,14 @@ from repro.api.autotune import AutoTuner, GLOBAL_TUNER, TuneResult
 from repro.api.chain import ChainSpec, chain_length
 from repro.api.frontend import (ENGINES, STORAGE_KINDS, STRATEGIES,
                                 OffloadConfig, checkpointed_bptt,
-                                last_stats, last_tune, offloaded_loss,
-                                value_and_grad_offloaded)
+                                last_plan, last_stats, last_tune,
+                                offloaded_loss, value_and_grad_offloaded)
 
 __all__ = [
     "AutoTuner", "GLOBAL_TUNER", "TuneResult",
     "ChainSpec", "chain_length",
     "ENGINES", "STORAGE_KINDS", "STRATEGIES",
-    "OffloadConfig", "checkpointed_bptt", "last_stats", "last_tune",
+    "OffloadConfig", "checkpointed_bptt", "last_plan", "last_stats",
+    "last_tune",
     "offloaded_loss", "value_and_grad_offloaded",
 ]

@@ -15,10 +15,13 @@ Two ways to obtain ``(T_A, T_T)``:
   ``repro.core.perfmodel.times_from_roofline`` (the dry-run path; no
   execution needed).
 
-The measured interval is snapped with ``choose_interval`` onto a divisor of
-the chain length when one exists nearby (the compiled ``multistage_scan``
-path requires exact divisibility; the executor path merely prefers even
-segments), and the result is cached so subsequent steps pay nothing.
+The measured interval is snapped with ``choose_interval`` onto a nearby
+divisor of the chain length when one exists (even segments mean one
+compiled/trace segment variant instead of two — uneven tails are otherwise
+first-class in the ``SegmentPlan`` IR), and the result is cached so
+subsequent steps pay nothing.  Every engine shares the cache; the engine is
+part of the cached name (``"<spec>:compiled"`` / ``":interpreted"`` /
+``":scan"``) because each engine's ``T_A``/``T_T`` probes differ.
 """
 from __future__ import annotations
 
@@ -27,11 +30,16 @@ import threading
 import time
 from typing import Any, Callable, Dict, Optional, Tuple
 
-import jax
+import numpy as np
 
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import offload as ofl
 from repro.core.multistage_scan import choose_interval
-from repro.core.perfmodel import (HardwareSpec, StepTimes, optimal_interval,
-                                  times_from_roofline)
+from repro.core.perfmodel import (KNL, TPU_V5E, HardwareSpec, StepTimes,
+                                  optimal_interval, times_from_roofline)
 from repro.core.storage import tree_bytes
 
 
@@ -53,13 +61,32 @@ class TuneResult:
 
 
 def snap_interval(n: int, target: int) -> int:
-    """Snap the §3 optimum onto the chain: prefer the largest divisor of
-    ``n`` that is <= target (even segments, compiled-path compatible), but
+    """Snap the §3 optimum onto the chain: prefer a nearby divisor of ``n``
+    (even segments — one compiled/trace segment variant instead of two), but
     never shrink below half the optimum — a too-small interval stalls the
-    forward pass on stores (e.g. prime ``n`` would otherwise snap to 1)."""
-    target = max(1, min(target, n))
-    d = choose_interval(n, target)
-    return d if d >= max(1, target // 2) else target
+    forward pass on stores.  Uneven tails are first-class in the
+    :class:`~repro.core.schedule.SegmentPlan` IR, so for prime ``n`` the
+    optimum itself is kept (``choose_interval`` no longer degrades to 1)."""
+    return choose_interval(n, target)
+
+
+def _aval_dtype(leaf: Any) -> np.dtype:
+    dt = getattr(leaf, "dtype", None)
+    return dt if dt is not None else np.asarray(leaf).dtype
+
+
+def _aval_bytes(tree: Any) -> int:
+    """``tree_bytes`` from shapes/dtypes alone — works on tracers."""
+    return int(sum(
+        int(np.prod(np.shape(leaf), dtype=np.int64))
+        * np.dtype(_aval_dtype(leaf)).itemsize
+        for leaf in jax.tree_util.tree_leaves(tree)))
+
+
+def _zeros_of(tree: Any) -> Any:
+    """Concrete zero-filled stand-in for a (possibly traced) pytree."""
+    return jax.tree_util.tree_map(
+        lambda leaf: jnp.zeros(np.shape(leaf), _aval_dtype(leaf)), tree)
 
 
 def default_slots(interval: int, l1_budget_states: int = 16) -> int:
@@ -163,6 +190,75 @@ class AutoTuner:
 
         t_t = self._time(one_store)
         backend.delete(tune_key)
+
+        interval = snap_interval(n, optimal_interval(t_t, t_a))
+        slots = default_slots(interval, self.l1_budget_states)
+        return self.store(name, n, state_bytes, level2, TuneResult(
+            interval=interval, slots=slots, t_a=t_a, t_t=t_t,
+            state_bytes=state_bytes, n=n, source="measured"))
+
+    # ------------------------------------------------------- scan engine
+    def measure_scan(self, name: str, *, body: Callable[..., Any],
+                     params: Any, carry0: Any, xs: Any, batch: Any,
+                     n: int, segment_len: int = 32) -> TuneResult:
+        """Schedule for the trace-native scan engine.
+
+        The scan engine resolves its schedule at *trace* time — ``params`` /
+        ``carry0`` / ``xs`` / ``batch`` may be tracers, so every probe runs
+        on zero-filled stand-ins built from shapes/dtypes alone (constant
+        creation is eager even inside a trace).  Two probes:
+
+        * ``T_A`` — the amortised per-step time of one jitted ``lax.scan``
+          segment of ``segment_len`` steps, i.e. the compute rate the scan
+          engine's compiled segments actually achieve;
+        * ``T_T`` — a measured device->host ``device_put`` of the boundary
+          state when the backend lowers host memory spaces (the XLA
+          copy-start/copy-done path the offload policy compiles to),
+          otherwise the §3 roofline estimate ``state_bytes / d2h_bw`` from
+          the hardware table.
+
+        Results share the cross-engine tuner cache: the key's Level-2 kind
+        is ``"xla_host"`` / ``"roofline-<hw>"``, and callers put the engine
+        in ``name`` (the front-end passes ``"<spec>:scan"``), so a
+        scan-tuned interval is never reused for the threaded backends.
+        """
+        state_bytes = _aval_bytes(carry0)
+        offloads = ofl.host_offload_supported()
+        hw = TPU_V5E if jax.default_backend() == "tpu" else KNL
+        level2 = "xla_host" if offloads else f"roofline-{hw.name}"
+        cached = self.lookup(name, n, state_bytes, level2)
+        if cached is not None:
+            return cached
+
+        segment_len = max(1, min(segment_len, n))
+        zp, zc, zb = _zeros_of(params), _zeros_of(carry0), _zeros_of(batch)
+        zxs = jax.tree_util.tree_map(
+            lambda leaf: jnp.zeros(
+                (segment_len,) + tuple(np.shape(leaf)[1:]), _aval_dtype(leaf)),
+            xs)
+
+        @jax.jit
+        def probe(p, c, xs_, b):
+            def step(c_, x):
+                return body(p, c_, x, b), None
+
+            c, _ = lax.scan(step, c, xs_)
+            return c
+
+        t_a = self._time(
+            lambda: jax.block_until_ready(probe(zp, zc, zxs, zb))
+        ) / segment_len
+
+        if offloads:
+            mem = jax.devices()[0].memory(ofl.HOST)
+
+            def one_store():
+                jax.block_until_ready(jax.tree_util.tree_map(
+                    lambda x: jax.device_put(x, mem), zc))
+
+            t_t = self._time(one_store)
+        else:
+            t_t = state_bytes / hw.d2h_bw
 
         interval = snap_interval(n, optimal_interval(t_t, t_a))
         slots = default_slots(interval, self.l1_budget_states)

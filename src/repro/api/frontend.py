@@ -22,6 +22,13 @@ with ``jax.value_and_grad`` / ``jax.jit`` like any other JAX function, while
 the actual store/prefetch machinery stays the paper-faithful threaded
 executor (``repro.core.executor``).
 
+``engine="scan"`` swaps that machinery for the trace-native path: the chain
+is rewritten as a plan-driven ``multistage_scan`` (``jax.checkpoint``
+segments whose boundary carries the compiler offloads to pinned host
+memory), so nothing escapes the trace and the transform additionally
+composes with ``jax.vmap`` and mesh sharding.  All three engines execute
+the same ``SegmentPlan`` (``api.last_plan()``).
+
 The schedule ``(I, s)`` is chosen by ``repro.api.autotune`` from measured
 ``T_A``/``T_T`` on the first call (``I = ceil(T_T/T_A)``, §3) and cached per
 (model, seq-len, hardware); pass ``interval=`` to pin it manually.
@@ -48,12 +55,15 @@ from repro.api import autotune as at
 from repro.api.chain import (ChainSpec, chain_length, combine, diff_mask,
                              index_xs, partition, zero_cotangent, _dtype_of,
                              _is_inexact)
+from repro.core import offload as ofl
+from repro.core import schedule as ms
 from repro.core.compiled_ops import CompiledChainOps, CompiledSegmentRunner
 from repro.core.executor import CheckpointExecutor, ExecutionStats
+from repro.core.multistage_scan import multistage_scan
 from repro.core.storage import AsyncTransferEngine, make_backend
 
 STRATEGIES = ("multistage_async", "revolve", "conventional")
-ENGINES = ("compiled", "interpreted")
+ENGINES = ("compiled", "interpreted", "scan")
 STORAGE_KINDS = ("ram", "disk", "compressed")
 
 
@@ -69,7 +79,8 @@ class OffloadConfig:
     autotune: bool = True
     tuner_id: int = 0                 # key into the tuner registry
     engine: str = "compiled"          # "compiled" (per-segment XLA calls) |
-    #                                   "interpreted" (per-step Python ops)
+    #                                   "interpreted" (per-step Python ops) |
+    #                                   "scan" (trace-native, one XLA call)
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:
@@ -78,6 +89,17 @@ class OffloadConfig:
         if self.engine not in ENGINES:
             raise ValueError(
                 f"unknown engine {self.engine!r}; known: {ENGINES}")
+        if self.engine == "scan":
+            if self.strategy != "multistage_async":
+                raise ValueError(
+                    "engine='scan' implements the multistage_async strategy "
+                    f"only, got strategy={self.strategy!r}")
+            if self.storage != "ram":
+                raise ValueError(
+                    "engine='scan' keeps Level-2 state in XLA host memory "
+                    "(pinned_host); the pluggable storage backends "
+                    f"({STORAGE_KINDS[1:]}) apply to the executor engines "
+                    "only")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -138,18 +160,30 @@ _HANDLES = itertools.count(1)
 # run per offloaded chain between its forward and backward passes.
 _MAX_LIVE_RUNS = 64
 
-_LAST: Dict[str, Any] = {"stats": None, "tune": None}
+_LAST: Dict[str, Any] = {"stats": None, "tune": None, "plan": None}
 
 
 def last_stats() -> Optional[ExecutionStats]:
     """ExecutionStats of the most recent offloaded backward pass (executor
-    instrumentation: peak Level-1 states/bytes, advances, stall times)."""
+    instrumentation: peak Level-1 states/bytes, advances, stall times).
+    The scan engine has no executor stats (its schedule runs inside XLA):
+    it clears this to ``None`` at *trace* time — a cached jit call leaves
+    whatever an intervening executor-engine pass recorded."""
     return _LAST["stats"]
 
 
 def last_tune() -> Optional[at.TuneResult]:
     """The schedule the autotuner chose for the most recent forward pass."""
     return _LAST["tune"]
+
+
+def last_plan() -> Optional[ms.SegmentPlan]:
+    """The :class:`~repro.core.schedule.SegmentPlan` behind the most recent
+    multistage pass — the single IR every engine executes.  The executor
+    engines record it per run; the scan engine records it at *trace* time
+    (a cached jit call leaves it untouched).  ``None`` after a
+    revolve/conventional pass."""
+    return _LAST["plan"]
 
 
 def _push_run(handle: int, rec: _RunRecord) -> None:
@@ -348,11 +382,13 @@ def _fwd_callback(static: _Static, params, carry0, xs, batch):
         # the run borrows nothing: it owns the engine and must close it
         run.own_engine = True
         _push_run(handle, _RunRecord(cfg.strategy, tune, run, tmpdir=tmpdir))
+        _LAST["plan"] = run.plan
     else:
         tune = _resolve_schedule(static, ops, params, carry0, xs, batch, n,
                                  None)
         x_n = ops.scan_fwd(params, carry0, xs, batch)
         _push_run(handle, _RunRecord(cfg.strategy, tune))
+        _LAST["plan"] = None
     _LAST["tune"] = tune
     return x_n, np.int32(handle)
 
@@ -465,6 +501,64 @@ _chain.defvjp(_chain_fwd, _chain_bwd)
 
 
 # ---------------------------------------------------------------------------
+# the trace-native scan engine (engine="scan")
+# ---------------------------------------------------------------------------
+
+
+def _resolve_scan_schedule(spec: ChainSpec, cfg: OffloadConfig, params,
+                           carry0, xs, batch, n: int) -> at.TuneResult:
+    """Schedule for a scan-engine chain.  Runs at trace time (the arguments
+    may be tracers); measurement probes use zero stand-ins built from shapes
+    only, and the result lands in the shared tuner cache under the
+    ``"<spec>:scan"`` engine-qualified name."""
+    tuner = _TUNERS.get(cfg.tuner_id, at.GLOBAL_TUNER)
+    if cfg.interval is not None:
+        return tuner.manual(spec.name, n=n, interval=cfg.interval,
+                            slots=cfg.slots)
+    if not cfg.autotune:
+        return tuner.manual(spec.name, n=n, interval=max(1, min(n, 32)),
+                            slots=cfg.slots)
+    tune = tuner.measure_scan(f"{spec.name}:scan", body=spec.body,
+                              params=params, carry0=carry0, xs=xs,
+                              batch=batch, n=n,
+                              segment_len=max(1, min(n, 32)))
+    if cfg.slots is not None:
+        tune = dataclasses.replace(tune, slots=cfg.slots)
+    return tune
+
+
+def _scan_loss(spec: ChainSpec, cfg: OffloadConfig
+               ) -> Callable[[Any, Any], Any]:
+    """The loss with its chain segment rewritten as a plan-driven
+    ``multistage_scan``: segment boundaries offload to XLA host memory
+    (compiler-scheduled copy-start/copy-done — the paper's async Level-2
+    transfers) and segment interiors recompute at the plan's inner chunk
+    granularity.  Everything stays inside the trace — no io_callback, no run
+    registry — so the transform composes with ``jax.jit``, ``jax.vmap`` and
+    mesh sharding.  On backends that cannot lower host placement (CPU) the
+    boundaries stay in HBM: plain plan-segmented remat, same schedule."""
+
+    def loss(params, batch):
+        carry0, xs = spec.prelude(params, batch)
+        n = chain_length(xs)
+        tune = _resolve_scan_schedule(spec, cfg, params, carry0, xs, batch, n)
+        plan = ms.segment_plan(n, tune.interval, tune.slots)
+        _LAST["tune"] = tune
+        _LAST["plan"] = plan
+        _LAST["stats"] = None
+
+        def step(c, x):
+            return spec.body(params, c, x, batch), None
+
+        carry_n, _ = multistage_scan(
+            step, carry0, xs, plan=plan,
+            offload=ofl.host_offload_supported())
+        return spec.readout(params, carry_n, batch)
+
+    return loss
+
+
+# ---------------------------------------------------------------------------
 # public front-end
 # ---------------------------------------------------------------------------
 
@@ -477,10 +571,15 @@ def _as_chain_spec(loss_fn) -> Optional[ChainSpec]:
 
 def offloaded_loss(spec: ChainSpec, cfg: OffloadConfig
                    ) -> Callable[[Any, Any], Any]:
-    """The loss with its chain segment rerouted through the checkpointing
-    executor.  Differentiable; prelude/readout gradients flow via ordinary
-    autodiff (stacked-layer cotangents scatter back into params through the
-    prelude's vjp)."""
+    """The loss with its chain segment rerouted through the configured
+    engine: the checkpointing executor (``engine="compiled"|"interpreted"``,
+    via custom_vjp + io_callback) or the trace-native plan-driven scan
+    (``engine="scan"``).  Differentiable; prelude/readout gradients flow via
+    ordinary autodiff (stacked-layer cotangents scatter back into params
+    through the prelude's vjp)."""
+
+    if cfg.engine == "scan":
+        return _scan_loss(spec, cfg)
 
     def loss(params, batch):
         carry0, xs = spec.prelude(params, batch)
@@ -524,11 +623,17 @@ def value_and_grad_offloaded(
     (``"ram"``, ``"disk"``, or ``"compressed"`` — int8-quantised boundary
     states, ~4x smaller at a bounded precision cost).
 
-    ``engine`` selects how segments execute: ``"compiled"`` (default) runs
+    ``engine`` selects how segments execute — all three drive the same
+    ``SegmentPlan`` IR (``api.last_plan()``): ``"compiled"`` (default) runs
     one jitted ``lax.scan``/checkpointed-vjp call per segment — O(n/I) host
     dispatches, compiled once per segment length; ``"interpreted"`` is the
     step-granular paper-faithful interpreter (O(n) dispatches, exact
-    Revolve-optimal advance counts).
+    Revolve-optimal advance counts); ``"scan"`` stays entirely inside the
+    XLA trace (one dispatch, boundaries offloaded to pinned host memory by
+    the compiler where supported) and composes with ``jax.jit``,
+    ``jax.vmap`` and mesh sharding — use it on pods.  The scan engine
+    implements the ``multistage_async`` strategy with the XLA host backend
+    only (``storage`` must stay ``"ram"``).
     """
     spec = _as_chain_spec(loss_fn)
     if spec is None:

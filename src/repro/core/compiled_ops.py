@@ -32,8 +32,7 @@ segment-runner protocol: one host dispatch per segment, O(n/I) total.
 """
 from __future__ import annotations
 
-import math
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 import numpy as np
 
@@ -41,27 +40,11 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.schedule import SegmentSpec
+from repro.core.schedule import SegmentSpec, chunk_length
+
+__all__ = ["CompiledChainOps", "CompiledSegmentRunner", "chunk_length"]
 
 tree_map = jax.tree_util.tree_map
-
-
-def chunk_length(seg_len: int, s_l1: int) -> Optional[int]:
-    """Chunk size for checkpointed recomputation inside one segment:
-    ``ceil(seg_len / s_l1)``, so at most ``s_l1`` chunk boundaries are ever
-    saved (a shorter remainder chunk absorbs the leftover steps — no
-    divisibility requirement).  ``None`` means no chunking: either the
-    segment fits in Level 1 (store-all), or ``s_l1 < 2`` — a single-level
-    checkpoint cannot beat store-all with one slot (the one chunk's interior
-    rematerialises in full during its backward anyway), so we skip the
-    pointless recompute.  Peak Level-1 states for a chunked reversal are
-    ``num_chunks + chunk`` (boundaries plus one chunk's interior during its
-    backward) — the single-level compiled analogue of
-    Revolve-inside-the-interval, not its strict ``s`` bound; the
-    step-granular interpreted engine keeps the exact bound."""
-    if seg_len <= s_l1 or s_l1 < 2:
-        return None
-    return math.ceil(seg_len / s_l1)
 
 
 class CompiledChainOps:

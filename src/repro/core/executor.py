@@ -63,6 +63,7 @@ class ExecutionStats:
     peak_l1_bytes: int = 0
     l2_stores: int = 0
     l2_prefetches: int = 0
+    l2_peak_bytes: int = 0       # high-water Level-2 (host) footprint
     store_stall_s: float = 0.0
     prefetch_stall_s: float = 0.0
     wall_s: float = 0.0
@@ -371,6 +372,7 @@ class CheckpointExecutor:
                 engine.delete(seg.begin)
             stats.l2_stores = engine.num_stores
             stats.l2_prefetches = engine.num_prefetches
+            stats.l2_peak_bytes = getattr(engine.backend, "peak_bytes", 0)
             stats.store_stall_s = engine.store_stall_s
             stats.prefetch_stall_s = engine.prefetch_stall_s
         except BaseException:

@@ -61,6 +61,17 @@ def save_policy(save_names: Sequence[str]) -> Any:
     return jax.checkpoint_policies.save_only_these_names(*save_names)
 
 
+def segment_policy(offload: bool, boundary_name: str = BOUNDARY) -> Any:
+    """Per-segment remat policy for the trace-native scan engine: the
+    segment-boundary carry goes to pinned host memory (the paper's Level-2
+    store, compiled) when ``offload``, or stays in HBM (plain segmented
+    remat) when the backend cannot lower host placement — see
+    :func:`host_offload_supported`."""
+    if offload:
+        return offload_policy([boundary_name])
+    return save_policy([boundary_name])
+
+
 def _offload_plus(offload_pol, bool_pol):
     """Combine an Offloadable-returning policy with a boolean one —
     ``save_from_both_policies`` rejects mixed return types, and the

@@ -25,6 +25,29 @@ from repro.core import revolve as rv
 from repro.core.revolve import Action
 
 
+def chunk_length(seg_len: int, s_l1: int) -> Optional[int]:
+    """Chunk size for single-level checkpointed recomputation inside one
+    segment: ``ceil(seg_len / s_l1)``, so at most ``s_l1`` chunk boundaries
+    are ever saved (a shorter remainder chunk absorbs the leftover steps — no
+    divisibility requirement).  ``None`` means no chunking: either the
+    segment fits in Level 1 (store-all), or ``s_l1 < 2`` — a single-level
+    checkpoint cannot beat store-all with one slot (the one chunk's interior
+    rematerialises in full during its backward anyway), so we skip the
+    pointless recompute.
+
+    This is the planner's compiled/trace-native projection of the Revolve
+    sub-plan: where :func:`segment_plan` attaches a step-granular Revolve
+    action stream (exact optimal advance counts, driven by the interpreted
+    engine), the XLA engines map the same segment onto ``jax.checkpoint``
+    regions of this chunk length.  Peak Level-1 states for a chunked
+    reversal are ``num_chunks + chunk`` (boundaries plus one chunk's
+    interior during its backward) — the single-level analogue of
+    Revolve-inside-the-interval, not its strict ``s`` bound."""
+    if seg_len <= s_l1 or s_l1 < 2:
+        return None
+    return math.ceil(seg_len / s_l1)
+
+
 class MOp(enum.Enum):
     ADVANCE = "advance"          # forward steps [index, end)
     STORE_L2 = "store_l2"        # async: current state (== x_index) -> Level 2
@@ -100,11 +123,27 @@ class SegmentPlan:
     def boundaries(self) -> List[int]:
         return [seg.begin for seg in self.segments]
 
+    def store_events(self) -> List[int]:
+        """Level-2 store events (one per segment boundary, forward order) —
+        identical across engines by construction: the executor engines issue
+        one ``store_async`` per entry, the scan engine tags one offloaded
+        boundary carry per entry."""
+        return self.boundaries()
+
     def segment_lengths(self) -> Tuple[int, ...]:
         """Distinct segment lengths, descending — one compiled
         advance/reverse pair exists per entry (the tail adds at most one)."""
         return tuple(sorted({seg.length for seg in self.segments},
                             reverse=True))
+
+    def inner_chunk(self, seg: SegmentSpec) -> Optional[int]:
+        """The XLA engines' projection of ``seg``'s Revolve sub-plan: the
+        ``jax.checkpoint`` chunk length for recomputation inside the segment
+        (``None`` when the segment fits in Level 1 and is replayed
+        store-all)."""
+        if seg.revolve is None:
+            return None
+        return chunk_length(seg.length, self.s_l1)
 
     def reverse_advances(self) -> int:
         total = 0

@@ -58,10 +58,13 @@ class RAMStorage:
 
     def __init__(self, bandwidth: Optional[float] = None):
         self._data: Dict[Any, Any] = {}
+        self._sizes: Dict[Any, int] = {}
         self._lock = threading.Lock()
         self.bandwidth = bandwidth
         self.bytes_written = 0
         self.bytes_read = 0
+        self.live_bytes = 0
+        self.peak_bytes = 0   # high-water Level-2 footprint across the run
 
     def _throttle(self, nbytes: int) -> None:
         if self.bandwidth:
@@ -74,6 +77,9 @@ class RAMStorage:
         with self._lock:
             self._data[key] = host
             self.bytes_written += nb
+            self.live_bytes += nb - self._sizes.get(key, 0)
+            self._sizes[key] = nb
+            self.peak_bytes = max(self.peak_bytes, self.live_bytes)
 
     def get(self, key: Any) -> Any:
         with self._lock:
@@ -87,6 +93,7 @@ class RAMStorage:
     def delete(self, key: Any) -> None:
         with self._lock:
             self._data.pop(key, None)
+            self.live_bytes -= self._sizes.pop(key, 0)
 
     def __contains__(self, key: Any) -> bool:
         with self._lock:
@@ -107,8 +114,11 @@ class DiskStorage:
         os.makedirs(directory, exist_ok=True)
         self._lock = threading.Lock()
         self._keys: Dict[Any, str] = {}
+        self._sizes: Dict[Any, int] = {}
         self.bytes_written = 0
         self.bytes_read = 0
+        self.live_bytes = 0
+        self.peak_bytes = 0   # high-water Level-2 footprint across the run
 
     def _path(self, key: Any) -> str:
         return os.path.join(self.directory, f"ckpt_{key}.pkl")
@@ -120,9 +130,13 @@ class DiskStorage:
         with open(tmp, "wb") as f:
             pickle.dump(host, f, protocol=pickle.HIGHEST_PROTOCOL)
         os.replace(tmp, path)  # atomic publish
+        nb = tree_bytes(host)
         with self._lock:
             self._keys[key] = path
-            self.bytes_written += tree_bytes(host)
+            self.bytes_written += nb
+            self.live_bytes += nb - self._sizes.get(key, 0)
+            self._sizes[key] = nb
+            self.peak_bytes = max(self.peak_bytes, self.live_bytes)
 
     def get(self, key: Any) -> Any:
         with self._lock:
@@ -136,6 +150,7 @@ class DiskStorage:
     def delete(self, key: Any) -> None:
         with self._lock:
             path = self._keys.pop(key, None)
+            self.live_bytes -= self._sizes.pop(key, 0)
         if path and os.path.exists(path):
             os.remove(path)
 
@@ -235,6 +250,14 @@ class CompressedStorage:
     @property
     def bytes_read(self) -> int:
         return self.inner.bytes_read
+
+    @property
+    def live_bytes(self) -> int:
+        return self.inner.live_bytes
+
+    @property
+    def peak_bytes(self) -> int:
+        return self.inner.peak_bytes
 
 
 # ---------------------------------------------------------------------------

@@ -6,12 +6,23 @@ straggler watchdog, periodic asynchronous checkpoints, auto-resume from the
 latest checkpoint, optional elastic re-meshing on restart, and retry-wrapped
 steps.
 
+Offloaded-backprop strategies ride the same flags the API exposes: pass
+``--strategy multistage_async`` (plus ``--engine``/``--interval``/``--slots``)
+to route the backward pass through the planner-driven engines — with
+``--engine scan`` the whole train step stays one XLA computation, so on a
+multi-device host the launcher jits it over a data-parallel mesh with
+sharded batches (the sharded step executes the identical ``SegmentPlan``
+the single-host engines use).
+
 Examples::
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-4b --smoke \
         --steps 20
     PYTHONPATH=src python -m repro.launch.train --arch mamba2-370m --smoke \
         --steps 50 --ckpt-dir /tmp/ck --ckpt-every 10
+    XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+        PYTHONPATH=src python -m repro.launch.train --arch lstm-paper \
+        --smoke --steps 8 --strategy multistage_async --engine scan
 """
 from __future__ import annotations
 
@@ -47,6 +58,16 @@ def main(argv=None):
     ap.add_argument("--log-every", type=int, default=1)
     ap.add_argument("--policy", default=None,
                     help="remat/offload policy override")
+    ap.add_argument("--strategy", default=None,
+                    choices=("multistage_async", "revolve", "conventional"),
+                    help="offloaded-backprop strategy (None: plain autodiff)")
+    ap.add_argument("--engine", default=None,
+                    choices=("compiled", "interpreted", "scan"),
+                    help="execution engine behind --strategy")
+    ap.add_argument("--interval", type=int, default=None,
+                    help="pin the Level-2 store interval I (None: autotune)")
+    ap.add_argument("--slots", type=int, default=None,
+                    help="pin the Level-1 snapshot budget s")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -68,9 +89,36 @@ def main(argv=None):
         state, start_step = cm.restore(state)
         print(f"[resume] restored step {start_step} from {args.ckpt_dir}")
 
-    step_fn = with_retries(jax.jit(
-        make_train_step(api, opt, grad_accum=args.grad_accum),
-        donate_argnums=(0,)))
+    if args.strategy is None and (args.engine or args.interval is not None
+                                  or args.slots is not None):
+        ap.error("--engine/--interval/--slots configure an offloaded "
+                 "strategy; pass --strategy as well")
+    offload_opts = {}
+    if args.interval is not None:
+        offload_opts["interval"] = args.interval
+    if args.slots is not None:
+        offload_opts["slots"] = args.slots
+    raw_step = make_train_step(api, opt, grad_accum=args.grad_accum,
+                               strategy=args.strategy, engine=args.engine,
+                               offload_opts=offload_opts or None)
+
+    # Multi-device host: jit over a data-parallel mesh with sharded batches.
+    # Only the trace-native paths can be SPMD-partitioned — plain autodiff
+    # (no strategy) and the scan engine; the executor engines escape the
+    # trace via io_callback, which deadlocks under a partitioned step, so
+    # they keep single-device placement.
+    mesh = None
+    if jax.device_count() > 1 and (args.strategy is None
+                                   or args.engine == "scan"):
+        from repro.launch.mesh import make_local_mesh
+
+        mesh = make_local_mesh()
+        print(f"[mesh] data-parallel over {jax.device_count()} devices")
+    elif jax.device_count() > 1:
+        print(f"[mesh] {jax.device_count()} devices present but engine="
+              f"{args.engine or 'compiled'} escapes the trace; running "
+              "single-device (use --engine scan to shard)")
+    step_fn = with_retries(jax.jit(raw_step, donate_argnums=(0,)))
     ds = SyntheticDataset(cfg, shape)
     it = Prefetcher((ds.batch(s) for s in range(start_step, args.steps)),
                     depth=2)
@@ -81,9 +129,16 @@ def main(argv=None):
           f"seq={shape.seq_len} batch={shape.global_batch} "
           f"steps={start_step}..{args.steps}")
     t0 = time.time()
+    batch_sh = None
     for step, batch in zip(range(start_step, args.steps), it):
         wd.start()
         batch = jax.tree_util.tree_map(jnp.asarray, batch)
+        if mesh is not None:
+            if batch_sh is None:
+                from repro.distributed.sharding import batch_shardings
+
+                batch_sh = batch_shardings(mesh, batch)
+            batch = jax.device_put(batch, batch_sh)
         state, metrics = step_fn(state, batch)
         loss = float(metrics["loss"])
         wd.stop(step)

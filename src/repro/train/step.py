@@ -52,6 +52,7 @@ def make_train_step(api: ModelAPI, optimizer: Optimizer, *,
                     mesh: Optional[Mesh] = None,
                     donate: bool = True,
                     strategy: Optional[str] = None,
+                    engine: Optional[str] = None,
                     offload_opts: Optional[Dict[str, Any]] = None) -> Callable:
     """Returns ``step_fn(state, batch) -> (state, metrics)`` (un-jitted; the
     launcher jits with in/out shardings).
@@ -66,15 +67,26 @@ def make_train_step(api: ModelAPI, optimizer: Optimizer, *,
     ``repro.api.value_and_grad_offloaded`` over the model's chain
     decomposition (``api.train_chain``), keeping peak Level-1 activations
     O(interval + slots) regardless of depth/sequence length.
-    ``offload_opts`` are forwarded (interval=, slots=, storage=, engine=,
-    ...); offloaded strategies run on the segment-compiled engine by default
-    (one XLA call per interval — O(n/I) host dispatches per train step), with
-    ``engine="interpreted"`` falling back to the step-granular interpreter
-    and ``storage="compressed"`` int8-quantising Level-2 boundary states.
+
+    ``engine`` picks the execution engine behind an offloaded strategy (it
+    is merged into ``offload_opts``): the segment-compiled executor
+    (``"compiled"``, default — one XLA call per interval, O(n/I) host
+    dispatches per train step), the step-granular interpreter
+    (``"interpreted"``), or the trace-native plan-driven scan
+    (``"scan"`` — the whole step stays one XLA computation, so it is the
+    one to use when the step is jitted with sharded in/out specs on a
+    device mesh, and the only one that composes with ``grad_accum``).
+    All three execute the same ``SegmentPlan``.  Remaining ``offload_opts``
+    are forwarded (interval=, slots=, storage=, ...);
+    ``storage="compressed"`` int8-quantises Level-2 boundary states on the
+    executor engines.
     """
 
     def loss_fn(params, batch):
         return api.train_loss(params, batch)
+
+    if engine is not None:
+        offload_opts = dict(offload_opts or {}, engine=engine)
 
     value_and_grad = jax.value_and_grad(loss_fn)
     if strategy is not None:
@@ -82,10 +94,13 @@ def make_train_step(api: ModelAPI, optimizer: Optimizer, *,
             raise ValueError(
                 f"model family {api.cfg.family!r} has no chain decomposition;"
                 " cannot use an offloaded strategy")
-        if grad_accum != 1:
+        if grad_accum != 1 and \
+                (offload_opts or {}).get("engine") != "scan":
             raise ValueError(
-                "offloaded strategies handle memory via checkpointing; "
-                "combine with grad_accum is not supported yet")
+                "grad_accum with an offloaded strategy needs the "
+                "trace-native engine='scan' (the executor engines escape "
+                "the trace via io_callback and cannot run under the "
+                "microbatch lax.scan)")
         from repro.api import value_and_grad_offloaded
 
         value_and_grad = value_and_grad_offloaded(
@@ -98,7 +113,7 @@ def make_train_step(api: ModelAPI, optimizer: Optimizer, *,
 
         def body(carry, mb):
             loss_acc, g_acc = carry
-            loss, g = jax.value_and_grad(loss_fn)(params, mb)
+            loss, g = value_and_grad(params, mb)
             return (loss_acc + loss,
                     jax.tree_util.tree_map(jnp.add, g_acc, g)), None
 

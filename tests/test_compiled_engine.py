@@ -188,7 +188,7 @@ def rnn_ref():
     return params, c0, xs, body, float(ref_v), ref_g
 
 
-@pytest.mark.parametrize("engine", ["compiled", "interpreted"])
+@pytest.mark.parametrize("engine", ["compiled", "interpreted", "scan"])
 @pytest.mark.parametrize("interval", [8, 16, 41])
 def test_frontend_engines_match_autodiff(rnn_ref, engine, interval):
     params, c0, xs, body, ref_v, ref_g = rnn_ref
@@ -197,9 +197,12 @@ def test_frontend_engines_match_autodiff(rnn_ref, engine, interval):
     v, g = bptt(params, c0, xs)
     assert abs(float(v) - ref_v) < 1e-4
     assert _max_err(g, ref_g) < 1e-5
-    st = api.last_stats()
     num_segments = -(-41 // interval)
-    if engine == "compiled":
+    assert api.last_plan().num_segments == num_segments
+    st = api.last_stats()
+    if engine == "scan":
+        assert st is None          # the schedule ran inside XLA
+    elif engine == "compiled":
         assert st.host_dispatches == 2 * num_segments
     else:
         assert st.host_dispatches >= 2 * 41
@@ -211,12 +214,13 @@ def test_unknown_engine_rejected():
 
 
 @pytest.mark.slow
+@pytest.mark.parametrize("engine", ["compiled", "scan"])
 @pytest.mark.parametrize("arch,tol", [
     ("lstm-paper", 1e-5),      # fp32 time chain (the paper's §5 model)
     ("granite-3-2b", 2e-2),    # bf16 dense transformer, depth chain
     ("mamba2-370m", 2e-2),     # bf16 SSM, depth chain
 ])
-def test_model_chain_compiled_engine(arch, tol):
+def test_model_chain_xla_engines(arch, tol, engine):
     from repro.configs import SMOKE_SHAPE, get_config
     from repro.configs.shapes import make_batch
     from repro.models import get_model
@@ -227,7 +231,7 @@ def test_model_chain_compiled_engine(arch, tol):
     batch = make_batch(cfg, SMOKE_SHAPE)
     ref_v, ref_g = jax.value_and_grad(m.train_loss)(params, batch)
     vg = api.value_and_grad_offloaded(m.train_loss, interval=2, slots=2,
-                                      engine="compiled")
+                                      engine=engine)
     v, g = vg(params, batch)
     assert abs(float(v) - float(ref_v)) <= tol
     assert _max_err(g, ref_g) <= tol

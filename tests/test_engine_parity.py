@@ -1,0 +1,262 @@
+"""One planner, three engines.
+
+A single ``segment_plan(n, I, s)`` must drive the compiled, interpreted and
+trace-native scan engines — asserted by plan equivalence (same boundaries /
+store events per engine) — and ``engine="scan"`` must produce gradients
+matching ``jax.value_and_grad`` (and the other two engines) *inside*
+``jax.jit``, under ``jax.vmap`` over a batch axis, and on a 2-device CPU
+mesh with data-sharded inputs (run with
+``XLA_FLAGS=--xla_force_host_platform_device_count=2`` — the CI
+multi-device job does).  The chain length is deliberately not divisible by
+the interval, so every engine exercises the uneven-tail path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import api
+from repro.core import schedule as ms
+
+from _helpers import max_rel_err as _max_err  # noqa: E402
+
+KEY = jax.random.PRNGKey(0)
+T, B, D = 41, 4, 8        # 41 = 5 x 8 + 1: n % I != 0
+INTERVAL, SLOTS = 8, 4
+
+ALL_ENGINES = ("compiled", "interpreted", "scan")
+
+needs_two_devices = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs >= 2 devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=2)")
+
+
+@pytest.fixture(scope="module")
+def chain():
+    params = {"W": jax.random.normal(KEY, (D, D)) * 0.4,
+              "U": jax.random.normal(jax.random.fold_in(KEY, 1), (D, D)) * 0.2}
+    xs = jax.random.normal(jax.random.fold_in(KEY, 2), (T, B, D)) * 0.1
+    c0 = jnp.zeros((B, D))
+
+    def body(p, c, x):
+        c = jnp.tanh(c @ p["W"] + x @ p["U"])
+        return c, jnp.sum(c ** 2)
+
+    def ref_loss(p, c0_, xs_):
+        _, ls = jax.lax.scan(lambda c, x: body(p, c, x), c0_, xs_)
+        return jnp.sum(ls)
+
+    ref_v, ref_g = jax.value_and_grad(ref_loss)(params, c0, xs)
+    return params, c0, xs, body, ref_loss, float(ref_v), ref_g
+
+
+def _bptt(body, engine, **opts):
+    return api.checkpointed_bptt(
+        body, strategy="multistage_async", interval=INTERVAL, slots=SLOTS,
+        engine=engine, **opts)
+
+
+# ---------------------------------------------------------------------------
+# plan equivalence: the single IR behind every engine
+# ---------------------------------------------------------------------------
+
+
+def test_one_plan_drives_all_engines(chain):
+    """Same (n, I, s) -> every engine reports the identical SegmentPlan:
+    same boundaries, same segment lengths, same store events — including
+    the uneven tail segment."""
+    params, c0, xs, body, _, ref_v, ref_g = chain
+    ref_plan = ms.segment_plan(T, INTERVAL, SLOTS)
+    assert ref_plan.segments[-1].length == 1          # uneven tail exists
+
+    plans = {}
+    for engine in ALL_ENGINES:
+        v, g = _bptt(body, engine)(params, c0, xs)
+        assert abs(float(v) - ref_v) < 1e-4, engine
+        assert _max_err(g, ref_g) < 1e-4, engine
+        plan = api.last_plan()
+        assert plan is not None, engine
+        plans[engine] = plan
+        if engine != "scan":
+            # the executor engines issue exactly one Level-2 store per
+            # plan boundary (the scan engine's stores are compiled: one
+            # offloaded boundary tag per segment, by construction)
+            assert api.last_stats().l2_stores == plan.num_segments
+
+    for engine, plan in plans.items():
+        assert plan.n == ref_plan.n, engine
+        assert plan.boundaries() == ref_plan.boundaries(), engine
+        assert plan.store_events() == ref_plan.store_events(), engine
+        assert [s.length for s in plan.segments] == \
+            [s.length for s in ref_plan.segments], engine
+        assert [s.revolve is not None for s in plan.segments] == \
+            [s.revolve is not None for s in ref_plan.segments], engine
+
+
+def test_engines_agree_pairwise(chain):
+    """The three engines' gradients agree with each other (not just with
+    the reference) — interchangeable executors over one plan."""
+    params, c0, xs, body, _, _, _ = chain
+    grads = {e: _bptt(body, e)(params, c0, xs)[1] for e in ALL_ENGINES}
+    for a in ALL_ENGINES:
+        for b in ALL_ENGINES:
+            assert _max_err(grads[a], grads[b]) < 1e-4, (a, b)
+
+
+# ---------------------------------------------------------------------------
+# scan engine under transformations
+# ---------------------------------------------------------------------------
+
+
+def test_scan_engine_inside_jit(chain):
+    params, c0, xs, body, _, ref_v, ref_g = chain
+    bptt = jax.jit(_bptt(body, "scan"))
+    v, g = bptt(params, c0, xs)
+    assert abs(float(v) - ref_v) < 1e-4
+    assert _max_err(g, ref_g) < 1e-4
+    # cached second call: no retrace, same answer
+    v2, g2 = bptt(params, c0, xs)
+    assert float(v2) == pytest.approx(float(v))
+
+
+def test_scan_engine_under_vmap(chain):
+    params, c0, xs, body, ref_loss, _, _ = chain
+    K = 3
+    c0s = jnp.stack([c0 + 0.1 * i for i in range(K)])
+    xss = jnp.stack([xs * (1.0 + 0.2 * i) for i in range(K)])
+    bptt = _bptt(body, "scan")
+    v, g = jax.vmap(bptt, in_axes=(None, 0, 0))(params, c0s, xss)
+    ref_v, ref_g = jax.vmap(jax.value_and_grad(ref_loss),
+                            in_axes=(None, 0, 0))(params, c0s, xss)
+    assert v.shape == (K,)
+    np.testing.assert_allclose(np.array(v), np.array(ref_v), rtol=1e-5)
+    assert _max_err(g, ref_g) < 1e-4
+    # vmap composes with jit too
+    vj, gj = jax.jit(jax.vmap(bptt, in_axes=(None, 0, 0)))(params, c0s, xss)
+    np.testing.assert_allclose(np.array(vj), np.array(v), rtol=1e-6)
+
+
+def test_scan_engine_autotunes_inside_jit(chain):
+    """interval=None: the scan engine resolves its schedule at trace time
+    (probes run on zero stand-ins) and caches it under the engine-qualified
+    tuner name."""
+    params, c0, xs, body, _, ref_v, ref_g = chain
+    tuner = api.AutoTuner(repeats=1)
+    bptt = api.checkpointed_bptt(body, strategy="multistage_async",
+                                 engine="scan", tuner=tuner)
+    v, g = jax.jit(bptt)(params, c0, xs)
+    tune = api.last_tune()
+    assert tune.source == "measured"
+    assert 1 <= tune.interval <= T
+    assert abs(float(v) - ref_v) < 1e-4
+    assert _max_err(g, ref_g) < 1e-4
+    assert api.last_plan().n == T
+
+
+# ---------------------------------------------------------------------------
+# 2-device CPU mesh: data-sharded inputs through the scan engine
+# ---------------------------------------------------------------------------
+
+
+@needs_two_devices
+def test_scan_engine_on_mesh(chain):
+    """engine='scan' under jit on a ('data',) mesh with batch-sharded
+    carry/xs: gradients match the single-device reference — the sharded
+    step executes the identical SegmentPlan."""
+    params, c0, xs, body, _, ref_v, ref_g = chain
+    mesh = Mesh(np.array(jax.devices()[:2]), ("data",))
+    repl = NamedSharding(mesh, P())
+    c0_sh = jax.device_put(c0, NamedSharding(mesh, P("data", None)))
+    # xs is (T, B, D): the batch axis is axis 1
+    xs_sh = jax.device_put(xs, NamedSharding(mesh, P(None, "data", None)))
+    params_sh = jax.device_put(params, repl)
+
+    bptt = jax.jit(_bptt(body, "scan"))
+    v, g = bptt(params_sh, c0_sh, xs_sh)
+    assert abs(float(v) - ref_v) < 1e-4
+    assert _max_err(g, ref_g) < 1e-4
+    assert api.last_plan().boundaries() == \
+        ms.segment_plan(T, INTERVAL, SLOTS).boundaries()
+
+
+@needs_two_devices
+def test_sharded_train_step_scan_engine():
+    """A jitted multi-device training step through make_train_step: the
+    offloaded scan engine runs under data-sharded batches and the loss
+    decreases — the production path of the tentpole."""
+    from repro.configs import SMOKE_SHAPE, get_config
+    from repro.configs.shapes import make_batch
+    from repro.distributed.sharding import batch_shardings
+    from repro.models import get_model
+    from repro.optim import rmsprop
+    from repro.train import init_train_state, make_train_step
+
+    cfg = get_config("lstm-paper", smoke=True)
+    m = get_model(cfg)
+    opt = rmsprop(5e-3)
+    state = init_train_state(m, opt, KEY)
+    step = jax.jit(make_train_step(
+        m, opt, strategy="multistage_async", engine="scan",
+        offload_opts=dict(interval=8, slots=4)))
+    mesh = Mesh(np.array(jax.devices()[:2]), ("data",))
+    batch = make_batch(cfg, SMOKE_SHAPE)
+    batch = jax.device_put(batch, batch_shardings(mesh, batch))
+    losses = []
+    for _ in range(4):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0]
+
+
+# ---------------------------------------------------------------------------
+# grad_accum composes with the trace-native engine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_train_step_grad_accum_scan_engine():
+    from repro.configs import SMOKE_SHAPE, get_config
+    from repro.configs.shapes import make_batch
+    from repro.models import get_model
+    from repro.optim import rmsprop
+    from repro.train import init_train_state, make_train_step
+
+    cfg = get_config("lstm-paper", smoke=True)
+    m = get_model(cfg)
+    opt = rmsprop(5e-3)
+    state = init_train_state(m, opt, KEY)
+    step = make_train_step(m, opt, grad_accum=2, strategy="multistage_async",
+                           engine="scan", offload_opts=dict(interval=8))
+    batch = make_batch(cfg, SMOKE_SHAPE)
+    losses = []
+    for _ in range(4):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0]
+
+
+def test_train_step_grad_accum_rejects_executor_engines():
+    from repro.configs import get_config
+    from repro.models import get_model
+    from repro.optim import sgd
+    from repro.train import make_train_step
+
+    cfg = get_config("lstm-paper", smoke=True)
+    m = get_model(cfg)
+    with pytest.raises(ValueError, match="engine='scan'"):
+        make_train_step(m, sgd(1e-3), grad_accum=2,
+                        strategy="multistage_async")
+
+
+# ---------------------------------------------------------------------------
+# config validation
+# ---------------------------------------------------------------------------
+
+
+def test_scan_engine_config_validation():
+    with pytest.raises(ValueError, match="multistage_async"):
+        api.OffloadConfig(engine="scan", strategy="revolve")
+    with pytest.raises(ValueError, match="XLA host memory"):
+        api.OffloadConfig(engine="scan", storage="disk")

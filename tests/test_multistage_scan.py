@@ -1,4 +1,5 @@
-"""Compiled path: multistage_scan must match lax.scan in values and grads,
+"""Trace-native path: multistage_scan must match lax.scan in values and
+grads — including uneven tails, prime lengths, and arbitrary SegmentPlans —
 and must actually offload (device_put to host in the grad jaxpr)."""
 import jax
 import jax.numpy as jnp
@@ -7,6 +8,7 @@ import pytest
 from jax import lax
 
 from repro.core import offload as ofl
+from repro.core import schedule as ms
 from repro.core.multistage_scan import (bptt_grad, choose_interval,
                                         multistage_scan)
 
@@ -33,6 +35,12 @@ def loss_ref(c0):
     dict(interval=8), dict(interval=8, offload=False), dict(interval=24),
     dict(interval=12, nested_intervals=(4,)),
     dict(interval=24, nested_intervals=(6, 2)), dict(interval=1),
+    # non-dividing intervals: the plan ends in a shorter tail segment
+    dict(interval=7), dict(interval=7, s_l1=2), dict(interval=13),
+    # plan-driven: the SegmentPlan IR supplies boundaries + inner chunking
+    dict(plan=ms.segment_plan(24, 8, 4)),
+    dict(plan=ms.segment_plan(24, 7, 2)),
+    dict(plan=ms.segment_plan(24, 5, 3)),
 ])
 def test_matches_lax_scan(kw):
     ref_v, ref_g = jax.value_and_grad(loss_ref)(C0)
@@ -47,15 +55,47 @@ def test_matches_lax_scan(kw):
                                rtol=1e-4, atol=1e-6)
 
 
-def test_rejects_non_dividing_interval():
-    with pytest.raises(ValueError):
-        multistage_scan(body, C0, XS, interval=7)
+@pytest.mark.parametrize("n", [17, 23, 19])   # prime lengths
+@pytest.mark.parametrize("interval", [4, 8])
+def test_prime_length_matches_lax_scan(n, interval):
+    """Regression for the old divisor-snapping fallback: a prime-length
+    chain used to be rejected (or degraded to I=1 via choose_interval);
+    now it runs at the requested interval with an uneven tail."""
+    xs = XS[:n]
+
+    def ref(c0):
+        _, ys = lax.scan(body, c0, xs)
+        return jnp.sum(ys)
+
+    def loss_ms(c0):
+        _, ys = multistage_scan(body, c0, xs, interval=interval, s_l1=2)
+        return jnp.sum(ys)
+
+    ref_v, ref_g = jax.value_and_grad(ref)(C0)
+    v, g = jax.jit(jax.value_and_grad(loss_ms))(C0)
+    np.testing.assert_allclose(float(v), float(ref_v), rtol=1e-5)
+    np.testing.assert_allclose(np.array(g), np.array(ref_g),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_plan_mismatch_rejected():
+    with pytest.raises(ValueError, match="plan is for"):
+        multistage_scan(body, C0, XS, plan=ms.segment_plan(23, 8, 4))
 
 
 def test_choose_interval():
-    assert choose_interval(24, 7) == 6
+    assert choose_interval(24, 7) == 6      # nearby divisor wins
     assert choose_interval(24, 100) == 24
-    assert choose_interval(17, 4) == 1  # prime length
+    # prime length: keep the target (regression — the old fallback
+    # silently degraded to I=1, the worst-case recompute factor)
+    assert choose_interval(17, 4) == 4
+    assert choose_interval(17, 16) == 16
+    assert choose_interval(97, 10) == 10
+    # the divisor search never shrinks below half the optimum
+    for n in (24, 37, 48, 97):
+        for t in range(1, n + 1):
+            i = choose_interval(n, t)
+            assert max(1, -(-t // 2)) <= i <= min(t, n), (n, t, i)
 
 
 @requires_host_offload

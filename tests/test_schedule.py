@@ -55,3 +55,21 @@ def test_small_l1_triggers_revolve_inside_interval():
     for b, seg in sched.segment_schedules.items():
         assert rv.count_advances(seg) == rv.optimal_advances(16, 4)
         assert rv.peak_slots(seg) <= 4
+
+
+def test_plan_store_events_and_inner_chunk():
+    """The planner's engine-facing surface: store events (one per segment
+    boundary) and the inner chunk projection of the Revolve sub-plans
+    (what the XLA engines execute instead of the action stream)."""
+    plan = ms.segment_plan(37, 8, 4)
+    assert plan.store_events() == plan.boundaries() == [0, 8, 16, 24, 32]
+    # 8 > 4 slots -> chunked at ceil(8/4); the length-5 tail chunks too
+    assert plan.inner_chunk(plan.segments[0]) == 2
+    assert plan.inner_chunk(plan.segments[-1]) == 2
+    # segments that fit in Level 1 replay store-all (no chunking)
+    roomy = ms.segment_plan(37, 8, 8)
+    assert all(roomy.inner_chunk(s) is None for s in roomy.segments[:-1])
+    # chunk_length lives with the planner; both XLA engines consume it
+    assert ms.chunk_length(16, 4) == 4
+    assert ms.chunk_length(8, 8) is None
+    assert ms.chunk_length(1024, 1) is None
