@@ -15,11 +15,18 @@ Three sections:
    interpreter and drop Python dispatches from O(n) to O(n/I) (compiled)
    and to O(1) (trace-native scan); peak *host* bytes are recorded so
    BENCH_overhead.json tracks the Level-2 footprint across PRs (the
-   executor's measured high-water mark must equal the plan's model).
+   executor's measured high-water mark must equal the plan's model);
+4. the tiered-storage capacity sweep: the same chain with
+   ``storage="tiered"`` at shrinking fast-tier budgets — the measured
+   fast-tier ``peak_bytes`` must equal the two-tier perfmodel's
+   ``fast_peak_bytes_model`` (and therefore obey the budget) at every
+   point, while the wall-time overhead stays ~constant in ``n`` (the
+   paper's "reduce memory to *any* size" claim, enforced).
 
 ``main`` returns a JSON-serialisable payload; ``benchmarks/run.py --smoke``
 writes it to ``BENCH_overhead.json`` at the repo root for the CI perf
-trajectory.
+trajectory (including the capacity sweep, so capacity-bounded overhead is
+tracked on every PR).
 """
 import time
 
@@ -209,6 +216,99 @@ def engine_comparison(depth: int = 256):
     return out
 
 
+# ---------------------------------------------------------------------------
+# tiered storage: capacity sweep (memory reduced to *any* size, §1's claim)
+# ---------------------------------------------------------------------------
+
+
+def capacity_sweep(depths=(96, 192)):
+    """``storage="tiered"`` at shrinking fast-tier budgets.
+
+    For each depth the same chain runs with the fast tier sized to hold
+    *all*, *half*, and *one* of its Level-2 boundary states; the rest
+    write-behind spill to disk and are promoted back ahead of need with the
+    plan-driven prefetch distance.  Asserted at every point:
+
+    * gradients match plain autodiff (the spilled replay is exact);
+    * the measured fast-tier high-water mark equals the two-tier
+      perfmodel's ``fast_peak_bytes_model`` — and therefore never exceeds
+      the configured ``l2_capacity_bytes``;
+    * eviction/promotion counts match the plan (``spilled`` boundaries of
+      ``SegmentPlan.tier_plan``);
+    * per-step wall time stays ~flat in depth for every budget (the
+      overhead of a *bounded* Level 2 is still constant in n).
+    """
+    from repro.core.perfmodel import fast_peak_bytes_model
+    from repro.core.storage import tree_bytes
+    from repro.models.lstm import train_chain
+
+    key = jax.random.PRNGKey(0)
+    params = init_lstm(key, vocab=96, d_embed=16, d_hidden=64)
+    spec = train_chain()
+    rows = []
+    for depth in depths:
+        tokens = jax.random.randint(jax.random.fold_in(key, 1),
+                                    (4, depth + 1), 0, 96)
+        batch = {"tokens": tokens}
+        carry0, _ = spec.prelude(params, batch)
+        state_bytes = tree_bytes(carry0)
+        num_segments = -(-depth // INTERVAL)
+        ref_v, ref_g = jax.value_and_grad(
+            lambda p, b: forward_loss(p, b["tokens"]))(params, batch)
+
+        row = {"depth": depth, "interval": INTERVAL,
+               "state_bytes": state_bytes, "num_segments": num_segments}
+        for label, slots_held in [("all", num_segments),
+                                  ("half", -(-num_segments // 2)),
+                                  ("one", 1)]:
+            cap = slots_held * state_bytes
+            vg = api.value_and_grad_offloaded(
+                spec, strategy="multistage_async", interval=INTERVAL,
+                slots=S_SLOTS, storage="tiered", l2_capacity_bytes=cap)
+            vg(params, batch)          # warmup: compile segments once
+            t0 = time.perf_counter()
+            v, g = vg(params, batch)
+            jax.block_until_ready((v, g))
+            wall = time.perf_counter() - t0
+            # scale-aware tolerances: compiled segment scans reassociate
+            # fp32 sums (same convention as engine_comparison)
+            err = max(float(jnp.max(jnp.abs(a - b) / (1.0 + jnp.abs(b))))
+                      for a, b in zip(jax.tree_util.tree_leaves(g),
+                                      jax.tree_util.tree_leaves(ref_g)))
+            assert abs(float(v) - float(ref_v)) < \
+                1e-5 * max(1.0, abs(float(ref_v))), (label, v, ref_v)
+            assert err < 1e-4, (label, err)
+            st = api.last_stats()
+            plan = api.last_plan()
+            tier = plan.tier_plan(cap, state_bytes)
+            model_peak = fast_peak_bytes_model(depth, INTERVAL, state_bytes,
+                                               cap)
+            # the budget holds, and measured == the two-tier model
+            assert st.l2_fast_peak_bytes <= cap, (label, st)
+            assert st.l2_fast_peak_bytes == model_peak, (
+                label, st.l2_fast_peak_bytes, model_peak)
+            # write-behind spills exactly the boundaries the plan says
+            # cannot stay resident (each spilled once, on the forward)
+            assert st.l2_evictions == tier.spilled, (label, st, tier)
+            assert st.l2_promotions >= tier.spilled, (label, st, tier)
+            assert st.prefetch_depth == tier.prefetch_distance, (label, st)
+            row[f"{label}_capacity_bytes"] = cap
+            row[f"{label}_fast_peak_bytes"] = st.l2_fast_peak_bytes
+            row[f"{label}_evictions"] = st.l2_evictions
+            row[f"{label}_promotions"] = st.l2_promotions
+            row[f"{label}_wall_s"] = wall
+            row[f"{label}_wall_per_step_us"] = wall / depth * 1e6
+        rows.append(row)
+
+    # constant-overhead claim under a bounded budget: per-step wall time
+    # does not grow with depth at any capacity point (generous factor —
+    # shared-CI wall clocks are noisy)
+    for label in ("all", "half", "one"):
+        per_step = [r[f"{label}_wall_per_step_us"] for r in rows]
+        assert max(per_step) < 3.0 * min(per_step) + 50.0, (label, per_step)
+    return rows
+
+
 def _print_rows(rows):
     cols = list(rows[0])
     print(",".join(cols))
@@ -257,7 +357,13 @@ def main(smoke: bool = False):
           f"{comparison['scan_dispatches']}; Level-2 peak "
           f"{comparison['compiled_host_peak_bytes']/1e6:.2f} MB host")
 
-    return {"executor": rows, "api": arows, "engine_comparison": comparison}
+    print("\n# tiered storage capacity sweep (fast-tier peak == model, "
+          "wall ~flat)")
+    crows = capacity_sweep((96,) if smoke else (96, 192))
+    _print_rows(crows)
+
+    return {"executor": rows, "api": arows, "engine_comparison": comparison,
+            "capacity_sweep": crows}
 
 
 if __name__ == "__main__":

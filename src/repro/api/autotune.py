@@ -10,7 +10,9 @@ Two ways to obtain ``(T_A, T_T)``:
 
 * **measure** — time the jitted forward step and a Level-2 store of the
   boundary state on the live engine (done on the first call of an offloaded
-  gradient function, then cached per ``(model, seq-len, hardware)``);
+  gradient function, then cached per ``(model, seq-len, hardware)``); a
+  capacity-bounded tiered backend is probed per tier and ``I`` comes from
+  the *effective* transfer time (``perfmodel.choose_tiered_interval``);
 * **roofline** — derive them from compiled-HLO roofline terms via
   ``repro.core.perfmodel.times_from_roofline`` (the dry-run path; no
   execution needed).
@@ -39,8 +41,10 @@ from jax import lax
 from repro.core import offload as ofl
 from repro.core.multistage_scan import choose_interval
 from repro.core.perfmodel import (KNL, TPU_V5E, HardwareSpec, StepTimes,
-                                  optimal_interval, times_from_roofline)
-from repro.core.storage import tree_bytes
+                                  choose_tiered_interval,
+                                  effective_transfer_time, optimal_interval,
+                                  times_from_roofline)
+from repro.core.storage import TieredStorage, tree_bytes
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,6 +58,10 @@ class TuneResult:
     state_bytes: int
     n: int
     source: str           # "measured" | "roofline" | "manual"
+    # Two-tier (capacity-bounded) Level 2 only: the slow tier's per-state
+    # transfer time and the fast-tier budget behind the chosen interval.
+    t_t_slow: float = 0.0
+    capacity_bytes: Optional[int] = None
 
     @property
     def never_stalls(self) -> bool:
@@ -160,10 +168,19 @@ class AutoTuner:
           ``T_A`` correctly yields a larger interval.
 
         ``backend`` is the Level-2 storage backend the run will use (its
-        put/delete pair is what we time).
+        put/delete pair is what we time).  A capacity-bounded
+        ``TieredStorage`` backend gets a second probe of its *slow* tier,
+        and the interval comes from the capacity-aware effective transfer
+        time (``perfmodel.choose_tiered_interval``): if the boundaries at
+        the fast-tier optimum would overflow the budget, ``I`` grows until
+        either they fit or the slow tier keeps up — §3's rule applied to
+        the medium that actually rate-limits the stores.
         """
         state_bytes = tree_bytes(state0)
         level2 = type(backend).__name__
+        if isinstance(backend, TieredStorage):
+            # the optimum depends on the budget: key it into the cache
+            level2 = f"{level2}[{backend.capacity_bytes}]"
         cached = self.lookup(name, n, state_bytes, level2)
         if cached is not None:
             return cached
@@ -191,11 +208,42 @@ class AutoTuner:
         t_t = self._time(one_store)
         backend.delete(tune_key)
 
-        interval = snap_interval(n, optimal_interval(t_t, t_a))
+        t_t_slow = 0.0
+        capacity = None
+        if isinstance(backend, TieredStorage):
+            capacity = backend.capacity_bytes
+
+            def one_slow_store():
+                backend.slow.put(tune_key, state0)
+
+            t_t_slow = self._time(one_slow_store)
+            backend.slow.delete(tune_key)
+            if state_bytes > capacity:
+                # the fast probe itself spilled: it measured the slow path,
+                # so recover the fast tier's own time as the cheaper of the
+                # two (everything bypasses anyway — t_t_eff is slow)
+                t_t = min(t_t, t_t_slow)
+            target = choose_tiered_interval(
+                n, state_bytes, capacity, t_a, t_t, t_t_slow)
+        else:
+            target = optimal_interval(t_t, t_a)
+
+        interval = snap_interval(n, target)
+        if capacity is not None and interval < target:
+            # choose_tiered_interval's result is a *minimum viable*
+            # interval (boundaries fit the budget, or the slow tier keeps
+            # up); snapping onto a smaller divisor of n can re-enter the
+            # spill-and-stall regime.  Keep the snap only if the effective
+            # transfer time still hides behind the segment's compute.
+            t_t_eff = effective_transfer_time(n, interval, state_bytes,
+                                              capacity, t_t, t_t_slow)
+            if t_t_eff > interval * t_a:
+                interval = target
         slots = default_slots(interval, self.l1_budget_states)
         return self.store(name, n, state_bytes, level2, TuneResult(
             interval=interval, slots=slots, t_a=t_a, t_t=t_t,
-            state_bytes=state_bytes, n=n, source="measured"))
+            state_bytes=state_bytes, n=n, source="measured",
+            t_t_slow=t_t_slow, capacity_bytes=capacity))
 
     # ------------------------------------------------------- scan engine
     def measure_scan(self, name: str, *, body: Callable[..., Any],

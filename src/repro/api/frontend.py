@@ -6,8 +6,8 @@ returning ``(loss, grads)``.  The difference is *how* the backward pass runs:
 
 * the forward chain executes as compiled per-interval segments (one jitted
   ``lax.scan`` call each) while the ``AsyncTransferEngine`` streams every
-  ``I``-th carry to Level-2 storage (host RAM, disk, or int8-compressed) on
-  a background thread;
+  ``I``-th carry to Level-2 storage (host RAM, disk, int8-compressed, or a
+  capacity-bounded RAM-over-disk tier) on a background thread;
 * the backward pass replays segments from Level 2 with double-buffered
   prefetch, each reversed by one compiled checkpointed-vjp call — peak
   Level-1 memory is ``O(I + s)``, independent of chain length, at a constant
@@ -64,7 +64,7 @@ from repro.core.storage import AsyncTransferEngine, make_backend
 
 STRATEGIES = ("multistage_async", "revolve", "conventional")
 ENGINES = ("compiled", "interpreted", "scan")
-STORAGE_KINDS = ("ram", "disk", "compressed")
+STORAGE_KINDS = ("ram", "disk", "compressed", "tiered")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,8 +74,9 @@ class OffloadConfig:
     strategy: str = "multistage_async"
     interval: Optional[int] = None    # None -> autotune (I = ceil(T_T/T_A))
     slots: Optional[int] = None       # Level-1 Revolve slots; None -> budget
-    storage: str = "ram"              # "ram" | "disk" | "compressed"
+    storage: str = "ram"              # "ram" | "disk" | "compressed" | "tiered"
     storage_dir: Optional[str] = None
+    l2_capacity_bytes: Optional[int] = None  # fast-tier budget ("tiered")
     autotune: bool = True
     tuner_id: int = 0                 # key into the tuner registry
     engine: str = "compiled"          # "compiled" (per-segment XLA calls) |
@@ -89,6 +90,15 @@ class OffloadConfig:
         if self.engine not in ENGINES:
             raise ValueError(
                 f"unknown engine {self.engine!r}; known: {ENGINES}")
+        if self.storage == "tiered" and self.l2_capacity_bytes is None:
+            raise ValueError(
+                "storage='tiered' needs l2_capacity_bytes= (the fast-tier "
+                "budget the Level-2 store must stay under)")
+        if self.l2_capacity_bytes is not None and self.storage != "tiered":
+            raise ValueError(
+                "l2_capacity_bytes only applies to storage='tiered' "
+                f"(got storage={self.storage!r}); the unbounded backends "
+                "have no budget to enforce")
         if self.engine == "scan":
             if self.strategy != "multistage_async":
                 raise ValueError(
@@ -215,8 +225,10 @@ def _make_backend(cfg: OffloadConfig):
     directory that must be removed when the run is disposed."""
     tmpdir = None
     kwargs = {}
-    if cfg.storage == "disk" or (cfg.storage == "compressed"
-                                 and cfg.storage_dir is not None):
+    if cfg.storage == "disk" or cfg.storage == "tiered" or (
+            cfg.storage == "compressed" and cfg.storage_dir is not None):
+        # tiered always gets a directory: its slow tier is the disk (the
+        # paper's DRAM->SSD platform) unless the caller pinned one
         directory = cfg.storage_dir
         if directory is None:
             import tempfile
@@ -224,6 +236,8 @@ def _make_backend(cfg: OffloadConfig):
             directory = tempfile.mkdtemp(prefix="repro_l2_")
             tmpdir = directory
         kwargs["directory"] = directory
+    if cfg.storage == "tiered":
+        kwargs["capacity_bytes"] = cfg.l2_capacity_bytes
     return make_backend(cfg.storage, **kwargs), tmpdir
 
 
@@ -599,6 +613,7 @@ def value_and_grad_offloaded(
     slots: Optional[int] = None,
     storage: str = "ram",
     storage_dir: Optional[str] = None,
+    l2_capacity_bytes: Optional[int] = None,
     autotune: bool = True,
     tuner: Optional[at.AutoTuner] = None,
     fallback: bool = True,
@@ -620,8 +635,18 @@ def value_and_grad_offloaded(
     (store everything); ``interval``/``slots`` pin the schedule, otherwise
     the autotuner measures ``T_A``/``T_T`` on first call and applies §3's
     ``I = ceil(T_T/T_A)``; ``storage`` picks the Level-2 backend
-    (``"ram"``, ``"disk"``, or ``"compressed"`` — int8-quantised boundary
-    states, ~4x smaller at a bounded precision cost).
+    (``"ram"``, ``"disk"``, ``"compressed"`` — int8-quantised boundary
+    states, ~4x smaller at a bounded precision cost — or ``"tiered"``, a
+    capacity-bounded fast tier over a disk slow tier).  ``l2_capacity_bytes``
+    (required with ``storage="tiered"``) is the fast-tier budget: the
+    Level-2 *store* never exceeds it — cold boundaries write-behind spill
+    to disk in plan-aware (Belady) order and are promoted back ahead of
+    need (the reverse sweep additionally holds up to ``prefetch_depth``
+    boundary states in Level-1-bound transit staging, reported as
+    ``last_stats().l2_staged_peak_bytes``) — and the autotuner probes
+    *both* tiers, choosing ``I`` from
+    the capacity-aware effective transfer time (a budget that forces
+    spills yields a larger interval so the slow tier keeps up).
 
     ``engine`` selects how segments execute — all three drive the same
     ``SegmentPlan`` IR (``api.last_plan()``): ``"compiled"`` (default) runs
@@ -649,6 +674,7 @@ def value_and_grad_offloaded(
 
     cfg = OffloadConfig(strategy=strategy, interval=interval, slots=slots,
                         storage=storage, storage_dir=storage_dir,
+                        l2_capacity_bytes=l2_capacity_bytes,
                         autotune=autotune, tuner_id=_register_tuner(tuner),
                         engine=engine)
     vg = jax.value_and_grad(offloaded_loss(spec, cfg))

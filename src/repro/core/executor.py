@@ -64,6 +64,11 @@ class ExecutionStats:
     l2_stores: int = 0
     l2_prefetches: int = 0
     l2_peak_bytes: int = 0       # high-water Level-2 (host) footprint
+    l2_fast_peak_bytes: int = 0  # tiered backend: fast-tier high-water mark
+    l2_evictions: int = 0        # tiered backend: fast -> slow spills
+    l2_promotions: int = 0       # tiered backend: slow -> fast promotions
+    l2_staged_peak_bytes: int = 0  # engine prefetch staging high-water mark
+    prefetch_depth: int = 1      # segments of prefetch lead in the reverse
     store_stall_s: float = 0.0
     prefetch_stall_s: float = 0.0
     wall_s: float = 0.0
@@ -329,6 +334,12 @@ class CheckpointExecutor:
                             runner=runner, own_engine=own_engine)
         fwd_runner = runner if runner is not None else \
             InterpretedSegmentRunner(self.forward_op, self.backward_op)
+        # Plan-aware Level 2: hand a capacity-bounded (tiered) backend the
+        # plan's reverse access order so its eviction victim is always the
+        # boundary needed farthest in the future (Belady's rule).
+        set_plan = getattr(engine.backend, "set_plan", None)
+        if set_plan is not None:
+            set_plan(plan)
         t0 = time.perf_counter()
         try:
             current = state0
@@ -348,9 +359,15 @@ class CheckpointExecutor:
 
     def multistage_reverse(self, run: "MultistageRun", adjoint0: Any):
         """Phase 2: join outstanding stores, then reverse the chain segment by
-        segment with double-buffered Level-2 prefetch and per-segment work
+        segment with prefetched Level-2 boundaries and per-segment work
         delegated to the run's segment runner.  Returns ``(adjoint, stats)``
         and closes the engine if this run owns it.
+
+        The prefetch lead defaults to 1 segment (double-buffering, the
+        paper's schedule).  A capacity-bounded (tiered) backend can ask for
+        more via ``plan_prefetch_distance``: boundaries evicted to the slow
+        tier are then promoted back ``d`` segments ahead of need, so the
+        slow fetch overlaps earlier segments' reverse work.
         """
         engine, stats, slots = run.engine, run.stats, run.slots
         runner = run.runner if run.runner is not None else \
@@ -360,19 +377,35 @@ class CheckpointExecutor:
         try:
             adjoint = adjoint0
             engine.wait_stores()
-            # Prefetch the last boundary immediately; then double-buffer.
-            engine.prefetch_async(segs[-1].begin)
+            # Prefetch lead: 1 (double-buffer) unless the backend derives a
+            # larger plan-aware distance (sizes are known now — the stores
+            # above have all landed).
+            depth = 1
+            hint = getattr(engine.backend, "plan_prefetch_distance", None)
+            if hint is not None:
+                depth = max(1, int(hint(run.plan)))
+            stats.prefetch_depth = depth
+            # Warm the pipeline with the last `depth` boundaries; then keep
+            # `depth` segments of lead while walking backwards.
+            for idx in range(len(segs) - 1,
+                             max(len(segs) - 1 - depth, -1), -1):
+                engine.prefetch_async(segs[idx].begin)
             for j in range(len(segs) - 1, -1, -1):
                 seg = segs[j]
-                if j > 0:
-                    engine.prefetch_async(segs[j - 1].begin)
+                if j - depth >= 0:
+                    engine.prefetch_async(segs[j - depth].begin)
                 x_b = engine.wait_prefetch(seg.begin)
                 slots.note_extra(tree_bytes(x_b))
                 adjoint = runner.reverse(x_b, adjoint, seg, slots, stats)
                 engine.delete(seg.begin)
             stats.l2_stores = engine.num_stores
             stats.l2_prefetches = engine.num_prefetches
-            stats.l2_peak_bytes = getattr(engine.backend, "peak_bytes", 0)
+            backend = engine.backend
+            stats.l2_peak_bytes = getattr(backend, "peak_bytes", 0)
+            stats.l2_fast_peak_bytes = getattr(backend, "fast_peak_bytes", 0)
+            stats.l2_evictions = getattr(backend, "evictions", 0)
+            stats.l2_promotions = getattr(backend, "promotions", 0)
+            stats.l2_staged_peak_bytes = engine.staged_peak_bytes
             stats.store_stall_s = engine.store_stall_s
             stats.prefetch_stall_s = engine.prefetch_stall_s
         except BaseException:

@@ -17,6 +17,12 @@ and the forward pass stalls; ``t_async`` models that with a
 
 ``HardwareSpec`` carries the roofline constants for the target chip; the
 dry-run couples this model to measured HLO terms via ``times_from_roofline``.
+
+The two-tier section below extends §3 to a capacity-bounded Level 2
+(``TieredStorage``): once boundaries overflow the fast tier, the effective
+per-state transfer time is the write-behind bottleneck ``max(T_T_fast,
+T_T_slow)``, and ``choose_tiered_interval`` applies ``I = ceil(T_T/T_A)``
+to that effective time.
 """
 from __future__ import annotations
 
@@ -91,6 +97,91 @@ def t_async(n: int, interval: int, s: int, t_a: float, t_b: float,
 def speedup_vs_revolve(n: int, interval: int, s: int, t_a: float,
                        t_b: float, t_t: float) -> float:
     return t_revolve(n, s, t_a, t_b) / t_async(n, interval, s, t_a, t_b, t_t)
+
+
+# ---------------------------------------------------------------------------
+# Two-tier (capacity-bounded) Level-2 model
+# ---------------------------------------------------------------------------
+#
+# A TieredStorage Level 2 has a fast tier of ``capacity_bytes`` and a slow
+# tier behind it.  While every boundary fits the fast tier, the per-state
+# transfer time is the fast tier's T_T.  Once ceil(n/I) boundaries overflow
+# the budget, steady state is write-behind: every new fast-tier store forces
+# an eviction through the slow tier, so the *effective* per-boundary
+# transfer time is rate-limited by the slower medium — and §3's
+# I = ceil(T_T/T_A) must be applied to that effective time.
+
+
+def fast_tier_slots(capacity_bytes: float, state_bytes: float) -> int:
+    """Boundary states the fast tier can hold (0 when one state alone
+    overflows the budget and every boundary bypasses to the slow tier)."""
+    if state_bytes <= 0:
+        raise ValueError("state_bytes must be positive")
+    return int(capacity_bytes // state_bytes)
+
+
+def effective_transfer_time(n: int, interval: int, state_bytes: float,
+                            capacity_bytes: float, t_t_fast: float,
+                            t_t_slow: float) -> float:
+    """Capacity-aware per-boundary transfer time: the fast tier's ``T_T``
+    while all ``ceil(n/I)`` boundaries fit, else the write-behind pipeline's
+    bottleneck ``max(T_T_fast, T_T_slow)`` (fast store and slow eviction
+    overlap, so the slower stage sets the rate)."""
+    segments = math.ceil(n / interval)
+    if segments <= fast_tier_slots(capacity_bytes, state_bytes):
+        return t_t_fast
+    return max(t_t_fast, t_t_slow)
+
+
+def choose_tiered_interval(n: int, state_bytes: float, capacity_bytes: float,
+                           t_a: float, t_t_fast: float,
+                           t_t_slow: float) -> int:
+    """§3's ``I = ceil(T_T/T_A)`` applied to the *effective* two-tier
+    transfer time.
+
+    Candidates, smallest viable wins:
+
+    * ``I_fast = ceil(T_T_fast/T_A)`` — valid only if all ``ceil(n/I_fast)``
+      boundaries fit the fast tier (no spill, fast-tier rate);
+    * otherwise the smaller of ``I_fit`` (the smallest interval at which the
+      boundaries all fit — paying recompute to stay on the fast medium) and
+      ``I_slow = ceil(max(T_T_fast,T_T_slow)/T_A)`` (accepting the spill and
+      sizing the interval so the slow tier keeps up — the paper's DRAM->SSD
+      operating point).
+    """
+    i_fast = optimal_interval(t_t_fast, t_a)
+    k = fast_tier_slots(capacity_bytes, state_bytes)
+    if k >= 1 and math.ceil(n / i_fast) <= k:
+        return i_fast
+    i_slow = optimal_interval(max(t_t_fast, t_t_slow), t_a)
+    if k < 1:                      # nothing ever fits: slow tier sets I
+        return max(i_fast, i_slow)
+    i_fit = math.ceil(n / k)
+    return max(i_fast, min(i_fit, i_slow))
+
+
+def t_async_tiered(n: int, interval: int, s: int, t_a: float, t_b: float,
+                   t_t_fast: float, t_t_slow: float, state_bytes: float,
+                   capacity_bytes: float) -> float:
+    """Two-tier multistage runtime: :func:`t_async` evaluated at the
+    capacity-aware effective transfer time.  At ``I >= ceil(T_T_eff/T_A)``
+    this is ``n * R(I, s) * T_A + n * T_B`` — the overhead stays constant
+    in ``n`` even when most boundaries live on the slow tier, which is the
+    tiered backend's headline claim (wall time flat while the fast tier
+    obeys any budget)."""
+    t_t_eff = effective_transfer_time(n, interval, state_bytes,
+                                      capacity_bytes, t_t_fast, t_t_slow)
+    return t_async(n, interval, s, t_a, t_b, t_t_eff)
+
+
+def fast_peak_bytes_model(n: int, interval: int, state_bytes: int,
+                          capacity_bytes: int) -> int:
+    """Model of the fast tier's high-water mark: every boundary when they
+    fit, else exactly the budget's worth of whole states (plan-aware
+    eviction keeps the tier full of the soonest-needed boundaries)."""
+    segments = math.ceil(n / interval)
+    k = fast_tier_slots(capacity_bytes, state_bytes)
+    return min(segments, k) * int(state_bytes)
 
 
 # ---------------------------------------------------------------------------

@@ -100,6 +100,30 @@ class SegmentSpec:
 
 
 @dataclass(frozen=True)
+class TierPlan:
+    """Plan-derived Level-2 tier annotations for a capacity-bounded
+    (tiered) backend: which segment boundaries are expected fast-tier
+    resident when their reverse turn comes, and how far ahead of need the
+    reverse sweep should promote spilled boundaries.
+
+    Built by :meth:`SegmentPlan.tier_plan`.  ``resident[j]`` refers to
+    segment ``j`` in *forward* order; the reverse sweep consumes boundaries
+    in descending ``begin`` order, so under the plan-aware (Belady) eviction
+    rule the fast tier holds the ``fast_slots`` *largest* begins at the end
+    of the forward sweep — exactly the boundaries needed first.
+    """
+
+    fast_slots: int               # boundary states the fast tier can hold
+    resident: Tuple[bool, ...]    # per segment (forward order): fast at need?
+    spilled: int                  # boundaries that must come from the slow tier
+    prefetch_distance: int        # segments of lead for promotions (>= 1)
+
+    @property
+    def num_segments(self) -> int:
+        return len(self.resident)
+
+
+@dataclass(frozen=True)
 class SegmentPlan:
     """Per-interval plan for an ``n``-step chain: the IR the executor drives
     and the compile cache is keyed from.
@@ -129,6 +153,47 @@ class SegmentPlan:
         one ``store_async`` per entry, the scan engine tags one offloaded
         boundary carry per entry."""
         return self.boundaries()
+
+    def reverse_access_order(self) -> Tuple[int, ...]:
+        """Boundary keys in the exact order the reverse sweep consumes them
+        (descending ``begin``).  This is what makes Level-2 eviction
+        plan-aware: the next-needed boundary is always the *largest*
+        remaining begin, so the Belady victim is the smallest."""
+        return tuple(seg.begin for seg in reversed(self.segments))
+
+    def tier_plan(self, capacity_bytes: int, state_bytes: int,
+                  t_t_slow: Optional[float] = None,
+                  t_seg_reverse: Optional[float] = None) -> TierPlan:
+        """Tier residency / prefetch-distance annotations for a
+        capacity-bounded Level-2 backend holding one ``state_bytes``
+        boundary per segment.
+
+        With ``k = capacity_bytes // state_bytes`` fast-tier slots and
+        plan-aware eviction, the end-of-forward resident set is the ``k``
+        largest begins; each is freed right after its reverse turn, so a
+        segment is served from the fast tier iff it is among the last ``k``
+        (``resident[j] == (num_segments - j <= k)``).  The other
+        ``spilled`` boundaries are promoted back ahead of need; the
+        prefetch distance is ``ceil(t_t_slow / t_seg_reverse)`` segments of
+        reverse work when the two times are given (the §3 overlap rule
+        applied to the slow tier), else 2 — one segment of extra lead over
+        the plain double-buffer — and 1 when nothing spills.
+        """
+        m = self.num_segments
+        k = m if state_bytes <= 0 else \
+            min(m, int(capacity_bytes) // int(state_bytes))
+        resident = tuple(m - j <= k for j in range(m))
+        spilled = m - k
+        if spilled <= 0:
+            distance = 1
+        elif t_t_slow is not None and t_seg_reverse is not None \
+                and t_seg_reverse > 0:
+            distance = max(1, min(m, math.ceil(t_t_slow / t_seg_reverse)))
+        else:
+            distance = min(m, 2)
+        return TierPlan(fast_slots=k, resident=resident,
+                        spilled=max(0, spilled),
+                        prefetch_distance=distance)
 
     def segment_lengths(self) -> Tuple[int, ...]:
         """Distinct segment lengths, descending — one compiled

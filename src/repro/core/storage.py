@@ -14,15 +14,33 @@ All backends speak the same protocol::
     delete(key), __contains__, keys()
 
 Backends are pluggable through a registry: ``make_backend("ram" | "disk" |
-"compressed", ...)`` builds one by name (``register_backend`` adds new
-kinds), and ``CompressedStorage`` wraps any inner backend with int8
+"compressed" | "tiered", ...)`` builds one by name (``register_backend``
+adds new kinds), and ``CompressedStorage`` wraps any inner backend with int8
 block-quantisation of the host copy (reusing
 ``repro.distributed.compression``), shrinking Level-2 footprint ~4x at a
 bounded, measured precision cost.
 
+``TieredStorage`` is the capacity-bounded realisation of the paper's "any
+size" claim: a fast tier (host RAM, ``capacity_bytes=``) that write-behind
+evicts cold boundary states to a slow tier (disk, optionally compressed).
+Eviction is plan-aware: ``set_plan`` hands it the ``SegmentPlan``'s exact
+reverse-order access sequence, so the victim is always the boundary whose
+next use is farthest away (Belady's rule — for the multistage schedule,
+the *smallest* segment begin).  The fast tier never exceeds its budget;
+states larger than the whole budget bypass it and go straight to the slow
+tier.
+
+Stored pytrees are frozen to read-only numpy arrays: ``get`` can then hand
+back the canonical copy without a defensive deep-copy, and a caller that
+tries to mutate a checkpoint in place gets a loud ``ValueError`` instead of
+silently corrupting the next Revolve replay.
+
 ``AsyncTransferEngine`` wraps a backend with a writer thread + per-key
 prefetch threads and exposes the async verbs the multistage executor needs:
 ``store_async``, ``wait_stores``, ``prefetch_async``, ``wait_prefetch``.
+``delete`` invalidates any staged prefetch of the key (delete + re-store
+can never hand back a stale value), and staged-prefetch bytes are counted
+(``staged_bytes`` / ``staged_peak_bytes``).
 """
 from __future__ import annotations
 
@@ -41,6 +59,38 @@ import jax
 def _to_host(tree: Any) -> Any:
     """Deep-copy a pytree of arrays to plain numpy (detaches from Level 1)."""
     return jax.tree_util.tree_map(lambda x: np.array(x, copy=True), tree)
+
+
+def _freeze(tree: Any) -> Any:
+    """Deep-copy a pytree to *read-only* numpy arrays.
+
+    The frozen copy is the backend's canonical checkpoint: ``get`` may
+    return it by reference (no per-read deep copy), because any caller
+    attempting in-place mutation raises ``ValueError`` instead of silently
+    corrupting the state the next Revolve replay starts from.
+    """
+    def f(x):
+        a = np.array(x, copy=True)
+        a.setflags(write=False)
+        return a
+
+    return jax.tree_util.tree_map(f, tree)
+
+
+def _freeze_in_place(tree: Any) -> Any:
+    """Mark a *freshly materialised* pytree read-only without copying.
+
+    For arrays no one else references (pickle/decode output, or already
+    frozen), clearing the writeable flag is enough — copying would just
+    double the transfer cost the caller is trying to hide.
+    """
+    def f(x):
+        a = np.asarray(x)
+        if a.flags.writeable:
+            a.setflags(write=False)
+        return a
+
+    return jax.tree_util.tree_map(f, tree)
 
 
 def tree_bytes(tree: Any) -> int:
@@ -71,7 +121,7 @@ class RAMStorage:
             time.sleep(nbytes / self.bandwidth)
 
     def put(self, key: Any, tree: Any) -> None:
-        host = _to_host(tree)
+        host = _freeze(tree)
         nb = tree_bytes(host)
         self._throttle(nb)
         with self._lock:
@@ -82,6 +132,9 @@ class RAMStorage:
             self.peak_bytes = max(self.peak_bytes, self.live_bytes)
 
     def get(self, key: Any) -> Any:
+        """Return the stored pytree.  Leaves are read-only numpy arrays
+        (the canonical checkpoint copy): mutating them raises, so the
+        aliasing can never corrupt a later replay."""
         with self._lock:
             host = self._data[key]
         nb = tree_bytes(host)
@@ -185,9 +238,13 @@ class CompressedStorage:
             inner = DiskStorage(directory) if directory else RAMStorage()
         self.inner = inner
         self.min_bytes = min_bytes
-        self.raw_bytes = 0          # pre-compression payload, for ratio tests
+        # _lock guards every mutable field of *this* wrapper (the inner
+        # backend has its own lock): put runs on the AsyncTransferEngine
+        # writer thread while callers read counters — the same backend-lock
+        # pattern RAMStorage uses.
+        self._lock = threading.Lock()
+        self._raw_bytes = 0         # pre-compression payload, for ratio tests
         self._treedefs: Dict[Any, Any] = {}   # key -> original structure
-        self._td_lock = threading.Lock()
 
     # -- per-leaf codec -------------------------------------------------------
     # A quantised leaf is the tuple (q_int8, scale_f32, dtype_exemplar);
@@ -220,21 +277,22 @@ class CompressedStorage:
         # (already ~4x smaller) encoded payload — a full-size extra copy on
         # the writer thread would just inflate T_T.
         leaves, treedef = jax.tree_util.tree_flatten(tree)
-        self.raw_bytes += tree_bytes(leaves)
-        with self._td_lock:
+        nb = tree_bytes(leaves)
+        with self._lock:
+            self._raw_bytes += nb
             self._treedefs[key] = treedef
         self.inner.put(key, [self._encode_leaf(x) for x in leaves])
 
     def get(self, key: Any) -> Any:
         encs = self.inner.get(key)
-        with self._td_lock:
+        with self._lock:
             treedef = self._treedefs[key]
         return jax.tree_util.tree_unflatten(
             treedef, [self._decode_leaf(x) for x in encs])
 
     def delete(self, key: Any) -> None:
         self.inner.delete(key)
-        with self._td_lock:
+        with self._lock:
             self._treedefs.pop(key, None)
 
     def __contains__(self, key: Any) -> bool:
@@ -242,6 +300,13 @@ class CompressedStorage:
 
     def keys(self) -> Iterable[Any]:
         return self.inner.keys()
+
+    @property
+    def raw_bytes(self) -> int:
+        """Pre-compression payload bytes (locked read: the writer thread
+        updates it concurrently with callers polling the ratio)."""
+        with self._lock:
+            return self._raw_bytes
 
     @property
     def bytes_written(self) -> int:  # compressed (on-the-wire) accounting
@@ -258,6 +323,297 @@ class CompressedStorage:
     @property
     def peak_bytes(self) -> int:
         return self.inner.peak_bytes
+
+
+class TieredStorage:
+    """Capacity-bounded two-tier Level-2 store: fast tier (host RAM,
+    ``capacity_bytes``) + slow tier (disk when ``directory`` is given,
+    otherwise a RAM stand-in; ``compress=True`` int8-quantises the slow
+    copies).
+
+    This is the paper's "memory can be reduced to *any* size" made literal:
+    ``put`` lands in the fast tier and, when the budget would overflow,
+    write-behind evicts the *coldest* resident to the slow tier.  Cold is
+    plan-aware — :meth:`set_plan` records the ``SegmentPlan``'s reverse
+    access sequence (boundaries are consumed in descending ``begin`` order),
+    so the victim is always the key whose next use is farthest away
+    (Belady's rule: the smallest begin).  Keys outside the plan (autotune
+    probes) evict first; with no plan, eviction is FIFO — identical to the
+    plan rule for the forward sweep's ascending stores.
+
+    ``get`` serves fast-tier hits by reference (frozen read-only arrays) and
+    *promotes* slow-tier hits back into the fast tier (demand promotion;
+    the executor additionally promotes ahead of need via its plan-driven
+    prefetch distance, see :meth:`plan_prefetch_distance`).  Promoted
+    entries are clean — evicting them again drops the fast copy without a
+    second slow-tier write.
+
+    Invariant (asserted in tests and the capacity-sweep benchmark):
+    ``fast_live_bytes <= capacity_bytes`` at every instant — a state larger
+    than the whole budget bypasses the fast tier entirely.
+    """
+
+    def __init__(self, capacity_bytes: int, slow: Any = None,
+                 directory: Optional[str] = None, compress: bool = False,
+                 bandwidth: Optional[float] = None):
+        if capacity_bytes <= 0:
+            raise ValueError(
+                f"need capacity_bytes > 0, got {capacity_bytes}")
+        if slow is None:
+            slow = DiskStorage(directory) if directory else RAMStorage()
+        if compress:
+            slow = CompressedStorage(inner=slow)
+        self.slow = slow
+        self.capacity_bytes = int(capacity_bytes)
+        self.bandwidth = bandwidth          # fast-tier throttle (bytes/s)
+        self._lock = threading.Lock()
+        self._fast: Dict[Any, Any] = {}
+        self._sizes: Dict[Any, int] = {}    # sizes of fast-resident entries
+        self._clean: set = set()            # fast entries also valid in slow
+        # Write-behind pipeline.  _writing holds the latest pending payload
+        # per key as (generation, tree); _wb_active is the set of keys some
+        # thread is currently draining (per-key drain loops keep slow-tier
+        # writes of the same key ordered, so an old eviction can never land
+        # after — and overwrite — a newer one); _wb_deleted tombstones keys
+        # deleted while a writeback was mid-flight.
+        self._writing: Dict[Any, Any] = {}
+        self._wb_active: set = set()
+        self._wb_deleted: set = set()
+        self._seq: Dict[Any, int] = {}      # insertion order (FIFO fallback)
+        self._next_seq = 0
+        self._distance: Dict[Any, int] = {}  # plan key -> reverse-use distance
+        # -- instrumentation ---------------------------------------------------
+        self.fast_live_bytes = 0
+        self.fast_peak_bytes = 0   # high-water fast tier: must obey capacity
+        self.evictions = 0         # fast -> slow write-behind spills
+        self.promotions = 0        # slow -> fast demand/prefetch promotions
+        self.fast_hits = 0
+        self.slow_hits = 0
+        self.bytes_written = 0     # total put payload (fast + direct-to-slow)
+        self.bytes_read = 0
+        self._peak_total = 0
+
+    def _throttle(self, nbytes: int) -> None:
+        if self.bandwidth:
+            time.sleep(nbytes / self.bandwidth)
+
+    # -- plan awareness -------------------------------------------------------
+    def set_plan(self, plan: Any) -> None:
+        """Record the reverse-order access sequence of a ``SegmentPlan``:
+        ``distance[key]`` = how many reverse steps until ``key`` is needed
+        (0 = needed first).  The eviction victim maximises this distance."""
+        with self._lock:
+            self._distance = {
+                key: d for d, key in enumerate(plan.reverse_access_order())}
+
+    def plan_prefetch_distance(self, plan: Any) -> int:
+        """How many segments ahead of need the reverse sweep should promote
+        boundaries (the executor's prefetch depth).  The policy lives in
+        ``SegmentPlan.tier_plan`` — this method only supplies the observed
+        boundary-state size; when nothing is resident yet (or every state
+        bypassed the fast tier), it assumes spill."""
+        m = len(plan.boundaries())
+        with self._lock:
+            sizes = [self._sizes.get(k) for k in plan.boundaries()]
+            state = max((s for s in sizes if s is not None), default=0)
+        if state == 0:   # no resident boundary to size from: assume spill
+            return min(m, 2) if m else 1
+        return plan.tier_plan(self.capacity_bytes,
+                              state).prefetch_distance
+
+    def _evict_rank(self, key: Any):
+        """Sort key for victim selection: largest wins.  Plan keys rank by
+        reverse-use distance; unknown keys (not in any future access
+        sequence) rank above every plan key, oldest first."""
+        d = self._distance.get(key)
+        if d is None:
+            return (1, -self._seq.get(key, 0))
+        return (0, d)
+
+    def _pick_victims_locked(self) -> list:
+        """Pop residents (coldest first) until the budget holds.  Victims
+        move to the ``_writing`` staging map — still readable, no longer
+        counted against the fast tier.  Returns the keys whose drain loop
+        this thread must run (a key already being drained keeps its drainer;
+        only the pending payload is replaced, preserving per-key order)."""
+        to_drain = []
+        while self.fast_live_bytes > self.capacity_bytes and self._fast:
+            victim = max(self._fast, key=self._evict_rank)
+            tree = self._fast.pop(victim)
+            nb = self._sizes.pop(victim)
+            self.fast_live_bytes -= nb
+            self._seq.pop(victim, None)
+            if victim in self._clean:     # slow copy already valid: drop
+                self._clean.discard(victim)
+                continue
+            self._writing[victim] = tree
+            if victim not in self._wb_active:
+                self._wb_active.add(victim)
+                to_drain.append(victim)
+        return to_drain
+
+    def _write_behind(self, keys: list) -> None:
+        """Drain each key's pending write-behind payload(s).  One drainer
+        per key at a time (``_wb_active``): a re-eviction of the same key
+        while its writeback is mid-flight just replaces the pending payload,
+        and this loop writes it afterwards — slow-tier writes of a key are
+        therefore ordered, so a stale payload can never land on top of a
+        newer one."""
+        for key in keys:
+            while True:
+                with self._lock:
+                    tree = self._writing.get(key)   # peek: stays readable
+                    deleted = False
+                    if tree is None:
+                        deleted = key in self._wb_deleted
+                        self._wb_deleted.discard(key)
+                        if not deleted:         # drained: retire this drainer
+                            self._wb_active.discard(key)
+                            self._note_total_peak_locked()
+                            break
+                if tree is None:
+                    # deleted while a writeback was mid-flight: remove the
+                    # slow copy *while still registered as the drainer* — a
+                    # concurrent re-store + re-eviction queues its payload
+                    # behind us and the next iteration writes it after this
+                    # delete, never the other way round
+                    self.slow.delete(key)
+                    continue
+                self.slow.put(key, tree)
+                with self._lock:
+                    self.evictions += 1
+                    if self._writing.get(key) is tree:   # not replaced/deleted
+                        self._writing.pop(key)
+
+    def _note_total_peak_locked(self) -> None:
+        # nested acquisition fast-lock -> slow-lock is safe: the slow
+        # backend never calls back into this wrapper
+        total = (self.fast_live_bytes
+                 + sum(tree_bytes(t) for t in self._writing.values())
+                 + self.slow.live_bytes)
+        self._peak_total = max(getattr(self, "_peak_total", 0), total)
+
+    # -- backend protocol -----------------------------------------------------
+    def put(self, key: Any, tree: Any) -> None:
+        host = _freeze(tree)
+        nb = tree_bytes(host)
+        self._throttle(nb)
+        if nb > self.capacity_bytes:
+            # One state alone overflows the budget: bypass the fast tier
+            # (the capacity invariant holds unconditionally).
+            with self._lock:
+                self.bytes_written += nb
+                self._drop_fast_locked(key)
+                self._wb_deleted.discard(key)   # re-store revokes a tombstone
+                if key in self._wb_active:
+                    # an older writeback of this key is mid-flight: queue
+                    # the new value behind it (per-key order) instead of
+                    # racing it to the slow tier
+                    self._writing[key] = host
+                    self._note_total_peak_locked()
+                    return
+            self.slow.put(key, host)
+            with self._lock:
+                self._note_total_peak_locked()
+            return
+        with self._lock:
+            self.bytes_written += nb
+            self._drop_fast_locked(key)
+            self._wb_deleted.discard(key)   # re-store revokes the tombstone
+            self._fast[key] = host
+            self._sizes[key] = nb
+            self.fast_live_bytes += nb
+            self._seq[key] = self._next_seq
+            self._next_seq += 1
+            to_drain = self._pick_victims_locked()
+            self.fast_peak_bytes = max(self.fast_peak_bytes,
+                                       self.fast_live_bytes)
+            self._note_total_peak_locked()
+        self._write_behind(to_drain)
+
+    def _drop_fast_locked(self, key: Any) -> None:
+        """Remove any fast-resident copy of ``key`` (re-store/overwrite)."""
+        if key in self._fast:
+            self._fast.pop(key)
+            self.fast_live_bytes -= self._sizes.pop(key)
+            self._seq.pop(key, None)
+        self._clean.discard(key)
+
+    def get(self, key: Any) -> Any:
+        with self._lock:
+            host = self._fast.get(key)
+            if host is None:
+                host = self._writing.get(key)
+            if host is not None:
+                nb = tree_bytes(host)
+                self.fast_hits += 1
+                self.bytes_read += nb
+        if host is not None:
+            self._throttle(nb)
+            return host
+        # slow-tier hit: fetch outside the lock, then promote.  Disk and
+        # compressed slow tiers materialise fresh arrays per get (and a RAM
+        # one returns already-frozen arrays), so freezing in place costs
+        # nothing — no defensive copy on the promotion hot path.
+        host = _freeze_in_place(self.slow.get(key))
+        nb = tree_bytes(host)
+        with self._lock:
+            self.slow_hits += 1
+            self.bytes_read += nb
+            to_drain = []
+            if nb <= self.capacity_bytes and key not in self._fast:
+                self.promotions += 1
+                self._fast[key] = host
+                self._sizes[key] = nb
+                self.fast_live_bytes += nb
+                self._seq[key] = self._next_seq
+                self._next_seq += 1
+                self._clean.add(key)   # slow copy stays valid
+                to_drain = self._pick_victims_locked()
+                self.fast_peak_bytes = max(self.fast_peak_bytes,
+                                           self.fast_live_bytes)
+            self._note_total_peak_locked()
+        self._write_behind(to_drain)
+        return host
+
+    def delete(self, key: Any) -> None:
+        with self._lock:
+            self._drop_fast_locked(key)
+            self._writing.pop(key, None)    # cancel any pending writeback
+            if key in self._wb_active:
+                # a writeback is mid-flight: tombstone the key so its
+                # drainer removes the slow copy the moment it lands
+                self._wb_deleted.add(key)
+            self._distance.pop(key, None)
+        self.slow.delete(key)
+
+    def __contains__(self, key: Any) -> bool:
+        with self._lock:
+            if key in self._fast or key in self._writing:
+                return True
+        return key in self.slow
+
+    def keys(self) -> Iterable[Any]:
+        with self._lock:
+            fast = set(self._fast) | set(self._writing)
+        return list(fast | set(self.slow.keys()))
+
+    # -- accounting (backend protocol: live/peak span both tiers) -------------
+    @property
+    def live_bytes(self) -> int:
+        with self._lock:
+            writing = sum(tree_bytes(t) for t in self._writing.values())
+            fast = self.fast_live_bytes
+        return fast + writing + self.slow.live_bytes
+
+    @property
+    def peak_bytes(self) -> int:
+        # High-water mark of the *total* Level-2 footprint (both tiers;
+        # clean fast copies duplicate slow bytes, so this is an upper
+        # bound).  The budgeted quantity is fast_peak_bytes.
+        with self._lock:
+            return max(getattr(self, "_peak_total", 0),
+                       self.fast_peak_bytes, self.slow.peak_bytes)
 
 
 # ---------------------------------------------------------------------------
@@ -277,7 +633,9 @@ def make_backend(kind: str, **kwargs: Any) -> Any:
 
     Built-ins: ``"ram"`` (``bandwidth=`` optional throttle), ``"disk"``
     (``directory=`` required), ``"compressed"`` (int8-quantised wrapper;
-    ``directory=`` switches the inner store from RAM to disk).
+    ``directory=`` switches the inner store from RAM to disk), ``"tiered"``
+    (``capacity_bytes=`` required fast-tier budget; ``directory=`` puts the
+    slow tier on disk, ``compress=True`` int8-quantises the spilled copies).
     """
     try:
         factory = _BACKENDS[kind]
@@ -294,6 +652,12 @@ register_backend(
     "compressed",
     lambda directory=None, min_bytes=256, inner=None: CompressedStorage(
         inner=inner, directory=directory, min_bytes=min_bytes))
+register_backend(
+    "tiered",
+    lambda capacity_bytes, directory=None, slow=None, compress=False,
+    bandwidth=None: TieredStorage(
+        capacity_bytes, slow=slow, directory=directory, compress=compress,
+        bandwidth=bandwidth))
 
 
 class AsyncTransferEngine:
@@ -306,6 +670,12 @@ class AsyncTransferEngine:
 
     Instruments stall time so experiments can report how often compute waited
     on Level 2 (zero at the paper's operating point I >= ceil(T_T/T_A)).
+    Counters (``num_stores``/``num_prefetches``, staged-byte accounting) are
+    guarded by the engine lock — callers may issue verbs from any thread.
+
+    ``delete(key)`` invalidates any staged prefetch of ``key`` and detaches
+    its in-flight prefetch job, so a delete + re-store + prefetch sequence
+    always observes the re-stored value, never a stale staged one.
     """
 
     def __init__(self, backend):
@@ -320,6 +690,8 @@ class AsyncTransferEngine:
         self.prefetch_stall_s = 0.0
         self.num_stores = 0
         self.num_prefetches = 0
+        self.staged_bytes = 0       # host RAM held by staged prefetches
+        self.staged_peak_bytes = 0  # its high-water mark across the run
         self._writer = threading.Thread(target=self._writer_loop, daemon=True)
         self._writer.start()
 
@@ -342,7 +714,8 @@ class AsyncTransferEngine:
         # Snapshot on the caller's thread (cheap) so later in-place mutation
         # of the running state can never corrupt the checkpoint.
         self._store_q.put((key, _to_host(tree)))
-        self.num_stores += 1
+        with self._lock:
+            self.num_stores += 1
 
     def _raise_pending(self) -> None:
         if self._errors:
@@ -387,15 +760,25 @@ class AsyncTransferEngine:
                 return
             ev = threading.Event()
             self._prefetch_events[key] = ev
-        self.num_prefetches += 1
+            self.num_prefetches += 1
 
         def _job() -> None:
+            # The staged result (and any error) is only published while this
+            # job's event is still the registered one for the key: a delete
+            # (or delete + re-store + new prefetch) in the meantime detaches
+            # this job, so its value can never be observed stale.
             try:
                 val = self.backend.get(key)
                 with self._lock:
-                    self._prefetched[key] = val
+                    if self._prefetch_events.get(key) is ev:
+                        self._prefetched[key] = val
+                        self.staged_bytes += tree_bytes(val)
+                        self.staged_peak_bytes = max(self.staged_peak_bytes,
+                                                     self.staged_bytes)
             except Exception as e:
-                self._errors.append(e)
+                with self._lock:
+                    if self._prefetch_events.get(key) is ev:
+                        self._errors.append(e)
             finally:
                 ev.set()
 
@@ -417,20 +800,45 @@ class AsyncTransferEngine:
         ev.wait()
         self.prefetch_stall_s += time.perf_counter() - t0
         self._raise_pending()
+        _MISSING = object()
         with self._lock:
-            self._prefetch_events.pop(key, None)
-            return self._prefetched.pop(key)
+            if self._prefetch_events.get(key) is ev:
+                self._prefetch_events.pop(key)
+            val = self._prefetched.pop(key, _MISSING)
+            if val is not _MISSING:
+                self.staged_bytes -= tree_bytes(val)
+        if val is _MISSING:
+            # the staged value was invalidated (delete raced this wait):
+            # fall back to a demand fetch of the current backend state
+            t0 = time.perf_counter()
+            val = self.backend.get(key)
+            self.prefetch_stall_s += time.perf_counter() - t0
+            self._raise_pending()
+        return val
 
     def delete(self, key: Any) -> None:
+        """Drop ``key`` from Level 2 *and* invalidate any staged or
+        in-flight prefetch of it — a later re-store + prefetch must observe
+        the new value, never the stale staging entry."""
+        with self._lock:
+            self._prefetch_events.pop(key, None)   # detaches in-flight jobs
+            dropped = self._prefetched.pop(key, None)
+            if dropped is not None:
+                self.staged_bytes -= tree_bytes(dropped)
         self.backend.delete(key)
 
     def close(self) -> None:
         """Drain outstanding stores (bounded — never deadlocks on a dead
-        writer thread), stop the writer, and re-raise any pending transfer
-        error so failures can't vanish silently at shutdown."""
+        writer thread), stop the writer, drop staged prefetches that were
+        never waited on (and their events), and re-raise any pending
+        transfer error so failures can't vanish silently at shutdown."""
         self._join_stores(timeout=10.0)
         self._stop.set()
         self._writer.join(timeout=2.0)
+        with self._lock:
+            self._prefetched.clear()
+            self._prefetch_events.clear()
+            self.staged_bytes = 0
         self._raise_pending()
 
     def __enter__(self):

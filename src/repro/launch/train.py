@@ -7,8 +7,10 @@ latest checkpoint, optional elastic re-meshing on restart, and retry-wrapped
 steps.
 
 Offloaded-backprop strategies ride the same flags the API exposes: pass
-``--strategy multistage_async`` (plus ``--engine``/``--interval``/``--slots``)
-to route the backward pass through the planner-driven engines — with
+``--strategy multistage_async`` (plus ``--engine``/``--interval``/``--slots``,
+and ``--storage``/``--l2-capacity`` to bound the Level-2 host-RAM footprint
+with the tiered RAM-over-disk backend) to route the backward pass through
+the planner-driven engines — with
 ``--engine scan`` the whole train step stays one XLA computation, so on a
 multi-device host the launcher jits it over a data-parallel mesh with
 sharded batches (the sharded step executes the identical ``SegmentPlan``
@@ -23,6 +25,8 @@ Examples::
     XLA_FLAGS=--xla_force_host_platform_device_count=2 \
         PYTHONPATH=src python -m repro.launch.train --arch lstm-paper \
         --smoke --steps 8 --strategy multistage_async --engine scan
+    PYTHONPATH=src python -m repro.launch.train --arch lstm-paper --smoke \
+        --steps 8 --strategy multistage_async --l2-capacity 1000000
 """
 from __future__ import annotations
 
@@ -68,6 +72,15 @@ def main(argv=None):
                     help="pin the Level-2 store interval I (None: autotune)")
     ap.add_argument("--slots", type=int, default=None,
                     help="pin the Level-1 snapshot budget s")
+    ap.add_argument("--storage", default=None,
+                    choices=("ram", "disk", "compressed", "tiered"),
+                    help="Level-2 backend for the executor engines "
+                         "(default ram; implied tiered by --l2-capacity)")
+    ap.add_argument("--l2-capacity", type=int, default=None, metavar="BYTES",
+                    help="fast-tier budget for storage=tiered: the Level-2 "
+                         "store never exceeds this; cold boundaries spill "
+                         "to disk and autotune sizes I from the effective "
+                         "(capacity-aware) transfer time")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -90,14 +103,27 @@ def main(argv=None):
         print(f"[resume] restored step {start_step} from {args.ckpt_dir}")
 
     if args.strategy is None and (args.engine or args.interval is not None
-                                  or args.slots is not None):
-        ap.error("--engine/--interval/--slots configure an offloaded "
-                 "strategy; pass --strategy as well")
+                                  or args.slots is not None
+                                  or args.storage is not None
+                                  or args.l2_capacity is not None):
+        ap.error("--engine/--interval/--slots/--storage/--l2-capacity "
+                 "configure an offloaded strategy; pass --strategy as well")
+    if args.l2_capacity is not None and args.storage in (None, "tiered"):
+        args.storage = "tiered"   # --l2-capacity implies the tiered backend
+    elif args.l2_capacity is not None:
+        ap.error(f"--l2-capacity needs --storage tiered "
+                 f"(got --storage {args.storage})")
+    if args.storage == "tiered" and args.l2_capacity is None:
+        ap.error("--storage tiered needs --l2-capacity BYTES")
     offload_opts = {}
     if args.interval is not None:
         offload_opts["interval"] = args.interval
     if args.slots is not None:
         offload_opts["slots"] = args.slots
+    if args.storage is not None:
+        offload_opts["storage"] = args.storage
+    if args.l2_capacity is not None:
+        offload_opts["l2_capacity_bytes"] = args.l2_capacity
     raw_step = make_train_step(api, opt, grad_accum=args.grad_accum,
                                strategy=args.strategy, engine=args.engine,
                                offload_opts=offload_opts or None)

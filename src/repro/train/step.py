@@ -77,9 +77,11 @@ def make_train_step(api: ModelAPI, optimizer: Optimizer, *,
     one to use when the step is jitted with sharded in/out specs on a
     device mesh, and the only one that composes with ``grad_accum``).
     All three execute the same ``SegmentPlan``.  Remaining ``offload_opts``
-    are forwarded (interval=, slots=, storage=, ...);
+    are forwarded (interval=, slots=, storage=, l2_capacity_bytes=, ...);
     ``storage="compressed"`` int8-quantises Level-2 boundary states on the
-    executor engines.
+    executor engines, and ``storage="tiered"`` + ``l2_capacity_bytes=``
+    bounds the Level-2 host-RAM footprint (cold boundaries spill to disk
+    in plan-aware order).
     """
 
     def loss_fn(params, batch):

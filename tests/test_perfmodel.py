@@ -83,3 +83,87 @@ def test_times_from_roofline():
                                         1e9 / hw.hbm_bw))
     assert st_.interval == math.ceil(st_.t_t / st_.t_a)
     assert st_.never_stalls
+
+
+# ---------------------------------------------------------------------------
+# two-tier (capacity-bounded) Level-2 model
+# ---------------------------------------------------------------------------
+
+
+def test_effective_transfer_time_regimes():
+    # 8 segments of 100 B: fast while they fit, slow-bound once they don't
+    args = dict(n=64, interval=8, state_bytes=100, t_t_fast=1e-3,
+                t_t_slow=8e-3)
+    assert pm.effective_transfer_time(capacity_bytes=800, **args) == 1e-3
+    assert pm.effective_transfer_time(capacity_bytes=799, **args) == 8e-3
+    # the write-behind pipeline is bottlenecked by the slower stage
+    assert pm.effective_transfer_time(
+        n=64, interval=8, state_bytes=100, capacity_bytes=0,
+        t_t_fast=9e-3, t_t_slow=8e-3) == 9e-3
+
+
+def test_choose_tiered_interval():
+    # everything fits at the fast optimum: the §3 fast-tier rule applies
+    assert pm.choose_tiered_interval(
+        n=64, state_bytes=100, capacity_bytes=100 * 64,
+        t_a=1e-3, t_t_fast=4e-3, t_t_slow=32e-3) == 4
+    # tight budget (4 states): I grows to the cheaper escape — here fitting
+    # all boundaries on the fast tier (I=16) beats the slow-tier rate (I=32)
+    assert pm.choose_tiered_interval(
+        n=64, state_bytes=100, capacity_bytes=100 * 4,
+        t_a=1e-3, t_t_fast=4e-3, t_t_slow=32e-3) == 16
+    # slow tier keeps up sooner than the boundaries fit: accept the spill
+    assert pm.choose_tiered_interval(
+        n=64, state_bytes=100, capacity_bytes=100 * 2,
+        t_a=1e-3, t_t_fast=4e-3, t_t_slow=8e-3) == 8
+    # nothing ever fits (capacity < one state): the slow tier sets I
+    assert pm.choose_tiered_interval(
+        n=64, state_bytes=100, capacity_bytes=50,
+        t_a=1e-3, t_t_fast=4e-3, t_t_slow=8e-3) == 8
+    # never below the fast-tier optimum
+    assert pm.choose_tiered_interval(
+        n=64, state_bytes=100, capacity_bytes=50,
+        t_a=1e-3, t_t_fast=8e-3, t_t_slow=1e-3) == 8
+
+
+def test_t_async_tiered_constant_overhead_when_slow_keeps_up():
+    """At I >= ceil(T_T_eff/T_A) the two-tier overhead is constant in n
+    even when every boundary spills to the slow tier."""
+    kw = dict(interval=8, s=4, t_a=1e-3, t_b=2e-3, t_t_fast=1e-3,
+              t_t_slow=8e-3, state_bytes=100, capacity_bytes=100)
+    per_step = [pm.t_async_tiered(n, **kw) / n for n in (64, 256, 1024)]
+    assert max(per_step) < 1.05 * min(per_step)
+    # a forced-small interval pays the slow tier's stall, visibly
+    assert pm.t_async_tiered(256, interval=2, s=4, t_a=1e-3, t_b=2e-3,
+                             t_t_fast=1e-3, t_t_slow=8e-3, state_bytes=100,
+                             capacity_bytes=100) > \
+        pm.t_async_tiered(256, **{**kw})
+
+
+def test_fast_peak_bytes_model():
+    assert pm.fast_peak_bytes_model(64, 8, 100, 100 * 64) == 800
+    assert pm.fast_peak_bytes_model(64, 8, 100, 100 * 3) == 300
+    assert pm.fast_peak_bytes_model(64, 8, 100, 50) == 0
+    assert pm.fast_tier_slots(350, 100) == 3
+    with pytest.raises(ValueError):
+        pm.fast_tier_slots(100, 0)
+
+
+def test_tier_plan_annotations():
+    from repro.core.schedule import segment_plan
+
+    plan = segment_plan(n=64, interval=8, s_l1=4)       # 8 segments
+    assert plan.reverse_access_order() == tuple(range(56, -1, -8))
+    tp = plan.tier_plan(capacity_bytes=3 * 100, state_bytes=100)
+    assert tp.fast_slots == 3 and tp.spilled == 5
+    # the 3 largest begins are resident when their reverse turn comes
+    assert tp.resident == (False,) * 5 + (True,) * 3
+    assert tp.prefetch_distance == 2
+    # everything fits: plain double-buffering
+    tp_all = plan.tier_plan(capacity_bytes=8 * 100, state_bytes=100)
+    assert tp_all.spilled == 0 and tp_all.prefetch_distance == 1
+    assert all(tp_all.resident)
+    # timed distance: one slow fetch spans ~3 segments of reverse work
+    tp_t = plan.tier_plan(capacity_bytes=100, state_bytes=100,
+                          t_t_slow=3e-3, t_seg_reverse=1.1e-3)
+    assert tp_t.prefetch_distance == 3

@@ -1,6 +1,9 @@
-"""Level-2 backend registry, the compressed backend, and the
+"""Level-2 backend registry, the compressed backend, the capacity-bounded
+tiered backend, the storage-layer concurrency regressions, and the
 AsyncTransferEngine error/shutdown hardening."""
 import tempfile
+import threading
+import time
 
 import jax
 import jax.numpy as jnp
@@ -8,9 +11,10 @@ import numpy as np
 import pytest
 
 from repro import api
+from repro.core import schedule as ms
 from repro.core.storage import (AsyncTransferEngine, CompressedStorage,
-                                DiskStorage, RAMStorage, make_backend,
-                                register_backend, tree_bytes)
+                                DiskStorage, RAMStorage, TieredStorage,
+                                make_backend, register_backend, tree_bytes)
 from repro.distributed.compression import quantization_error_bound
 
 KEY = jax.random.PRNGKey(0)
@@ -221,3 +225,416 @@ def test_close_is_idempotent_after_error():
         eng.wait_stores()
     eng.close()
     eng.close()
+
+
+# ---------------------------------------------------------------------------
+# concurrency regressions (threaded counters, stale prefetch, aliasing)
+# ---------------------------------------------------------------------------
+
+
+def test_compressed_raw_bytes_counter_threadsafe():
+    """raw_bytes is mutated on the AsyncTransferEngine writer thread;
+    unguarded `+=` loses increments under concurrent puts (regression:
+    the counter was updated without the backend lock)."""
+    store = CompressedStorage(min_bytes=1 << 30)  # raw passthrough: fast puts
+    tree = {"a": np.ones((32,), np.float32)}
+    nb = tree_bytes(tree)
+    n_threads, n_puts = 8, 50
+
+    def hammer(tid):
+        for i in range(n_puts):
+            store.put((tid, i), tree)
+
+    threads = [threading.Thread(target=hammer, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert store.raw_bytes == n_threads * n_puts * nb
+
+
+def test_engine_counters_threadsafe():
+    """num_stores / num_prefetches are incremented on caller threads —
+    they must be exact under concurrent store_async/prefetch_async."""
+    eng = AsyncTransferEngine(RAMStorage())
+    tree = {"a": np.ones((8,), np.float32)}
+    n_threads, n_keys = 8, 40
+
+    def stores(tid):
+        for i in range(n_keys):
+            eng.store_async((tid, i), tree)
+
+    threads = [threading.Thread(target=stores, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    eng.wait_stores()
+    assert eng.num_stores == n_threads * n_keys
+
+    def prefetches(tid):
+        for i in range(n_keys):
+            eng.prefetch_async((tid, i))
+
+    threads = [threading.Thread(target=prefetches, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    # every key prefetched exactly once (dedup is under the lock too)
+    assert eng.num_prefetches == n_threads * n_keys
+    for tid in range(n_threads):
+        for i in range(n_keys):
+            np.testing.assert_array_equal(
+                eng.wait_prefetch((tid, i))["a"], tree["a"])
+    eng.close()
+
+
+def test_delete_invalidates_staged_prefetch():
+    """delete + re-store + prefetch must observe the NEW value (regression:
+    prefetch_async returned early on the staged key, handing back the
+    stale pre-delete state)."""
+    eng = AsyncTransferEngine(RAMStorage())
+    eng.store_async(0, {"a": np.full((4,), 1.0, np.float32)})
+    eng.wait_stores()
+    eng.prefetch_async(0)
+    # let the prefetch land in staging before the delete
+    deadline = time.monotonic() + 5.0
+    while 0 not in eng._prefetched and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert 0 in eng._prefetched
+    eng.delete(0)
+    eng.store_async(0, {"a": np.full((4,), 2.0, np.float32)})
+    eng.wait_stores()
+    eng.prefetch_async(0)
+    got = eng.wait_prefetch(0)
+    np.testing.assert_array_equal(got["a"], np.full((4,), 2.0, np.float32))
+    eng.close()
+
+
+def test_delete_detaches_inflight_prefetch():
+    """A prefetch still in flight when its key is deleted must not publish
+    a stale value (or a spurious error) afterwards."""
+    release = threading.Event()
+
+    class SlowBackend(RAMStorage):
+        def get(self, key):
+            release.wait(5.0)
+            return super().get(key)
+
+    eng = AsyncTransferEngine(SlowBackend())
+    eng.store_async(0, {"a": np.full((4,), 1.0, np.float32)})
+    eng.wait_stores()
+    eng.prefetch_async(0)          # blocked in SlowBackend.get
+    eng.delete(0)                  # detaches the in-flight job
+    eng.store_async(0, {"a": np.full((4,), 2.0, np.float32)})
+    eng.wait_stores()
+    release.set()                  # stale job completes -> must be discarded
+    eng.prefetch_async(0)
+    got = eng.wait_prefetch(0)
+    np.testing.assert_array_equal(got["a"], np.full((4,), 2.0, np.float32))
+    eng.close()
+
+
+def test_close_drops_leaked_staged_prefetches():
+    """Prefetches never waited on must not leak staging entries (or their
+    events) past close()."""
+    eng = AsyncTransferEngine(RAMStorage())
+    for k in range(3):
+        eng.store_async(k, {"a": np.ones((4,), np.float32)})
+    eng.wait_stores()
+    for k in range(3):
+        eng.prefetch_async(k)
+    deadline = time.monotonic() + 5.0
+    while len(eng._prefetched) < 3 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert eng.staged_bytes > 0
+    eng.close()
+    assert eng._prefetched == {} and eng._prefetch_events == {}
+    assert eng.staged_bytes == 0
+
+
+def test_ram_get_mutation_cannot_corrupt_checkpoint():
+    """RAMStorage.get returns the canonical copy: in-place mutation must
+    raise (read-only views) instead of silently corrupting the state the
+    next Revolve replay starts from (regression: get aliased a writable
+    dict entry)."""
+    store = RAMStorage()
+    store.put("k", {"a": np.arange(6, dtype=np.float32)})
+    got = store.get("k")
+    with pytest.raises(ValueError):
+        got["a"][0] = 99.0
+    np.testing.assert_array_equal(
+        store.get("k")["a"], np.arange(6, dtype=np.float32))
+
+
+def test_staged_prefetch_bytes_accounted():
+    eng = AsyncTransferEngine(RAMStorage())
+    tree = {"a": np.ones((16,), np.float32)}
+    nb = tree_bytes(tree)
+    for k in range(2):
+        eng.store_async(k, tree)
+    eng.wait_stores()
+    for k in range(2):
+        eng.prefetch_async(k)
+    deadline = time.monotonic() + 5.0
+    while eng.staged_bytes < 2 * nb and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert eng.staged_bytes == 2 * nb
+    assert eng.staged_peak_bytes == 2 * nb
+    eng.wait_prefetch(0)
+    eng.wait_prefetch(1)
+    assert eng.staged_bytes == 0
+    assert eng.staged_peak_bytes == 2 * nb
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# tiered backend
+# ---------------------------------------------------------------------------
+
+
+def _state(v, shape=(4, 4)):
+    return {"a": np.full(shape, float(v), np.float32)}
+
+
+_NB = tree_bytes(_state(0))
+
+
+def test_tiered_capacity_respected():
+    ts = TieredStorage(capacity_bytes=2 * _NB)
+    for k in range(5):
+        ts.put(k, _state(k))
+    assert ts.fast_peak_bytes <= 2 * _NB
+    assert ts.fast_live_bytes <= 2 * _NB
+    assert ts.evictions == 3
+    for k in range(5):
+        np.testing.assert_array_equal(ts.get(k)["a"], _state(k)["a"])
+        assert ts.fast_peak_bytes <= 2 * _NB  # promotions stay bounded too
+    assert k in ts
+    ts.delete(0)
+    assert 0 not in ts
+
+
+def test_tiered_eviction_order_plan_aware():
+    """With the SegmentPlan registered, the eviction victim is always the
+    boundary whose reverse-sweep use is farthest away (the smallest begin);
+    the fast tier ends the forward sweep holding the boundaries needed
+    first."""
+    plan = ms.segment_plan(n=5, interval=1, s_l1=1)  # boundaries 0..4
+    ts = TieredStorage(capacity_bytes=2 * _NB)
+    ts.set_plan(plan)
+    for k in range(5):
+        ts.put(k, _state(k))
+    assert sorted(ts._fast) == [3, 4]          # needed first in reverse
+    for k in (0, 1, 2):                        # cold keys spilled to slow
+        assert k in ts.slow
+    assert ts.evictions == 3
+
+
+def test_tiered_demand_promotion():
+    plan = ms.segment_plan(n=4, interval=1, s_l1=1)
+    ts = TieredStorage(capacity_bytes=2 * _NB)
+    ts.set_plan(plan)
+    for k in range(4):
+        ts.put(k, _state(k))
+    assert sorted(ts._fast) == [2, 3]
+    # reverse-order consumption: hits are fast, spilled keys promote
+    np.testing.assert_array_equal(ts.get(3)["a"], _state(3)["a"])
+    ts.delete(3)
+    np.testing.assert_array_equal(ts.get(2)["a"], _state(2)["a"])
+    ts.delete(2)
+    assert ts.promotions == 0 and ts.fast_hits == 2
+    got = ts.get(1)                            # slow hit -> promotion
+    np.testing.assert_array_equal(got["a"], _state(1)["a"])
+    assert ts.promotions == 1 and ts.slow_hits == 1
+    assert 1 in ts._fast
+    assert ts.fast_peak_bytes <= 2 * _NB
+
+
+def test_tiered_oversized_state_bypasses_fast_tier():
+    ts = TieredStorage(capacity_bytes=_NB // 2)
+    ts.put("big", _state(7))
+    assert ts.fast_peak_bytes == 0
+    np.testing.assert_array_equal(ts.get("big")["a"], _state(7)["a"])
+    ts.delete("big")
+    assert "big" not in ts
+
+
+def test_tiered_get_mutation_cannot_corrupt_checkpoint():
+    ts = TieredStorage(capacity_bytes=_NB)  # key 0 spills to slow
+    ts.put(0, _state(1))
+    ts.put(1, _state(2))
+    for k in (0, 1):  # one served from slow, one from fast
+        got = ts.get(k)
+        with pytest.raises(ValueError):
+            got["a"][0, 0] = 99.0
+        np.testing.assert_array_equal(ts.get(k)["a"], _state(k + 1)["a"])
+
+
+def test_tiered_delete_during_writeback_leaves_nothing():
+    """delete() racing an in-flight write-behind eviction must remove the
+    slow copy once the writeback lands."""
+    gate = threading.Event()
+
+    class GatedSlow(RAMStorage):
+        def put(self, key, tree):
+            gate.wait(5.0)
+            super().put(key, tree)
+
+    ts = TieredStorage(capacity_bytes=_NB, slow=GatedSlow())
+    ts.put(0, _state(0))
+
+    def put_evicting():
+        ts.put(1, _state(1))   # evicts 0; blocks in GatedSlow.put
+
+    t = threading.Thread(target=put_evicting)
+    t.start()
+    deadline = time.monotonic() + 5.0
+    while 0 not in ts._writing and time.monotonic() < deadline:
+        time.sleep(0.01)
+    ts.delete(0)               # racing the writeback
+    gate.set()
+    t.join(timeout=5.0)
+    assert 0 not in ts
+    assert 0 not in ts.slow
+
+
+def test_tiered_compressed_slow_tier():
+    ts = TieredStorage(capacity_bytes=_NB, compress=True)
+    big = {"x": np.asarray(jax.random.normal(KEY, (64, 64)))}
+    ts.put(0, big)
+    ts.put(1, big)             # evicts 0 through the int8 slow tier
+    got = ts.get(0)
+    bound = quantization_error_bound(big["x"])
+    assert float(np.max(np.abs(got["x"] - big["x"]))) <= bound
+
+
+def test_make_backend_tiered():
+    ts = make_backend("tiered", capacity_bytes=1024)
+    assert isinstance(ts, TieredStorage)
+    assert isinstance(ts.slow, RAMStorage)
+    with tempfile.TemporaryDirectory() as d:
+        ts = make_backend("tiered", capacity_bytes=1024, directory=d)
+        assert isinstance(ts.slow, DiskStorage)
+    with pytest.raises(ValueError, match="capacity_bytes"):
+        TieredStorage(capacity_bytes=0)
+
+
+def test_tiered_storage_end_to_end_gradients():
+    """Offloaded gradients with a fast tier sized for 2 of 4 boundary
+    states: gradients stay exact (spilled replay is lossless), the fast
+    tier obeys the budget, and the executor reports the tier traffic."""
+    T, B, D = 32, 2, 8
+    params = {"W": jax.random.normal(KEY, (D, D)) * 0.3}
+    xs = jax.random.normal(jax.random.fold_in(KEY, 2), (T, B, D)) * 0.1
+    c0 = jnp.zeros((B, D))
+
+    def body(p, c, x):
+        c = jnp.tanh(c @ p["W"] + x)
+        return c, jnp.sum(c ** 2)
+
+    def ref_loss(p):
+        _, ls = jax.lax.scan(lambda c, x: body(p, c, x), c0, xs)
+        return jnp.sum(ls)
+
+    ref_v, ref_g = jax.value_and_grad(ref_loss)(params)
+    state_bytes = tree_bytes((np.zeros((B, D), np.float32),
+                              np.zeros((), np.float32)))
+    cap = 2 * state_bytes
+    bptt = api.checkpointed_bptt(body, strategy="multistage_async",
+                                 interval=8, slots=4, storage="tiered",
+                                 l2_capacity_bytes=cap)
+    v, g = bptt(params, c0, xs)
+    np.testing.assert_allclose(float(v), float(ref_v), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(g["W"]), np.asarray(ref_g["W"]),
+                               rtol=1e-4, atol=1e-6)
+    st = api.last_stats()
+    assert st.l2_fast_peak_bytes <= cap
+    assert st.l2_evictions == 2        # 2 of 4 boundaries spilled
+    assert st.l2_promotions >= 2
+    assert st.prefetch_depth == 2      # plan-aware promotion lead
+    assert st.l2_staged_peak_bytes > 0
+
+
+def test_tiered_requires_capacity_through_frontend():
+    def body(p, c, x):
+        return jnp.tanh(c + x), jnp.sum(c)
+
+    with pytest.raises(ValueError, match="l2_capacity_bytes"):
+        api.checkpointed_bptt(body, storage="tiered")
+    with pytest.raises(ValueError, match="tiered"):
+        api.checkpointed_bptt(body, storage="ram", l2_capacity_bytes=100)
+
+
+def test_tiered_autotune_capacity_aware():
+    """The tuner probes both tiers and applies I = ceil(T_T/T_A) to the
+    effective transfer time: a budget that forces spills must never pick a
+    smaller interval than the unbounded fast tier would."""
+    from repro.api.autotune import AutoTuner
+
+    T, B, D = 32, 2, 8
+    params = {"W": jax.random.normal(KEY, (D, D)) * 0.3}
+    xs = jax.random.normal(jax.random.fold_in(KEY, 2), (T, B, D)) * 0.1
+    c0 = jnp.zeros((B, D))
+
+    def body(p, c, x):
+        c = jnp.tanh(c @ p["W"] + x)
+        return c, jnp.sum(c ** 2)
+
+    state_bytes = tree_bytes((np.zeros((B, D), np.float32),
+                              np.zeros((), np.float32)))
+    tuner = AutoTuner()
+    bptt = api.checkpointed_bptt(body, strategy="multistage_async",
+                                 storage="tiered",
+                                 l2_capacity_bytes=2 * state_bytes,
+                                 tuner=tuner)
+    bptt(params, c0, xs)
+    tune = api.last_tune()
+    assert tune.capacity_bytes == 2 * state_bytes
+    assert tune.t_t_slow > 0.0
+    # at most 2 boundaries may be fast-resident: the interval guarantees
+    # spills are either avoided (I >= n/2) or slow-tier sustainable
+    import math
+    segments = math.ceil(T / tune.interval)
+    if segments * state_bytes > tune.capacity_bytes:
+        assert tune.interval * tune.t_a >= min(tune.t_t, tune.t_t_slow)
+
+
+def test_tiered_reevict_during_writeback_keeps_newest():
+    """delete + re-store + re-evict while the old writeback is still in
+    flight: per-key writeback ordering must leave the NEW value in the slow
+    tier (a stale payload landing last would silently resurrect v1)."""
+    gate = threading.Event()
+
+    class GatedSlow(RAMStorage):
+        def put(self, key, tree):
+            if key == "A" and not gate.is_set():
+                gate.wait(5.0)
+            super().put(key, tree)
+
+    nb = tree_bytes(_state(0))
+    ts = TieredStorage(capacity_bytes=nb, slow=GatedSlow())
+    ts.put("A", _state(1))
+    done = threading.Event()
+
+    def evict_a():
+        ts.put("B", _state(0))   # evicts A; its writeback blocks on the gate
+        done.set()
+
+    t = threading.Thread(target=evict_a)
+    t.start()
+    deadline = time.monotonic() + 5.0
+    while "A" not in ts._wb_active and time.monotonic() < deadline:
+        time.sleep(0.01)
+    ts.delete("A")               # tombstones the in-flight writeback
+    ts.put("A", _state(2))       # revokes the tombstone
+    ts.put("C", _state(0))       # evicts A again: new payload, same drainer
+    gate.set()                   # stale v1 write lands first, then v2
+    assert done.wait(5.0)
+    t.join(timeout=5.0)
+    np.testing.assert_array_equal(ts.get("A")["a"], _state(2)["a"])
+    np.testing.assert_array_equal(ts.slow.get("A")["a"], _state(2)["a"])
