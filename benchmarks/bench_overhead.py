@@ -21,7 +21,10 @@ Three sections:
    fast-tier ``peak_bytes`` must equal the two-tier perfmodel's
    ``fast_peak_bytes_model`` (and therefore obey the budget) at every
    point, while the wall-time overhead stays ~constant in ``n`` (the
-   paper's "reduce memory to *any* size" claim, enforced).
+   paper's "reduce memory to *any* size" claim, enforced);
+5. the crash-consistency tax: the same chain with ``journal_dir=`` — the
+   journaled gradients must be bit-identical to the plain run's, and the
+   wall-time ratio + WAL size are tracked across PRs.
 
 ``main`` returns a JSON-serialisable payload; ``benchmarks/run.py --smoke``
 writes it to ``BENCH_overhead.json`` at the repo root for the CI perf
@@ -309,6 +312,60 @@ def capacity_sweep(depths=(96, 192)):
     return rows
 
 
+# ---------------------------------------------------------------------------
+# crash-consistency tax: journaled vs plain Level-2 on the same chain
+# ---------------------------------------------------------------------------
+
+
+def journal_overhead(depth: int = 96):
+    """The cost of making the sweep resumable: the same compiled-engine
+    chain with and without ``journal_dir=``.  Asserts the journaled
+    gradients are *bit-identical* to the plain run's (the journal must be
+    semantically invisible) and reports the wall-time ratio plus journal
+    size, so the crash-consistency tax is tracked in BENCH_overhead.json
+    across PRs."""
+    import os
+    import tempfile
+
+    import numpy as np
+
+    key = jax.random.PRNGKey(0)
+    params = init_lstm(key, vocab=96, d_embed=16, d_hidden=64)
+    tokens = jax.random.randint(jax.random.fold_in(key, 1), (4, depth + 1),
+                                0, 96)
+    batch = {"tokens": tokens}
+    from repro.models.lstm import train_chain
+
+    spec = train_chain()
+    opts = dict(strategy="multistage_async", interval=INTERVAL,
+                slots=S_SLOTS, engine="compiled")
+    vg = api.value_and_grad_offloaded(spec, **opts)
+    vg(params, batch)   # warm the compile cache: time steady-state passes
+    t0 = time.perf_counter()
+    v0, g0 = vg(params, batch)
+    jax.block_until_ready(g0)
+    plain_wall = time.perf_counter() - t0
+    with tempfile.TemporaryDirectory() as d:
+        jd = os.path.join(d, "wal")
+        jvg = api.value_and_grad_offloaded(spec, journal_dir=jd, **opts)
+        jvg(params, batch)
+        t0 = time.perf_counter()
+        v1, g1 = jvg(params, batch)
+        jax.block_until_ready(g1)
+        journaled_wall = time.perf_counter() - t0
+        journal_bytes = os.path.getsize(os.path.join(jd, "wal.log"))
+    for a, b in zip(jax.tree_util.tree_leaves(g0),
+                    jax.tree_util.tree_leaves(g1)):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), \
+            "journaling changed the gradients"
+    assert float(v0) == float(v1)
+    return {"depth": depth, "plain_wall_s": plain_wall,
+            "journaled_wall_s": journaled_wall,
+            "journal_tax": journaled_wall / max(plain_wall, 1e-9),
+            "journal_bytes": journal_bytes,
+            "replayed_advances": api.last_stats().replayed_advances}
+
+
 def _print_rows(rows):
     cols = list(rows[0])
     print(",".join(cols))
@@ -362,8 +419,15 @@ def main(smoke: bool = False):
     crows = capacity_sweep((96,) if smoke else (96, 192))
     _print_rows(crows)
 
+    print("\n# crash-consistency tax (journaled vs plain, gradients "
+          "bit-identical)")
+    jrow = journal_overhead(96)
+    _print_rows([jrow])
+    print(f"# journal tax: {jrow['journal_tax']:.2f}x wall, "
+          f"{jrow['journal_bytes']/1e6:.2f} MB WAL")
+
     return {"executor": rows, "api": arows, "engine_comparison": comparison,
-            "capacity_sweep": crows}
+            "capacity_sweep": crows, "journal_overhead": jrow}
 
 
 if __name__ == "__main__":

@@ -26,13 +26,15 @@ from repro.api.chain import ChainSpec, chain_length
 from repro.api.frontend import (ENGINES, STORAGE_KINDS, STRATEGIES,
                                 OffloadConfig, checkpointed_bptt,
                                 last_plan, last_stats, last_tune,
-                                offloaded_loss, value_and_grad_offloaded)
+                                offloaded_loss, resume_offloaded,
+                                value_and_grad_offloaded)
+from repro.core.faults import StorageFault  # typed Level-2 failure root
 
 __all__ = [
     "AutoTuner", "GLOBAL_TUNER", "TuneResult",
     "ChainSpec", "chain_length",
     "ENGINES", "STORAGE_KINDS", "STRATEGIES",
-    "OffloadConfig", "checkpointed_bptt", "last_plan", "last_stats",
-    "last_tune",
-    "offloaded_loss", "value_and_grad_offloaded",
+    "OffloadConfig", "StorageFault", "checkpointed_bptt", "last_plan",
+    "last_stats", "last_tune",
+    "offloaded_loss", "resume_offloaded", "value_and_grad_offloaded",
 ]

@@ -77,6 +77,9 @@ class OffloadConfig:
     storage: str = "ram"              # "ram" | "disk" | "compressed" | "tiered"
     storage_dir: Optional[str] = None
     l2_capacity_bytes: Optional[int] = None  # fast-tier budget ("tiered")
+    journal_dir: Optional[str] = None  # crash-consistency WAL directory
+    resume: bool = False              # resume a crashed run from the journal
+    journal_repair: bool = False      # truncate a CRC-damaged journal on open
     autotune: bool = True
     tuner_id: int = 0                 # key into the tuner registry
     engine: str = "compiled"          # "compiled" (per-segment XLA calls) |
@@ -99,6 +102,16 @@ class OffloadConfig:
                 "l2_capacity_bytes only applies to storage='tiered' "
                 f"(got storage={self.storage!r}); the unbounded backends "
                 "have no budget to enforce")
+        if self.resume and self.journal_dir is None:
+            raise ValueError(
+                "resume=True needs journal_dir= (there is nothing to "
+                "recover without a write-ahead journal)")
+        if self.journal_dir is not None and \
+                self.strategy != "multistage_async":
+            raise ValueError(
+                "journal_dir= journals the Level-2 boundary stores of the "
+                "multistage_async strategy; strategy="
+                f"{self.strategy!r} keeps no Level-2 state to journal")
         if self.engine == "scan":
             if self.strategy != "multistage_async":
                 raise ValueError(
@@ -110,6 +123,11 @@ class OffloadConfig:
                     "(pinned_host); the pluggable storage backends "
                     f"({STORAGE_KINDS[1:]}) apply to the executor engines "
                     "only")
+            if self.journal_dir is not None:
+                raise ValueError(
+                    "engine='scan' runs entirely inside XLA — its Level-2 "
+                    "state cannot be journaled; use the executor engines "
+                    "('compiled'/'interpreted') for crash consistency")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -238,7 +256,17 @@ def _make_backend(cfg: OffloadConfig):
         kwargs["directory"] = directory
     if cfg.storage == "tiered":
         kwargs["capacity_bytes"] = cfg.l2_capacity_bytes
-    return make_backend(cfg.storage, **kwargs), tmpdir
+    if cfg.journal_dir is not None:
+        kwargs["journal"] = cfg.journal_dir
+        kwargs["journal_repair"] = cfg.journal_repair
+    try:
+        return make_backend(cfg.storage, **kwargs), tmpdir
+    except BaseException:
+        # construction can raise after the tempdir exists (e.g. a
+        # ChecksumError from a corrupt journal): don't orphan it
+        if tmpdir is not None:
+            shutil.rmtree(tmpdir, ignore_errors=True)
+        raise
 
 
 # ---------------------------------------------------------------------------
@@ -355,6 +383,45 @@ def _resolve_schedule(static: _Static, ops: _Ops, params, carry0, xs, batch,
     return tune
 
 
+def _input_fingerprint(*trees) -> str:
+    """Sampled identity of the gradient call's inputs
+    (params/carry0/xs/batch): per-leaf shape+dtype+nbytes plus a CRC of
+    bounded prefix/middle/suffix slices.  Written into the journal's
+    BEGIN record and checked before a resume — resuming a crashed sweep
+    under *different* inputs (e.g. a restart from an older model
+    checkpoint with a stale journal) would silently mix two parameter
+    sets into one gradient, so a mismatch falls back to a fresh,
+    journaled run.
+
+    The check is probabilistic by design: hashing every byte of a
+    multi-GB pytree per gradient call is not affordable, so O(KB) per
+    leaf is sampled from three spread-out slices.  Any realistic input
+    change (a different batch, an optimizer step — and in the launcher
+    the per-step batch differs always) lands in a sampled region with
+    overwhelming probability; inputs crafted to collide outside the
+    samples are out of scope (documented in the README)."""
+    import zlib
+
+    crc = 0
+    for tree in trees:
+        for leaf in jax.tree_util.tree_leaves(tree):
+            a = np.asarray(leaf)
+            crc = zlib.crc32(
+                f"{a.shape}{a.dtype}{a.nbytes}".encode(), crc)
+            # bound the copied bytes: slice flat views *before*
+            # materialising (tobytes() on the full array would memcpy
+            # multi-GB pytrees once per gradient call)
+            if not a.flags.c_contiguous:
+                a = np.ascontiguousarray(a)
+            flat = a.reshape(-1)
+            n = flat.shape[0]
+            k = max(1, 2048 // max(1, a.itemsize))
+            for sl in (flat[:k], flat[max(0, n // 2 - k // 2):
+                                      n // 2 + k // 2 + 1], flat[-k:]):
+                crc = zlib.crc32(np.ascontiguousarray(sl).tobytes(), crc)
+    return f"{crc:08x}"
+
+
 def _fwd_callback(static: _Static, params, carry0, xs, batch):
     spec, cfg = static.spec, static.cfg
     ops = _get_ops(spec, static.xs_treedef, static.xs_mask)
@@ -368,8 +435,33 @@ def _fwd_callback(static: _Static, params, carry0, xs, batch):
         backend, tmpdir = _make_backend(cfg)
         engine = None
         try:
-            tune = _resolve_schedule(static, ops, params, carry0, xs, batch,
-                                     n, backend)
+            recovered = None
+            fingerprint = None
+            if cfg.journal_dir is not None:
+                fingerprint = _input_fingerprint(params, carry0, xs, batch)
+            if cfg.resume:
+                # what survived the crash: durable boundary keys + the last
+                # plan cursor.  Unusable recoveries (no cursor, a cleanly
+                # finished run, a different chain length, or inputs that
+                # do not match the crashed run's fingerprint) fall back to
+                # a fresh — still journaled — run.
+                recovered = backend.recover()
+                cur = recovered.cursor
+                old_fp = recovered.meta.get("fingerprint")
+                if cur is None or cur.phase == "done" or cur.n != n or \
+                        (old_fp is not None and old_fp != fingerprint):
+                    recovered = None
+            if recovered is not None:
+                # the journal cursor pins the schedule: resuming under a
+                # different (I, s) than the crashed run would orphan its
+                # durable boundaries
+                tuner = _TUNERS.get(cfg.tuner_id, at.GLOBAL_TUNER)
+                tune = tuner.manual(static.spec.name, n=n,
+                                    interval=recovered.cursor.interval,
+                                    slots=recovered.cursor.s_l1)
+            else:
+                tune = _resolve_schedule(static, ops, params, carry0, xs,
+                                         batch, n, backend)
             engine = AsyncTransferEngine(backend)
             ex = CheckpointExecutor(fwd_op, None)
             runner = None
@@ -381,13 +473,23 @@ def _fwd_callback(static: _Static, params, carry0, xs, batch):
                                                s_l1=tune.slots)
             x_n, run = ex.multistage_forward(
                 carry0, n, interval=tune.interval, s_l1=tune.slots,
-                engine=engine, runner=runner)
+                engine=engine, runner=runner, resume_from=recovered,
+                run_meta={"fingerprint": fingerprint}
+                if fingerprint is not None else None)
         except BaseException:
             # multistage_forward treats a passed-in engine as borrowed and
-            # won't close it on error — it is ours, so close it here.
+            # won't close it on error — engine and backend are ours, so
+            # close both here (a journaled backend holds an open WAL fd;
+            # leaking it across an in-process retry loop piles up fds).
             if engine is not None:
                 try:
                     engine.close()
+                except Exception:
+                    pass
+            bclose = getattr(backend, "close", None)
+            if bclose is not None:
+                try:
+                    bclose()
                 except Exception:
                     pass
             if tmpdir is not None:
@@ -431,9 +533,31 @@ def _bwd_callback(static: _Static, handle, params, carry0, xs, batch, dcarry):
     ex = CheckpointExecutor(fwd_op, bwd_op)
     adjoint0 = (dcarry, ops.zero_grads(params))
     runner = rec.run.runner if rec.run is not None else None
+
+    # Journaled runs checkpoint each reversed segment's per-step input
+    # cotangents alongside the adjoint cursor, so a mid-sweep resume can
+    # still stitch the full-chain dxs without re-reversing anything.
+    def artifact_fn(seg):
+        if isinstance(runner, CompiledSegmentRunner):
+            return runner.dx_segments.get(seg.begin)
+        if collect_dx:
+            return {k: dx_slices[k]
+                    for k in range(seg.begin, seg.end) if k in dx_slices}
+        return None
+
+    def restore_artifact_fn(begin, artifact):
+        if artifact is None:
+            return
+        if isinstance(runner, CompiledSegmentRunner):
+            runner.dx_segments[begin] = artifact
+        else:
+            dx_slices.update(artifact)
+
     try:
         if rec.strategy == "multistage_async":
-            adjoint, stats = ex.multistage_reverse(rec.run, adjoint0)
+            adjoint, stats = ex.multistage_reverse(
+                rec.run, adjoint0, artifact_fn=artifact_fn,
+                restore_artifact_fn=restore_artifact_fn)
         elif rec.strategy == "revolve":
             adjoint, stats = ex.run_revolve(carry0, n, adjoint0,
                                             s=rec.tune.slots)
@@ -614,6 +738,9 @@ def value_and_grad_offloaded(
     storage: str = "ram",
     storage_dir: Optional[str] = None,
     l2_capacity_bytes: Optional[int] = None,
+    journal_dir: Optional[str] = None,
+    resume: bool = False,
+    journal_repair: bool = False,
     autotune: bool = True,
     tuner: Optional[at.AutoTuner] = None,
     fallback: bool = True,
@@ -648,6 +775,17 @@ def value_and_grad_offloaded(
     the capacity-aware effective transfer time (a budget that forces
     spills yields a larger interval so the slow tier keeps up).
 
+    ``journal_dir`` makes the offloaded run *crash-consistent*: every
+    Level-2 store/delete is write-ahead-logged (CRC + fsync) together
+    with a plan cursor checkpointed at segment granularity, so a run
+    killed mid-sweep (writer-thread death, OOM, preemption, truncated
+    spill) can be resumed step-exactly with :func:`resume_offloaded` —
+    replaying at most one interval of forward steps
+    (``last_stats().replayed_advances``) and never re-reversing a
+    completed segment.  Requires an executor engine
+    (``"compiled"``/``"interpreted"``); storage failures surface as typed
+    :class:`repro.core.faults.StorageFault` subclasses.
+
     ``engine`` selects how segments execute — all three drive the same
     ``SegmentPlan`` IR (``api.last_plan()``): ``"compiled"`` (default) runs
     one jitted ``lax.scan``/checkpointed-vjp call per segment — O(n/I) host
@@ -675,6 +813,8 @@ def value_and_grad_offloaded(
     cfg = OffloadConfig(strategy=strategy, interval=interval, slots=slots,
                         storage=storage, storage_dir=storage_dir,
                         l2_capacity_bytes=l2_capacity_bytes,
+                        journal_dir=journal_dir, resume=resume,
+                        journal_repair=journal_repair,
                         autotune=autotune, tuner_id=_register_tuner(tuner),
                         engine=engine)
     vg = jax.value_and_grad(offloaded_loss(spec, cfg))
@@ -683,6 +823,45 @@ def value_and_grad_offloaded(
     # keep the weak registry entry alive for as long as the transform is
     vg.tuner = tuner
     return vg
+
+
+def resume_offloaded(
+    loss_fn,
+    params,
+    batch,
+    *,
+    journal_dir: str,
+    repair: bool = False,
+    **opts,
+) -> Tuple[Any, Any]:
+    """Resume a crashed offloaded gradient from its write-ahead journal.
+
+    Recovers the journal in ``journal_dir`` (written by a
+    ``value_and_grad_offloaded(..., journal_dir=...)`` transform that was
+    killed mid-run) and finishes the gradient step-exactly: a
+    forward-phase crash replays from the last durable boundary (at most
+    one interval of steps — ``last_stats().replayed_advances``), a
+    reverse-phase crash restarts mid-sweep from the journaled adjoint
+    cursor without re-reversing any completed segment.  ``params`` and
+    ``batch`` must be the ones the crashed run used — determinism is what
+    makes the resumed gradient bit-identical to the fault-free one.
+
+    Returns ``(loss, grads)`` exactly like the transform would have.  If
+    the journal holds nothing resumable (no cursor, or a run that already
+    completed), the gradient is simply recomputed from scratch — still
+    journaled, so the call is safe to use as the generic retry path.
+
+    ``repair=True`` truncates a CRC-damaged journal back to its last good
+    record instead of raising
+    :class:`~repro.core.faults.ChecksumError` (resume then replays from
+    whatever precedes the damage).  Remaining keyword options are those
+    of :func:`value_and_grad_offloaded` — pass the same ``storage``/
+    ``engine`` configuration the crashed run used.
+    """
+    vg = value_and_grad_offloaded(loss_fn, journal_dir=journal_dir,
+                                  resume=True, journal_repair=repair,
+                                  **opts)
+    return vg(params, batch)
 
 
 def checkpointed_bptt(

@@ -110,11 +110,25 @@ class CheckpointManager:
 
     def restore(self, like: Params, step: Optional[int] = None
                 ) -> Tuple[Params, int]:
-        """Restore the given (or latest) step into the structure of ``like``."""
+        """Restore the given (or latest) step into the structure of ``like``.
+
+        An explicit ``step=`` must name a checkpoint that still exists:
+        asking for one that was never written or has been garbage-collected
+        (``keep_last``) raises ``ValueError`` listing what *is* available —
+        silently handing back a different step would let a resumed job
+        train from the wrong weights without anyone noticing.
+        """
         steps = self.all_steps()
         if not steps:
             raise FileNotFoundError(f"no checkpoints in {self.directory}")
-        step = steps[-1] if step is None else step
+        if step is None:
+            step = steps[-1]
+        elif step not in steps:
+            raise ValueError(
+                f"checkpoint step {step} not available in "
+                f"{self.directory} (available: {steps}); it was never "
+                f"saved or has been garbage-collected "
+                f"(keep_last={self.keep_last})")
         d = os.path.join(self.directory, f"step_{step:010d}")
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)

@@ -16,16 +16,21 @@ from repro.core.revolve import (
     beta, optimal_advances, recompute_factor, revolve_schedule,
 )
 from repro.core.schedule import (
-    SegmentPlan, SegmentSpec, multistage_recompute_factor,
+    RunCursor, SegmentPlan, SegmentSpec, multistage_recompute_factor,
     multistage_schedule, segment_plan,
 )
+from repro.core.faults import (
+    ChecksumError, FaultPlan, InjectedFault, StorageFault, TornRecordError,
+    WriterCrashError,
+)
+from repro.core.journal import RecoveredRun
 from repro.core.perfmodel import (
     HardwareSpec, TPU_V5E, optimal_interval, t_inf, t_revolve, t_async,
     times_from_roofline,
 )
 from repro.core.storage import (
-    AsyncTransferEngine, CompressedStorage, DiskStorage, RAMStorage,
-    make_backend, register_backend,
+    AsyncTransferEngine, CompressedStorage, DiskStorage, JournaledStorage,
+    RAMStorage, TieredStorage, make_backend, register_backend,
 )
 from repro.core.executor import (
     CheckpointExecutor, ExecutionStats, InterpretedSegmentRunner,
@@ -38,11 +43,14 @@ from repro.core import offload
 
 __all__ = [
     "beta", "optimal_advances", "recompute_factor", "revolve_schedule",
-    "SegmentPlan", "SegmentSpec", "segment_plan",
+    "RunCursor", "SegmentPlan", "SegmentSpec", "segment_plan",
     "multistage_schedule", "multistage_recompute_factor",
+    "ChecksumError", "FaultPlan", "InjectedFault", "StorageFault",
+    "TornRecordError", "WriterCrashError", "RecoveredRun",
     "HardwareSpec", "TPU_V5E", "optimal_interval", "t_inf", "t_revolve",
     "t_async", "times_from_roofline",
-    "RAMStorage", "DiskStorage", "CompressedStorage", "AsyncTransferEngine",
+    "RAMStorage", "DiskStorage", "CompressedStorage", "JournaledStorage",
+    "TieredStorage", "AsyncTransferEngine",
     "make_backend", "register_backend",
     "CheckpointExecutor", "ExecutionStats", "InterpretedSegmentRunner",
     "MultistageRun",

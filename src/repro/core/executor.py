@@ -43,14 +43,39 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional
 
+import numpy as np
+
 from repro.core import revolve as rv
 from repro.core import schedule as ms
+from repro.core.faults import StorageFault
+from repro.core.journal import RecoveredRun
 from repro.core.revolve import Op
 from repro.core.schedule import SegmentPlan, SegmentSpec
-from repro.core.storage import AsyncTransferEngine, RAMStorage, tree_bytes
+from repro.core.storage import (AsyncTransferEngine, RAMStorage, _to_host,
+                                tree_bytes)
 
 ForwardOp = Callable[[Any, int], Any]
 BackwardOp = Callable[[Any, Any, int], Any]
+
+# Journal key of the end-of-chain state x_n: stored by journaled forward
+# passes so a crash during the *reverse* sweep can resume without redoing
+# the O(n) forward (the loss/readout is recomputed from x_n on resume).
+FINAL_STATE_KEY = "__final__"
+
+
+def _journal_backend(engine: AsyncTransferEngine):
+    """The engine's backend if it speaks the journal protocol, else None
+    (duck-typed: ``put_cursor`` is the discriminating verb; wrappers like
+    ``CompressedStorage`` delegate it to a journaled inner store)."""
+    backend = engine.backend
+    return backend if hasattr(backend, "put_cursor") else None
+
+
+def _exact_get(backend, key):
+    """Resume state load: prefer the backend's exact (raw-journal) read
+    over the normal get, which may round-trip a lossy codec."""
+    exact = getattr(backend, "get_exact", None)
+    return exact(key) if exact is not None else backend.get(key)
 
 
 @dataclass
@@ -58,6 +83,7 @@ class ExecutionStats:
     n: int = 0
     advances: int = 0
     backwards: int = 0
+    replayed_advances: int = 0   # resume: re-executed forward steps (<= I)
     host_dispatches: int = 0     # Python-level op/segment invocations
     peak_l1_states: int = 0
     peak_l1_bytes: int = 0
@@ -219,28 +245,44 @@ class MultistageRun:
     runner: Any = None
     own_engine: bool = True
     closed: bool = False
+    resume: Optional[RecoveredRun] = None   # set when this run is a resume
 
     def close(self) -> None:
         """Release this run's Level-2 state (idempotent).
 
-        Boundary keys created by this run are always purged from the backend
-        (they are useless once the run is abandoned or finished); the engine
-        itself is only closed when this run owns it.  ``engine.close()``
-        re-raises pending transfer errors — callers cleaning up after another
-        exception should swallow those (see the executor's error paths).
+        Boundary keys created by this run are purged from the backend
+        (they are useless once the run is abandoned or finished) — except
+        when the backend is journaled: there the boundaries ARE the crash
+        recovery state, and purging them on an error path would destroy
+        exactly what ``resume_from=`` needs; a journaled run's keys are
+        retired by the reverse sweep's ordered deletes (or superseded by
+        the next ``begin_run``).  The engine is only closed when this run
+        owns it.  ``engine.close()`` re-raises pending transfer errors —
+        callers cleaning up after another exception should swallow those
+        (see the executor's error paths).
         """
         if self.closed:
             return
         self.closed = True
+        journaled = _journal_backend(self.engine) is not None
         try:
-            for seg in self.plan.segments:
-                try:
-                    self.engine.delete(seg.begin)
-                except Exception:
-                    pass
+            if not journaled:
+                for seg in self.plan.segments:
+                    try:
+                        self.engine.delete(seg.begin)
+                    except Exception:
+                        pass
         finally:
             if self.own_engine:
-                self.engine.close()
+                try:
+                    self.engine.close()
+                finally:
+                    bclose = getattr(self.engine.backend, "close", None)
+                    if bclose is not None:
+                        try:
+                            bclose()
+                        except Exception:
+                            pass
 
 
 class CheckpointExecutor:
@@ -307,6 +349,8 @@ class CheckpointExecutor:
                            s_l1: int,
                            engine: Optional[AsyncTransferEngine] = None,
                            runner: Any = None,
+                           resume_from: Optional[RecoveredRun] = None,
+                           run_meta: Optional[Dict[str, Any]] = None,
                            ) -> "tuple[Any, MultistageRun]":
         """Phase 1 of the split multistage API: advance the chain to ``x_n``
         while the engine asynchronously streams every ``interval``-th state to
@@ -317,6 +361,19 @@ class CheckpointExecutor:
         :class:`InterpretedSegmentRunner` over this executor's operators; pass
         a :class:`~repro.core.compiled_ops.CompiledSegmentRunner` for one
         compiled call per segment.
+
+        With a journaled backend (``make_backend(..., journal=...)``) the
+        forward pass is crash-consistent: a ``RunCursor`` rides the writer
+        queue after each segment (FIFO => a durable cursor implies durable
+        boundaries), and ``x_n`` is journaled under ``FINAL_STATE_KEY``.
+        ``resume_from=`` (a :class:`~repro.core.journal.RecoveredRun` from
+        ``backend.recover()``) restarts a crashed run: a forward-phase
+        crash replays from the largest durable boundary — at most one
+        interval of re-executed steps, counted in
+        ``ExecutionStats.replayed_advances`` — and a reverse-phase crash
+        skips the forward entirely (``x_n`` comes back from the journal;
+        :meth:`multistage_reverse` then restarts mid-sweep from the
+        cursor's adjoint).
 
         The split exists so a differentiable front-end (``repro.api``) can run
         the forward pass when autodiff requests the primal and the reverse
@@ -329,6 +386,7 @@ class CheckpointExecutor:
         stats = ExecutionStats(n=n)
         slots = _L1Slots(stats)
         plan = ms.segment_plan(n, interval, s_l1)
+        jb = _journal_backend(engine)
         run = MultistageRun(n=n, interval=interval, s_l1=s_l1, engine=engine,
                             stats=stats, slots=slots, plan=plan,
                             runner=runner, own_engine=own_engine)
@@ -340,13 +398,85 @@ class CheckpointExecutor:
         set_plan = getattr(engine.backend, "set_plan", None)
         if set_plan is not None:
             set_plan(plan)
+        cursor0 = None
+        if resume_from is not None:
+            if jb is None:
+                raise ValueError(
+                    "resume_from= requires a journaled Level-2 backend "
+                    "(make_backend(..., journal=directory))")
+            cursor0 = resume_from.cursor
+            if cursor0 is not None and cursor0.phase == "done":
+                # previous run completed cleanly: nothing to resume
+                cursor0, resume_from = None, None
+            if cursor0 is not None and not cursor0.matches(plan):
+                raise StorageFault(
+                    f"journal cursor is for {cursor0.plan_id}, cannot "
+                    f"resume it under {plan.plan_id}")
         t0 = time.perf_counter()
         try:
+            if cursor0 is not None and cursor0.phase == "reverse":
+                # Forward completed before the crash: everything the sweep
+                # needs is durable.  Validate, re-hydrate x_n, and let
+                # multistage_reverse restart mid-sweep from the cursor.
+                needed = [seg.begin for seg in
+                          plan.segments[:cursor0.segment_index + 1]]
+                missing = [b for b in needed if b not in engine.backend]
+                if missing or FINAL_STATE_KEY not in engine.backend:
+                    raise StorageFault(
+                        f"cannot resume reverse sweep: journal is missing "
+                        f"boundaries {missing or [FINAL_STATE_KEY]}")
+                # exact raw record, not a lossy-codec round-trip: x_n
+                # seeds the (recomputed) loss/readout and must match the
+                # crashed run's in-memory state bit for bit
+                current = _exact_get(engine.backend, FINAL_STATE_KEY)
+                run.resume = resume_from
+                stats.l2_stores = engine.num_stores
+                stats.wall_s += time.perf_counter() - t0
+                return current, run
+            durable = set()
+            start_idx = 0
             current = state0
-            for seg in plan.segments:
-                engine.store_async(seg.begin, current)
+            if resume_from is not None:
+                run.resume = resume_from
+                durable = {k for k in resume_from.keys
+                           if isinstance(k, (int, np.integer))}
+                # restart boundary: end of the *contiguous* durable prefix
+                # (everything below it must be fetchable in the reverse)
+                prefix_end = -1
+                for seg in plan.segments:
+                    if seg.begin in durable:
+                        prefix_end = seg.sid
+                    else:
+                        break
+                if prefix_end >= 0:
+                    start_idx = prefix_end
+                    b_star = plan.segments[start_idx].begin
+                    # the crashed run advanced from the *exact* running
+                    # state at b_star (lossy encodings only affect what
+                    # the reverse sweep reads back), so a bit-identical
+                    # replay must start from the raw journal record
+                    current = _exact_get(engine.backend, b_star)
+                    if cursor0 is not None:
+                        # steps the pre-crash run provably completed and we
+                        # now re-execute: last durable boundary up to the
+                        # cursor's attested position — at most one interval
+                        stats.replayed_advances = max(
+                            0, plan.cursor_position(cursor0) - b_star)
+            elif jb is not None:
+                # run_meta rides the BEGIN record (e.g. the front-end's
+                # input fingerprint, checked before a later resume)
+                jb.begin_run({"plan_id": plan.plan_id, "n": n,
+                              "interval": interval, "s_l1": s_l1,
+                              **(run_meta or {})})
+            for seg in plan.segments[start_idx:]:
+                if seg.begin not in durable:
+                    engine.store_async(seg.begin, current)
                 current = fwd_runner.advance(current, seg, stats)
                 slots.note_extra(tree_bytes(current))
+                if jb is not None:
+                    engine.cursor_async(plan.cursor("forward", seg.sid + 1))
+            if jb is not None:
+                engine.store_async(FINAL_STATE_KEY, current)
         except BaseException:
             try:  # don't leak the writer thread / Level-2 states; don't
                 run.close()  # let cleanup errors mask the original one
@@ -357,7 +487,12 @@ class CheckpointExecutor:
         stats.wall_s += time.perf_counter() - t0
         return current, run
 
-    def multistage_reverse(self, run: "MultistageRun", adjoint0: Any):
+    def multistage_reverse(self, run: "MultistageRun", adjoint0: Any, *,
+                           resume_from: Optional[RecoveredRun] = None,
+                           artifact_fn: Optional[Callable[
+                               [SegmentSpec], Any]] = None,
+                           restore_artifact_fn: Optional[Callable[
+                               [int, Any], None]] = None):
         """Phase 2: join outstanding stores, then reverse the chain segment by
         segment with prefetched Level-2 boundaries and per-segment work
         delegated to the run's segment runner.  Returns ``(adjoint, stats)``
@@ -368,15 +503,46 @@ class CheckpointExecutor:
         more via ``plan_prefetch_distance``: boundaries evicted to the slow
         tier are then promoted back ``d`` segments ahead of need, so the
         slow fetch overlaps earlier segments' reverse work.
+
+        With a journaled backend the sweep is crash-consistent: after each
+        segment a ``RunCursor`` carrying the host-snapshot adjoint (plus
+        the runner's per-segment artifact from ``artifact_fn``, e.g.
+        per-step input cotangents) is enqueued *before* the boundary's
+        delete — writer-queue FIFO keeps the journal's cursor/delete order
+        honest.  ``resume_from=`` (or a resume recorded on the run by
+        :meth:`multistage_forward`) restarts mid-sweep: already-reversed
+        segments are never re-run (their contribution lives in the
+        cursor's adjoint; their artifacts are replayed through
+        ``restore_artifact_fn``), so the resume cost is bounded by one
+        segment regardless of chain length.
         """
         engine, stats, slots = run.engine, run.stats, run.slots
         runner = run.runner if run.runner is not None else \
             InterpretedSegmentRunner(self.forward_op, self.backward_op)
         segs = run.plan.segments
+        jb = _journal_backend(engine)
+        rec = resume_from if resume_from is not None else run.resume
         t0 = time.perf_counter()
         try:
             adjoint = adjoint0
             engine.wait_stores()
+            j_start = len(segs) - 1
+            cursor = rec.cursor if rec is not None else None
+            if cursor is not None and cursor.phase == "reverse":
+                # restart mid-sweep: the cursor's adjoint already folds in
+                # every segment above segment_index
+                j_start = cursor.segment_index
+                payload = cursor.payload or {}
+                adjoint = payload.get("adjoint", adjoint0)
+                if restore_artifact_fn is not None:
+                    for b, art in rec.artifacts.items():
+                        restore_artifact_fn(b, art)
+            elif jb is not None:
+                # durable mark: the sweep has begun with this seed adjoint
+                # (a crash before the first segment completes resumes here)
+                engine.cursor_async(run.plan.cursor(
+                    "reverse", j_start,
+                    payload={"adjoint": _to_host(adjoint)}))
             # Prefetch lead: 1 (double-buffer) unless the backend derives a
             # larger plan-aware distance (sizes are known now — the stores
             # above have all landed).
@@ -387,17 +553,37 @@ class CheckpointExecutor:
             stats.prefetch_depth = depth
             # Warm the pipeline with the last `depth` boundaries; then keep
             # `depth` segments of lead while walking backwards.
-            for idx in range(len(segs) - 1,
-                             max(len(segs) - 1 - depth, -1), -1):
+            for idx in range(j_start, max(j_start - depth, -1), -1):
                 engine.prefetch_async(segs[idx].begin)
-            for j in range(len(segs) - 1, -1, -1):
+            for j in range(j_start, -1, -1):
                 seg = segs[j]
                 if j - depth >= 0:
                     engine.prefetch_async(segs[j - depth].begin)
                 x_b = engine.wait_prefetch(seg.begin)
                 slots.note_extra(tree_bytes(x_b))
                 adjoint = runner.reverse(x_b, adjoint, seg, slots, stats)
-                engine.delete(seg.begin)
+                if jb is not None:
+                    artifact = artifact_fn(seg) if artifact_fn is not None \
+                        else None
+                    engine.cursor_async(run.plan.cursor(
+                        "reverse", j - 1,
+                        payload={"adjoint": _to_host(adjoint),
+                                 "artifact": _to_host(artifact)
+                                 if artifact is not None else None,
+                                 "artifact_key": seg.begin}))
+                    engine.delete_async(seg.begin)
+                else:
+                    engine.delete(seg.begin)
+            if jb is not None:
+                # done-cursor strictly BEFORE the final-state delete: a
+                # crash between them recovers as phase=="done" (clean
+                # fresh run); the reverse order would leave a journal
+                # whose reverse cursor needs a FINAL_STATE_KEY that is
+                # already gone — permanently unresumable
+                engine.cursor_async(run.plan.cursor("done", -1))
+                engine.delete_async(FINAL_STATE_KEY)
+                engine.wait_stores()
+                jb.end_run()
             stats.l2_stores = engine.num_stores
             stats.l2_prefetches = engine.num_prefetches
             backend = engine.backend

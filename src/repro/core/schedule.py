@@ -19,7 +19,7 @@ from __future__ import annotations
 import enum
 import math
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 from repro.core import revolve as rv
 from repro.core.revolve import Action
@@ -124,6 +124,47 @@ class TierPlan:
 
 
 @dataclass(frozen=True)
+class RunCursor:
+    """Serializable position of a multistage run inside its plan —
+    checkpointed through the Level-2 journal at segment granularity so a
+    crashed run resumes from its last durable segment instead of t=0.
+
+    Semantics by ``phase``:
+
+    * ``"forward"`` — ``segment_index`` segments have completed their
+      advance; the chain position in steps is
+      :meth:`SegmentPlan.cursor_position`.  A durable forward cursor also
+      guarantees (writer-queue FIFO) that every boundary store enqueued
+      before it is durable, so resume replays at most one interval.
+    * ``"reverse"`` — ``segment_index`` is the *next* segment to reverse
+      (``num_segments - 1`` at sweep start, ``-1`` when done);
+      ``payload["adjoint"]`` is the host-snapshot adjoint ready for that
+      segment, ``payload["artifact"]``/``payload["artifact_key"]`` carry
+      the just-reversed segment's runner artifact (e.g. per-step input
+      cotangents) so the front-end can stitch full-chain cotangents after
+      a resume.
+    * ``"done"`` — the reverse sweep completed; nothing to resume.
+
+    ``revolve_pos`` reserves sub-segment granularity (position inside the
+    segment's Revolve sub-plan); the executor currently checkpoints at
+    segment boundaries only, so it is always 0.
+    """
+
+    plan_id: str
+    n: int
+    interval: int
+    s_l1: int
+    phase: str            # "forward" | "reverse" | "done"
+    segment_index: int
+    revolve_pos: int = 0
+    payload: Any = None
+
+    def matches(self, plan: "SegmentPlan") -> bool:
+        return self.plan_id == plan.plan_id and self.n == plan.n \
+            and self.interval == plan.interval and self.s_l1 == plan.s_l1
+
+
+@dataclass(frozen=True)
 class SegmentPlan:
     """Per-interval plan for an ``n``-step chain: the IR the executor drives
     and the compile cache is keyed from.
@@ -143,6 +184,25 @@ class SegmentPlan:
     @property
     def num_segments(self) -> int:
         return len(self.segments)
+
+    @property
+    def plan_id(self) -> str:
+        """Stable identity of this plan — what a journaled
+        :class:`RunCursor` is validated against on resume."""
+        return f"plan:n={self.n}:I={self.interval}:s={self.s_l1}"
+
+    def cursor(self, phase: str, segment_index: int,
+               payload: Any = None) -> RunCursor:
+        return RunCursor(plan_id=self.plan_id, n=self.n,
+                         interval=self.interval, s_l1=self.s_l1,
+                         phase=phase, segment_index=segment_index,
+                         payload=payload)
+
+    def cursor_position(self, cursor: RunCursor) -> int:
+        """Chain position (in steps) a forward-phase cursor attests to."""
+        if cursor.segment_index >= self.num_segments:
+            return self.n
+        return self.segments[cursor.segment_index].begin
 
     def boundaries(self) -> List[int]:
         return [seg.begin for seg in self.segments]

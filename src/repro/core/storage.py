@@ -35,12 +35,27 @@ back the canonical copy without a defensive deep-copy, and a caller that
 tries to mutate a checkpoint in place gets a loud ``ValueError`` instead of
 silently corrupting the next Revolve replay.
 
+``JournaledStorage`` composes over any of the above
+(``make_backend(kind, journal=directory)``) and makes the Level-2 store
+*crash-consistent*: every store/delete is write-ahead-logged with a
+per-record CRC and fsynced before it is acknowledged, the executor's plan
+cursor is checkpointed through the same log, torn tails are detected (and
+repaired) on open, and ``recover()`` returns the surviving boundary keys +
+plan position so a crashed reverse sweep resumes from the last durable
+boundary instead of t=0 (see ``repro.core.journal`` for the format and
+``CheckpointExecutor.multistage_forward(resume_from=...)`` for the replay).
+
 ``AsyncTransferEngine`` wraps a backend with a writer thread + per-key
 prefetch threads and exposes the async verbs the multistage executor needs:
 ``store_async``, ``wait_stores``, ``prefetch_async``, ``wait_prefetch``.
 ``delete`` invalidates any staged prefetch of the key (delete + re-store
 can never hand back a stale value), and staged-prefetch bytes are counted
-(``staged_bytes`` / ``staged_peak_bytes``).
+(``staged_bytes`` / ``staged_peak_bytes``).  ``cursor_async`` /
+``delete_async`` route journal cursor checkpoints and boundary frees
+through the same FIFO writer queue, so the journal can never record a
+segment as complete before its boundary store is durable.  Fault injection
+(``repro.core.faults``) hooks the writer/fetch paths behind a
+zero-overhead-when-disabled ``is not None`` test.
 """
 from __future__ import annotations
 
@@ -54,6 +69,12 @@ from typing import Any, Callable, Dict, Iterable, Optional
 import numpy as np
 
 import jax
+
+from repro.core import faults as _faults
+from repro.core import journal as _journal
+from repro.core.faults import (ChecksumError, StorageFault, WriterCrashError,
+                               WriterKilled)
+from repro.core.journal import RecoveredRun
 
 
 def _to_host(tree: Any) -> Any:
@@ -281,12 +302,24 @@ class CompressedStorage:
         with self._lock:
             self._raw_bytes += nb
             self._treedefs[key] = treedef
-        self.inner.put(key, [self._encode_leaf(x) for x in leaves])
+        payload = [self._encode_leaf(x) for x in leaves]
+        # the pickled treedef rides along as a tiny uint8 leaf, so a fresh
+        # process re-hydrating from a journaled inner store can unflatten
+        # without this instance's in-memory treedef map
+        payload.append(np.frombuffer(
+            pickle.dumps(treedef, protocol=pickle.HIGHEST_PROTOCOL),
+            dtype=np.uint8))
+        self.inner.put(key, payload)
 
     def get(self, key: Any) -> Any:
         encs = self.inner.get(key)
+        encs, td_arr = encs[:-1], encs[-1]
         with self._lock:
-            treedef = self._treedefs[key]
+            treedef = self._treedefs.get(key)
+        if treedef is None:  # crash recovery: decode the journaled treedef
+            treedef = pickle.loads(np.asarray(td_arr).tobytes())
+            with self._lock:
+                self._treedefs[key] = treedef
         return jax.tree_util.tree_unflatten(
             treedef, [self._decode_leaf(x) for x in encs])
 
@@ -323,6 +356,15 @@ class CompressedStorage:
     @property
     def peak_bytes(self) -> int:
         return self.inner.peak_bytes
+
+    def __getattr__(self, name: str):
+        # Pass unknown verbs through to the inner backend (journal verbs
+        # for a hand-built CompressedStorage(inner=JournaledStorage(...))
+        # composition, instrumentation attributes otherwise).
+        inner = self.__dict__.get("inner")
+        if inner is None:
+            raise AttributeError(name)
+        return getattr(inner, name)
 
 
 class TieredStorage:
@@ -616,6 +658,243 @@ class TieredStorage:
                        self.fast_peak_bytes, self.slow.peak_bytes)
 
 
+class JournaledStorage:
+    """Crash-consistent wrapper: write-ahead journal over any inner backend.
+
+    Every ``put``/``delete`` appends a CRC'd, fsynced record to
+    ``<directory>/wal.log`` *before* touching the inner backend — by the
+    time a store is acknowledged its bytes are durable, whatever the inner
+    backend does with them (host RAM evaporates with the process; the
+    journal does not).  ``get`` serves from the inner backend when it has
+    the key and re-hydrates from the journal otherwise (a fresh process
+    after a crash), verifying the record CRC on that path.
+
+    One gradient run is an *epoch*: ``begin_run(meta)`` marks the start
+    (truncating the file when the previous epoch completed cleanly, so a
+    healthy training loop's journal stays one run long), ``put_cursor``
+    checkpoints the executor's :class:`~repro.core.schedule.RunCursor` at
+    segment granularity, ``end_run`` marks clean completion, and
+    ``recover()`` returns a :class:`~repro.core.journal.RecoveredRun`
+    (surviving keys, last cursor, per-segment reverse artifacts).
+
+    Damage semantics on open: a torn tail (crash mid-write) is silently
+    truncated — that is the artifact journaling exists to absorb; a
+    CRC-failing *complete* record is corruption and raises a typed
+    :class:`~repro.core.faults.ChecksumError` unless ``repair=True``
+    (truncate back to the last good record and recover what precedes it).
+
+    Unknown attributes delegate to the inner backend, so plan-aware verbs
+    (``set_plan``, ``plan_prefetch_distance``) and instrumentation
+    (``bytes_written``, ``fast_peak_bytes``, ...) pass straight through.
+    """
+
+    def __init__(self, inner: Any, directory: str, *, fsync: bool = True,
+                 repair: bool = False, faults: Any = None):
+        self.inner = inner
+        self.directory = directory
+        os.makedirs(directory, exist_ok=True)
+        self._journal = _journal.JournalFile(
+            os.path.join(directory, "wal.log"), fsync=fsync)
+        self._faults = faults if faults is not None else _faults.active()
+        self._lock = threading.Lock()
+        self._index: Dict[Any, int] = {}   # key -> journal record offset
+        self._cursor: Any = None
+        self._artifacts: Dict[Any, Any] = {}
+        self._meta: Dict[str, Any] = {}
+        self._torn = False
+        self._ended = False
+        self._load(repair=repair)
+
+    # ------------------------------------------------------------------- open
+    def _load(self, repair: bool) -> None:
+        scan = self._journal.scan()
+        if scan.damage is not None:
+            if scan.damage.kind == "checksum" and not repair:
+                raise ChecksumError(
+                    f"journal {self._journal.path}: {scan.damage.detail} "
+                    "(reopen with repair=True to truncate to the last good "
+                    "record and recover what precedes it)")
+            # torn tail (normal crash artifact) or explicit repair: discard
+            # everything from the damaged record on — framing is lost there
+            self._journal.truncate(scan.valid_end)
+            self._torn = True
+        for rec in _journal.iter_epoch(scan.records):
+            if rec.op == _journal.OP_BEGIN:
+                self._index.clear()
+                self._cursor = None
+                self._artifacts.clear()
+                self._ended = False
+                self._meta = pickle.loads(rec.payload) if rec.payload else {}
+            elif rec.op == _journal.OP_STORE:
+                self._index[rec.key] = rec.start
+            elif rec.op == _journal.OP_DELETE:
+                self._index.pop(rec.key, None)
+            elif rec.op == _journal.OP_CURSOR:
+                self._note_cursor(pickle.loads(rec.payload))
+            elif rec.op == _journal.OP_END:
+                self._ended = True
+
+    def _note_cursor(self, cursor: Any) -> None:
+        self._cursor = cursor
+        payload = getattr(cursor, "payload", None)
+        if isinstance(payload, dict) and payload.get("artifact") is not None:
+            self._artifacts[payload.get("artifact_key")] = payload["artifact"]
+
+    # -------------------------------------------------------------- run verbs
+    def begin_run(self, meta: Optional[Dict[str, Any]] = None) -> None:
+        """Open a new epoch.  When the previous epoch completed cleanly
+        (END seen and nothing left stored) the file is truncated first, so
+        repeated training steps do not grow the journal without bound."""
+        with self._lock:
+            if self._ended and not self._index:
+                self._journal.truncate(0)
+            self._journal.append(
+                _journal.OP_BEGIN,
+                payload=pickle.dumps(dict(meta or {}),
+                                     protocol=pickle.HIGHEST_PROTOCOL))
+            self._index.clear()
+            self._cursor = None
+            self._artifacts.clear()
+            self._meta = dict(meta or {})
+            self._ended = False
+
+    def put_cursor(self, cursor: Any) -> None:
+        """Durably checkpoint the executor's plan cursor (FIFO-ordered
+        behind the boundary stores when routed through the engine's
+        writer queue — a cursor can never claim a segment whose boundary
+        is not yet durable)."""
+        payload = pickle.dumps(cursor, protocol=pickle.HIGHEST_PROTOCOL)
+        with self._lock:
+            self._journal.append(_journal.OP_CURSOR, payload=payload)
+            self._note_cursor(cursor)
+
+    def end_run(self) -> None:
+        with self._lock:
+            self._journal.append(_journal.OP_END)
+            self._ended = True
+            if not self._index:
+                # Compact: a completed epoch's bulk (boundary payloads,
+                # per-segment adjoint cursors) is dead weight — rewrite it
+                # as a tiny done-marker epoch so the next open (every step
+                # in the launcher's standing-resume mode) scans O(bytes of
+                # one cursor) instead of re-reading and re-CRC-ing the
+                # whole previous sweep's Level-2 traffic.
+                self._journal.truncate(0)
+                self._journal.append(
+                    _journal.OP_BEGIN,
+                    payload=pickle.dumps(dict(self._meta),
+                                         protocol=pickle.HIGHEST_PROTOCOL))
+                if self._cursor is not None:
+                    self._journal.append(
+                        _journal.OP_CURSOR,
+                        payload=pickle.dumps(
+                            self._cursor,
+                            protocol=pickle.HIGHEST_PROTOCOL))
+                self._journal.append(_journal.OP_END)
+
+    def recover(self) -> RecoveredRun:
+        """The last epoch's durable state (keys in store order, last
+        cursor, reverse artifacts).  A cleanly-ended epoch still reports
+        its cursor — callers treat ``phase == "done"`` as nothing-to-do."""
+        with self._lock:
+            return RecoveredRun(keys=tuple(self._index),
+                                cursor=self._cursor,
+                                artifacts=dict(self._artifacts),
+                                meta=dict(self._meta),
+                                torn=self._torn,
+                                journal_bytes=self._journal.size)
+
+    @property
+    def cursor(self) -> Any:
+        with self._lock:
+            return self._cursor
+
+    @property
+    def journal_bytes(self) -> int:
+        return self._journal.size
+
+    @property
+    def journal_path(self) -> str:
+        return self._journal.path
+
+    # -------------------------------------------------------- backend protocol
+    def put(self, key: Any, tree: Any) -> None:
+        host = jax.tree_util.tree_map(np.asarray, tree)
+        key_b = pickle.dumps(key, protocol=pickle.HIGHEST_PROTOCOL)
+        payload = pickle.dumps(host, protocol=pickle.HIGHEST_PROTOCOL)
+        with self._lock:
+            start, end = self._journal.append(_journal.OP_STORE, key_b,
+                                              payload)
+            self._index[key] = start
+        if self._faults is not None:
+            # may tear/corrupt the record just written and/or kill the
+            # writing thread (simulated crash mid-spill)
+            self._faults.on_journal_store(self._journal, start, end)
+        self.inner.put(key, tree)
+
+    def get(self, key: Any) -> Any:
+        if key in self.inner:
+            return self.inner.get(key)
+        # Re-hydrate from the journal (fresh process after a crash), then
+        # serve through the inner backend: for a lossy inner (compressed)
+        # the put/get round-trip reproduces exactly the decoded values the
+        # fault-free run read back, so resumed reverse sweeps stay
+        # bit-identical.  The record CRC is re-verified on the journal
+        # read -> typed ChecksumError.
+        self.inner.put(key, self._read_journal(key))
+        return self.inner.get(key)
+
+    def get_exact(self, key: Any) -> Any:
+        """The raw journaled payload, bypassing any lossy inner codec.
+
+        The executor's resume path loads its restart state through this:
+        the crashed run advanced from the *exact* running state at the
+        boundary (lossy encoding only ever applied to what the reverse
+        sweep reads back), so a bit-identical forward replay must start
+        from the raw journal record, not from a decode(encode(x))
+        round-trip."""
+        with self._lock:
+            off = self._index.get(key)
+        if off is not None:
+            return self._read_journal(key)
+        return self.inner.get(key)   # not journaled (shouldn't happen)
+
+    def _read_journal(self, key: Any) -> Any:
+        with self._lock:
+            off = self._index.get(key)
+        if off is None:
+            raise KeyError(key)
+        return _freeze_in_place(
+            pickle.loads(self._journal.read_payload(off)))
+
+    def delete(self, key: Any) -> None:
+        key_b = pickle.dumps(key, protocol=pickle.HIGHEST_PROTOCOL)
+        with self._lock:
+            self._journal.append(_journal.OP_DELETE, key_b)
+            self._index.pop(key, None)
+        self.inner.delete(key)
+
+    def __contains__(self, key: Any) -> bool:
+        if key in self.inner:
+            return True
+        with self._lock:
+            return key in self._index
+
+    def keys(self) -> Iterable[Any]:
+        with self._lock:
+            journal_keys = set(self._index)
+        return list(journal_keys | set(self.inner.keys()))
+
+    def close(self) -> None:
+        self._journal.close()
+
+    def __getattr__(self, name: str):
+        inner = self.__dict__.get("inner")
+        if inner is None:
+            raise AttributeError(name)
+        return getattr(inner, name)
+
+
 # ---------------------------------------------------------------------------
 # backend registry
 # ---------------------------------------------------------------------------
@@ -628,7 +907,9 @@ def register_backend(name: str, factory: Callable[..., Any]) -> None:
     _BACKENDS[name] = factory
 
 
-def make_backend(kind: str, **kwargs: Any) -> Any:
+def make_backend(kind: str, *, journal: Optional[str] = None,
+                 journal_fsync: bool = True, journal_repair: bool = False,
+                 **kwargs: Any) -> Any:
     """Build a Level-2 backend by name.
 
     Built-ins: ``"ram"`` (``bandwidth=`` optional throttle), ``"disk"``
@@ -636,6 +917,19 @@ def make_backend(kind: str, **kwargs: Any) -> Any:
     ``directory=`` switches the inner store from RAM to disk), ``"tiered"``
     (``capacity_bytes=`` required fast-tier budget; ``directory=`` puts the
     slow tier on disk, ``compress=True`` int8-quantises the spilled copies).
+
+    ``journal=<directory>`` composes a :class:`JournaledStorage` over the
+    backend: every store/delete is write-ahead-logged (CRC + fsync, see
+    ``journal_fsync``) so the run is crash-consistent and resumable.  The
+    journal always records the *raw* boundary payloads (a lossy inner
+    codec like ``"compressed"`` costs its ~4x saving in the WAL): the
+    resume path restarts forward replay from the exact pre-crash state
+    (:meth:`JournaledStorage.get_exact`), while re-hydrated reverse-sweep
+    reads round-trip through the inner backend so they reproduce exactly
+    the (possibly lossy-decoded) values the fault-free run read back.
+    ``journal_repair=True`` truncates a CRC-damaged journal back to its
+    last good record on open instead of raising
+    :class:`~repro.core.faults.ChecksumError`.
     """
     try:
         factory = _BACKENDS[kind]
@@ -643,7 +937,10 @@ def make_backend(kind: str, **kwargs: Any) -> Any:
         raise ValueError(
             f"unknown Level-2 backend {kind!r}; known: "
             f"{sorted(_BACKENDS)}") from None
-    return factory(**kwargs)
+    if journal is None:
+        return factory(**kwargs)
+    return JournaledStorage(factory(**kwargs), journal,
+                            fsync=journal_fsync, repair=journal_repair)
 
 
 register_backend("ram", lambda bandwidth=None: RAMStorage(bandwidth))
@@ -678,8 +975,12 @@ class AsyncTransferEngine:
     always observes the re-stored value, never a stale staged one.
     """
 
-    def __init__(self, backend):
+    def __init__(self, backend, faults: Any = None):
         self.backend = backend
+        # fault injection (tests): read once at construction; every hook
+        # site below is a single `is not None` test, so the disabled path
+        # costs nothing
+        self.faults = faults if faults is not None else _faults.active()
         self._store_q: "queue.Queue" = queue.Queue()
         self._prefetched: Dict[Any, Any] = {}
         self._prefetch_events: Dict[Any, threading.Event] = {}
@@ -702,20 +1003,55 @@ class AsyncTransferEngine:
                 item = self._store_q.get(timeout=0.05)
             except queue.Empty:
                 continue
-            key, tree = item
+            kind = item[0]
             try:
-                self.backend.put(key, tree)
+                if kind == "put":
+                    _, key, tree = item
+                    if self.faults is not None:
+                        self.faults.on_writer_store(key)
+                    self.backend.put(key, tree)
+                elif kind == "cursor":
+                    self.backend.put_cursor(item[1])
+                else:  # "delete"
+                    self.backend.delete(item[1])
+            except WriterKilled:
+                # simulated abrupt writer death: leave the item un-done so
+                # joins observe exactly what a killed thread leaves behind
+                return
             except Exception as e:  # surfaced on wait_stores
                 self._errors.append(e)
-            finally:
+                self._store_q.task_done()
+            else:
                 self._store_q.task_done()
 
     def store_async(self, key: Any, tree: Any) -> None:
         # Snapshot on the caller's thread (cheap) so later in-place mutation
         # of the running state can never corrupt the checkpoint.
-        self._store_q.put((key, _to_host(tree)))
+        self._store_q.put(("put", key, _to_host(tree)))
         with self._lock:
             self.num_stores += 1
+
+    def cursor_async(self, cursor: Any) -> None:
+        """Enqueue a journal cursor checkpoint behind the pending stores.
+
+        FIFO ordering through the writer queue is the consistency
+        argument: a durable cursor implies every store enqueued before it
+        is durable too, so recovery can trust the cursor's plan position.
+        Requires a journaled backend (one with ``put_cursor``).
+        """
+        self._store_q.put(("cursor", cursor))
+
+    def delete_async(self, key: Any) -> None:
+        """Like :meth:`delete`, but the backend delete rides the writer
+        queue (FIFO behind any cursor checkpoint that still references the
+        key's segment).  Staged/in-flight prefetches of the key are still
+        invalidated synchronously."""
+        with self._lock:
+            self._prefetch_events.pop(key, None)
+            dropped = self._prefetched.pop(key, None)
+            if dropped is not None:
+                self.staged_bytes -= tree_bytes(dropped)
+        self._store_q.put(("delete", key))
 
     def _raise_pending(self) -> None:
         if self._errors:
@@ -734,7 +1070,7 @@ class AsyncTransferEngine:
         with q.all_tasks_done:
             while q.unfinished_tasks:
                 if not self._writer.is_alive():
-                    self._errors.append(RuntimeError(
+                    self._errors.append(WriterCrashError(
                         f"Level-2 writer thread died with "
                         f"{q.unfinished_tasks} store(s) outstanding"))
                     return False
@@ -754,6 +1090,25 @@ class AsyncTransferEngine:
         self._raise_pending()
 
     # -- prefetch path --------------------------------------------------------
+    def _backend_get(self, key: Any) -> Any:
+        """All engine-level fetches funnel through here: fault-injection
+        hook, plus writer-death diagnosis — a bare ``KeyError`` from a key
+        whose store is stuck behind a dead writer thread is re-raised as a
+        typed :class:`WriterCrashError` naming the real cause."""
+        if self.faults is not None:
+            self.faults.on_get(key)   # may raise InjectedFault
+        try:
+            return self.backend.get(key)
+        except StorageFault:
+            raise
+        except Exception as e:
+            if not self._writer.is_alive() and not self._stop.is_set():
+                raise WriterCrashError(
+                    f"Level-2 writer thread died before {key!r} was "
+                    f"readable ({self._store_q.unfinished_tasks} store(s) "
+                    "outstanding)") from e
+            raise
+
     def prefetch_async(self, key: Any) -> None:
         with self._lock:
             if key in self._prefetched or key in self._prefetch_events:
@@ -768,7 +1123,7 @@ class AsyncTransferEngine:
             # (or delete + re-store + new prefetch) in the meantime detaches
             # this job, so its value can never be observed stale.
             try:
-                val = self.backend.get(key)
+                val = self._backend_get(key)
                 with self._lock:
                     if self._prefetch_events.get(key) is ev:
                         self._prefetched[key] = val
@@ -792,7 +1147,7 @@ class AsyncTransferEngine:
             # may be missing and a bare KeyError would hide the real cause.
             self._raise_pending()
             t0 = time.perf_counter()
-            val = self.backend.get(key)
+            val = self._backend_get(key)
             self.prefetch_stall_s += time.perf_counter() - t0
             self._raise_pending()
             return val
@@ -811,7 +1166,7 @@ class AsyncTransferEngine:
             # the staged value was invalidated (delete raced this wait):
             # fall back to a demand fetch of the current backend state
             t0 = time.perf_counter()
-            val = self.backend.get(key)
+            val = self._backend_get(key)
             self.prefetch_stall_s += time.perf_counter() - t0
             self._raise_pending()
         return val
@@ -831,10 +1186,22 @@ class AsyncTransferEngine:
         """Drain outstanding stores (bounded — never deadlocks on a dead
         writer thread), stop the writer, drop staged prefetches that were
         never waited on (and their events), and re-raise any pending
-        transfer error so failures can't vanish silently at shutdown."""
+        transfer error so failures can't vanish silently at shutdown.
+
+        In-flight fetch jobs are joined (bounded) *before* the staging
+        dicts are cleared: a job publishes its error only while its event
+        is still the registered one for the key, so clearing first would
+        detach the job and drop a pending failure on the floor — close()
+        during an in-flight demand fetch after writer death used to return
+        cleanly instead of raising the typed fault (regression-tested).
+        """
         self._join_stores(timeout=10.0)
         self._stop.set()
         self._writer.join(timeout=2.0)
+        with self._lock:
+            events = list(self._prefetch_events.values())
+        for ev in events:
+            ev.wait(timeout=2.0)
         with self._lock:
             self._prefetched.clear()
             self._prefetch_events.clear()

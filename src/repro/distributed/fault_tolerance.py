@@ -97,10 +97,23 @@ def reshard_state(state: Any, new_mesh: Mesh, pspec_fn: Callable) -> Any:
 
 
 def with_retries(fn: Callable, *, retries: int = 3,
-                 on_retry: Optional[Callable[[int, Exception], None]] = None):
+                 on_retry: Optional[Callable[[int, Exception], None]] = None,
+                 recover: Optional[Callable[[int, Exception], None]] = None):
     """Retry wrapper for steps that may die to transient runtime errors
-    (preemption, DMA timeout).  Deterministic data + checkpointed state make
-    the retried step bit-identical."""
+    (preemption, DMA timeout, Level-2 storage faults — the typed
+    ``repro.core.faults.StorageFault`` hierarchy subclasses RuntimeError
+    precisely so it lands here).  Deterministic data + checkpointed state
+    make the retried step bit-identical.
+
+    ``recover(attempt, err)`` runs *before* each re-attempt (after
+    ``on_retry``, which is notification-only): hook the job's recovery
+    path into it — e.g. restore the train state from
+    ``ckpt.CheckpointManager`` and let the offloaded-gradient journal
+    (``OffloadConfig(journal_dir=...)``) resume the crashed sweep from its
+    last durable boundary, so the retried step reproduces the gradient it
+    would have produced, bit for bit.  An exception from ``recover``
+    aborts the retry loop (a broken recovery path must not silently spin).
+    """
 
     def wrapped(*a, **kw):
         for attempt in range(retries + 1):
@@ -112,5 +125,7 @@ def with_retries(fn: Callable, *, retries: int = 3,
                 if on_retry is not None:
                     on_retry(attempt, e)
                 log.warning("retry %d after %s", attempt + 1, e)
+                if recover is not None:
+                    recover(attempt, e)
 
     return wrapped

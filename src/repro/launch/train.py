@@ -3,8 +3,12 @@
 Runs real steps on whatever devices exist (CPU smoke runs, or a TPU slice),
 with the full production loop: background-prefetched deterministic data,
 straggler watchdog, periodic asynchronous checkpoints, auto-resume from the
-latest checkpoint, optional elastic re-meshing on restart, and retry-wrapped
-steps.
+latest checkpoint (``--resume STEP`` pins an exact step and refuses to
+substitute another), optional elastic re-meshing on restart, and
+retry-wrapped steps whose recovery path spans both failure layers:
+model state from the checkpoint store, and — with ``--journal-dir`` —
+crash-consistent Level-2 boundary states for the offloaded backward pass,
+so a killed step restarts with bit-identical gradients.
 
 Offloaded-backprop strategies ride the same flags the API exposes: pass
 ``--strategy multistage_async`` (plus ``--engine``/``--interval``/``--slots``,
@@ -81,6 +85,18 @@ def main(argv=None):
                          "store never exceeds this; cold boundaries spill "
                          "to disk and autotune sizes I from the effective "
                          "(capacity-aware) transfer time")
+    ap.add_argument("--journal-dir", default=None, metavar="DIR",
+                    help="write-ahead journal for the offloaded backward "
+                         "pass: Level-2 boundary stores become "
+                         "crash-consistent (CRC + fsync) and a killed step "
+                         "restarts with bit-identical gradients; requires "
+                         "--strategy multistage_async with an executor "
+                         "engine")
+    ap.add_argument("--resume", type=int, default=None, metavar="STEP",
+                    dest="resume_step",
+                    help="restore this exact checkpoint step instead of the "
+                         "latest; raises (listing what exists) if the step "
+                         "was never saved or has been garbage-collected")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -98,16 +114,27 @@ def main(argv=None):
     state = init_train_state(api, opt, jax.random.PRNGKey(0))
     start_step = 0
     cm = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
-    if cm is not None and cm.all_steps():
-        state, start_step = cm.restore(state)
+    if args.resume_step is not None and cm is None:
+        ap.error("--resume STEP needs --ckpt-dir (no checkpoint store to "
+                 "restore from)")
+    if cm is not None and (cm.all_steps() or args.resume_step is not None):
+        # an explicit --resume STEP must hit exactly that step — restore()
+        # raises (listing cm.all_steps()) when it was GC'd or never saved
+        state, start_step = cm.restore(state, step=args.resume_step)
         print(f"[resume] restored step {start_step} from {args.ckpt_dir}")
 
     if args.strategy is None and (args.engine or args.interval is not None
                                   or args.slots is not None
                                   or args.storage is not None
-                                  or args.l2_capacity is not None):
-        ap.error("--engine/--interval/--slots/--storage/--l2-capacity "
-                 "configure an offloaded strategy; pass --strategy as well")
+                                  or args.l2_capacity is not None
+                                  or args.journal_dir is not None):
+        ap.error("--engine/--interval/--slots/--storage/--l2-capacity/"
+                 "--journal-dir configure an offloaded strategy; pass "
+                 "--strategy as well")
+    if args.journal_dir is not None and args.engine == "scan":
+        ap.error("--journal-dir needs an executor engine "
+                 "(compiled/interpreted); --engine scan runs entirely "
+                 "inside XLA and cannot be journaled")
     if args.l2_capacity is not None and args.storage in (None, "tiered"):
         args.storage = "tiered"   # --l2-capacity implies the tiered backend
     elif args.l2_capacity is not None:
@@ -124,6 +151,13 @@ def main(argv=None):
         offload_opts["storage"] = args.storage
     if args.l2_capacity is not None:
         offload_opts["l2_capacity_bytes"] = args.l2_capacity
+    if args.journal_dir is not None:
+        offload_opts["journal_dir"] = args.journal_dir
+        # standing resume mode: every gradient call first consults the
+        # journal — a clean epoch recovers to "nothing to do" (fresh run),
+        # while a retry after a mid-sweep crash genuinely resumes from the
+        # last durable boundary instead of redoing the O(n) forward
+        offload_opts["resume"] = True
     raw_step = make_train_step(api, opt, grad_accum=args.grad_accum,
                                strategy=args.strategy, engine=args.engine,
                                offload_opts=offload_opts or None)
@@ -144,7 +178,44 @@ def main(argv=None):
         print(f"[mesh] {jax.device_count()} devices present but engine="
               f"{args.engine or 'compiled'} escapes the trace; running "
               "single-device (use --engine scan to shard)")
-    step_fn = with_retries(jax.jit(raw_step, donate_argnums=(0,)))
+    def _recover(attempt, err):
+        # Two recovery layers.  In-process retry (here): the step re-runs
+        # with the same state/batch, and with --journal-dir its
+        # OffloadConfig carries resume=True, so the crashed sweep's
+        # Level-2 journal is genuinely resumed from the last durable
+        # boundary (not recomputed from t=0) — deterministic inputs make
+        # the retried gradients bit-identical.  Process death: the next
+        # launch auto-restores the newest async checkpoint (printed below
+        # so the operator knows where a relaunch would land) and the
+        # journal's input fingerprint guards against resuming a stale
+        # sweep under the restored — possibly older — weights.
+        print(f"[retry] attempt {attempt + 1} recovering after "
+              f"{type(err).__name__}: {err}")
+        if cm is not None and cm.all_steps():
+            print(f"[retry] relaunch would restore step "
+                  f"{cm.all_steps()[-1]} from {args.ckpt_dir}")
+        if args.journal_dir is not None:
+            print(f"[retry] offload journal at {args.journal_dir} resumes "
+                  "the sweep from its last durable boundary")
+
+    # Donation and in-process retry are incompatible: a failed jitted call
+    # has already consumed its donated state buffers, so every re-attempt
+    # would die on 'Array has been deleted' instead of resuming.  A
+    # journaled run is exactly the one that wants the retry path to work,
+    # so it keeps the state buffers alive (one extra state copy on
+    # accelerators); unjournaled runs keep the donation.
+    donate = () if args.journal_dir is not None else (0,)
+    jit_step = jax.jit(raw_step, donate_argnums=donate)
+
+    def run_step(state, batch):
+        out = jit_step(state, batch)
+        # join the computation *inside* the retry boundary: dispatch is
+        # async, so a storage fault inside an io_callback would otherwise
+        # only surface at the metrics readout, past with_retries
+        jax.block_until_ready(out)
+        return out
+
+    step_fn = with_retries(run_step, recover=_recover)
     ds = SyntheticDataset(cfg, shape)
     it = Prefetcher((ds.batch(s) for s in range(start_step, args.steps)),
                     depth=2)

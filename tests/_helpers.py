@@ -1,6 +1,18 @@
 """Shared test helpers (the tests directory is on sys.path under pytest)."""
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+
+def tree_equal(a, b) -> bool:
+    """Bit-exact equality over two pytrees — the acceptance predicate of
+    the crash-consistency suites (a resumed gradient must reproduce the
+    fault-free one exactly, not approximately)."""
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
 
 
 def max_rel_err(g, ref):

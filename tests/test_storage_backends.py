@@ -1,6 +1,7 @@
 """Level-2 backend registry, the compressed backend, the capacity-bounded
 tiered backend, the storage-layer concurrency regressions, and the
 AsyncTransferEngine error/shutdown hardening."""
+import os
 import tempfile
 import threading
 import time
@@ -638,3 +639,262 @@ def test_tiered_reevict_during_writeback_keeps_newest():
     t.join(timeout=5.0)
     np.testing.assert_array_equal(ts.get("A")["a"], _state(2)["a"])
     np.testing.assert_array_equal(ts.slow.get("A")["a"], _state(2)["a"])
+
+
+# ---------------------------------------------------------------------------
+# journaled storage (crash consistency)
+# ---------------------------------------------------------------------------
+
+
+def _jtree(i=0):
+    return {"a": np.arange(8, dtype=np.float32) + i,
+            "b": np.ones((3,), np.float32) * i}
+
+
+def test_journaled_roundtrip_and_delegation(tmp_path):
+    from repro.core.storage import JournaledStorage
+
+    js = make_backend("ram", journal=str(tmp_path / "wal"))
+    assert isinstance(js, JournaledStorage)
+    js.put(0, _jtree(0))
+    js.put(1, _jtree(1))
+    np.testing.assert_array_equal(js.get(1)["a"], _jtree(1)["a"])
+    assert 0 in js and set(js.keys()) == {0, 1}
+    js.delete(0)
+    assert 0 not in js
+    # instrumentation delegates to the inner backend
+    assert js.bytes_written > 0 and js.live_bytes > 0
+    js.close()
+
+
+def test_journal_survives_process_death(tmp_path):
+    """The whole point: a RAM inner store evaporates with the process, a
+    fresh JournaledStorage over the same directory re-hydrates every
+    store from the WAL, bit-for-bit."""
+    jd = str(tmp_path / "wal")
+    js = make_backend("ram", journal=jd)
+    js.begin_run({"n": 8})
+    js.put(0, _jtree(0))
+    js.put(4, _jtree(4))
+    js.delete(0)
+    js.close()                      # "crash": inner RAM is gone
+    js2 = make_backend("ram", journal=jd)
+    rec = js2.recover()
+    assert rec.keys == (4,) and rec.meta == {"n": 8}
+    np.testing.assert_array_equal(js2.get(4)["a"], _jtree(4)["a"])
+    js2.close()
+
+
+def test_journal_torn_tail_truncated_on_open(tmp_path):
+    jd = str(tmp_path / "wal")
+    js = make_backend("ram", journal=jd)
+    js.put(0, _jtree(0))
+    js.put(4, _jtree(4))
+    js.close()
+    path = os.path.join(jd, "wal.log")
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:       # crash mid-write of the last record
+        f.truncate(size - 7)
+    js2 = make_backend("ram", journal=jd)
+    rec = js2.recover()
+    assert rec.torn and rec.keys == (0,)   # the torn record is discarded
+    np.testing.assert_array_equal(js2.get(0)["a"], _jtree(0)["a"])
+    js2.close()
+
+
+def test_journal_checksum_flip_raises_then_repairs(tmp_path):
+    from repro.core.faults import ChecksumError
+
+    jd = str(tmp_path / "wal")
+    js = make_backend("ram", journal=jd)
+    js.put(0, _jtree(0))
+    js.put(4, _jtree(4))
+    js.close()
+    path = os.path.join(jd, "wal.log")
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:       # bit rot inside the *last* record
+        f.seek(size - 3)
+        b = f.read(1)
+        f.seek(size - 3)
+        f.write(bytes([b[0] ^ 0xFF]))
+    with pytest.raises(ChecksumError, match="CRC"):
+        make_backend("ram", journal=jd)
+    js2 = make_backend("ram", journal=jd, journal_repair=True)
+    rec = js2.recover()
+    assert rec.keys == (0,)            # truncated back to the last good one
+    js2.close()
+
+
+def test_journal_epoch_reset_bounds_growth(tmp_path):
+    """begin_run truncates the file after a cleanly ended epoch, so a
+    training loop's journal stays one gradient run long."""
+    jd = str(tmp_path / "wal")
+    js = make_backend("ram", journal=jd)
+    sizes = []
+    for step in range(3):
+        js.begin_run({"step": step})
+        js.put(0, _jtree(step))
+        js.delete(0)
+        js.end_run()
+        sizes.append(js.journal_bytes)
+    assert max(sizes) <= sizes[0]      # no unbounded growth across steps
+    js.close()
+
+
+def test_journal_over_compressed_is_read_consistent(tmp_path):
+    """make_backend('compressed', journal=...) journals the *raw*
+    payloads (journal outside the codec): get_exact returns the exact
+    pre-crash state for resume replay, while a re-hydrated normal get
+    round-trips through the codec and reproduces exactly the lossy
+    values the fault-free run read back."""
+    from repro.core.storage import JournaledStorage
+
+    jd = str(tmp_path / "wal")
+    js = make_backend("compressed", journal=jd, min_bytes=1)
+    assert isinstance(js, JournaledStorage)
+    assert isinstance(js.inner, CompressedStorage)
+    big = {"w": np.linspace(-1.0, 1.0, 256).astype(np.float32)}
+    js.put(0, big)
+    lossy = np.asarray(js.get(0)["w"])       # int8 round-trip
+    assert not np.array_equal(lossy, big["w"])   # quantization engaged
+    js.close()
+    js2 = make_backend("compressed", journal=jd, min_bytes=1)
+    assert 0 in js2
+    # exact raw record for resume replay...
+    np.testing.assert_array_equal(np.asarray(js2.get_exact(0)["w"]),
+                                  big["w"])
+    # ...and codec-consistent values for reverse-sweep reads
+    np.testing.assert_array_equal(np.asarray(js2.get(0)["w"]), lossy)
+    js2.close()
+
+
+def test_compressed_treedef_survives_fresh_codec(tmp_path):
+    """A hand-built CompressedStorage(inner=JournaledStorage(...)) can
+    unflatten re-hydrated checkpoints in a fresh process: the pickled
+    treedef rides each payload as a trailing uint8 leaf."""
+    from repro.core.storage import JournaledStorage
+
+    jd = str(tmp_path / "wal")
+    comp = CompressedStorage(inner=JournaledStorage(RAMStorage(), jd),
+                             min_bytes=1)
+    big = {"w": np.linspace(-1.0, 1.0, 256).astype(np.float32)}
+    comp.put(0, big)
+    first = np.asarray(comp.get(0)["w"])
+    comp.inner.close()
+    comp2 = CompressedStorage(inner=JournaledStorage(RAMStorage(), jd),
+                              min_bytes=1)
+    np.testing.assert_array_equal(np.asarray(comp2.get(0)["w"]), first)
+    comp2.inner.close()
+
+
+def test_journaled_tiered_recovers(tmp_path):
+    js = make_backend("tiered", journal=str(tmp_path / "wal"),
+                      directory=str(tmp_path / "slow"), capacity_bytes=64)
+    js.put(0, _jtree(0))
+    js.put(4, _jtree(4))
+    js.close()
+    js2 = make_backend("tiered", journal=str(tmp_path / "wal"),
+                       directory=str(tmp_path / "slow2"), capacity_bytes=64)
+    np.testing.assert_array_equal(js2.get(0)["a"], _jtree(0)["a"])
+    js2.close()
+
+
+# ---------------------------------------------------------------------------
+# engine shutdown/error-path regressions (crash-consistency satellites)
+# ---------------------------------------------------------------------------
+
+
+def test_close_surfaces_in_flight_prefetch_error():
+    """Regression: close() used to clear the prefetch staging dicts while
+    a fetch job was still in flight — the job's pending error was then
+    dropped on the floor and close() returned cleanly.  It must join the
+    in-flight jobs first and re-raise the typed failure."""
+    release = threading.Event()
+
+    class SlowFailing(RAMStorage):
+        def get(self, key):
+            release.wait(5.0)
+            raise IOError("backend get blew up mid-flight")
+
+    eng = AsyncTransferEngine(SlowFailing())
+    eng.prefetch_async(0)
+    release.set()
+    with pytest.raises(IOError, match="mid-flight"):
+        eng.close()
+
+
+def test_demand_get_after_writer_death_is_typed():
+    """Regression: a demand fetch whose store is stuck behind a dead
+    writer thread used to die on a bare KeyError, hiding the real cause.
+    It must raise WriterCrashError naming the dead writer (and close()
+    then reports the outstanding stores the same way)."""
+    from repro.core import faults
+    from repro.core.faults import FaultPlan, WriterCrashError
+
+    with faults.inject(FaultPlan(kill_writer_at_store=0)):
+        eng = AsyncTransferEngine(RAMStorage())
+    eng.store_async(0, _jtree(0))
+    deadline = time.monotonic() + 5.0
+    while eng._writer.is_alive() and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert not eng._writer.is_alive()
+    with pytest.raises(WriterCrashError, match="writer thread died"):
+        eng.wait_prefetch(0)       # demand path: store never landed
+    with pytest.raises(WriterCrashError, match="writer thread died"):
+        eng.close()
+
+
+def test_make_backend_journal_signature_growth():
+    """Migration guard: journal kwargs are consumed by make_backend, never
+    forwarded to backend factories; plain calls are unchanged."""
+    assert isinstance(make_backend("ram"), RAMStorage)
+    with pytest.raises(TypeError):
+        RAMStorage(journal="/tmp/x")   # the kwarg belongs to make_backend
+
+
+def test_journal_header_rot_is_checksum_not_torn(tmp_path):
+    """Regression: bit rot in a record's *length* field used to make the
+    record extend past EOF and be misclassified as a torn tail (silently
+    truncated).  The header CRC must surface it as ChecksumError."""
+    from repro.core.faults import ChecksumError
+
+    jd = str(tmp_path / "wal")
+    js = make_backend("ram", journal=jd)
+    js.put(0, _jtree(0))
+    js.put(4, _jtree(4))
+    js.close()
+    path = os.path.join(jd, "wal.log")
+    with open(path, "r+b") as f:       # flip a bit inside record 0's pay_len
+        f.seek(11)
+        b = f.read(1)
+        f.seek(11)
+        f.write(bytes([b[0] ^ 0x40]))
+    with pytest.raises(ChecksumError, match="header"):
+        make_backend("ram", journal=jd)
+    js2 = make_backend("ram", journal=jd, journal_repair=True)
+    assert js2.recover().keys == ()    # nothing before the damage survives
+    js2.close()
+
+
+def test_journal_end_run_compacts_to_marker_epoch(tmp_path):
+    """After a clean run the WAL is rewritten as a tiny done-marker epoch,
+    so the next open (every step in standing-resume mode) is O(1) instead
+    of re-scanning the whole previous sweep's Level-2 traffic."""
+    from repro.core.schedule import segment_plan
+
+    jd = str(tmp_path / "wal")
+    js = make_backend("ram", journal=jd)
+    js.begin_run({"n": 8})
+    for k in (0, 4):
+        js.put(k, {"a": np.zeros(4096, np.float32)})   # bulky payloads
+        js.delete(k)
+    plan = segment_plan(8, 4, 2)
+    js.put_cursor(plan.cursor("done", -1))
+    js.end_run()
+    assert js.journal_bytes < 2048     # marker epoch, not the 32KB of puts
+    js.close()
+    js2 = make_backend("ram", journal=jd)
+    rec = js2.recover()
+    assert rec.cursor is not None and rec.cursor.phase == "done"
+    assert rec.meta == {"n": 8}
+    js2.close()

@@ -194,6 +194,68 @@ def test_with_retries():
     assert calls["n"] == 3
 
 
+def test_with_retries_recover_hook_runs_before_each_attempt():
+    """The recovery path (checkpoint restore + journal resume in the
+    launcher) must run between a failure and its re-attempt — and a
+    typed StorageFault (a RuntimeError subclass) must be retryable."""
+    from repro.core.faults import StorageFault
+
+    seen = []
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise StorageFault(f"level-2 fault {calls['n']}")
+        return "ok"
+
+    def recover(attempt, err):
+        assert isinstance(err, StorageFault)
+        seen.append((attempt, calls["n"]))
+
+    assert with_retries(flaky, retries=3, recover=recover)() == "ok"
+    # recover ran after failure 1 (before attempt 2) and after failure 2
+    assert seen == [(0, 1), (1, 2)]
+
+
+@pytest.mark.slow
+def test_launcher_retries_through_injected_storage_fault(tmp_path):
+    """End-to-end launcher recovery: a step that dies to an injected
+    Level-2 fetch failure must be retried in-process and the run must
+    complete — requires both the journal's standing resume mode and the
+    no-donation-under-journaling rule (a donated state would die on
+    'Array has been deleted' at the first retry)."""
+    from repro.core import faults
+    from repro.core.faults import FaultPlan
+    from repro.launch.train import main as train_main
+
+    with faults.inject(FaultPlan(fail_get_at=1)):
+        state = train_main([
+            "--arch", "lstm-paper", "--smoke", "--steps", "2",
+            "--strategy", "multistage_async", "--interval", "8",
+            "--slots", "4", "--journal-dir", str(tmp_path / "wal")])
+    assert int(state["step"]) == 2   # the faulted step was retried, not lost
+
+
+def test_restore_of_gced_step_raises():
+    """Regression: restore(step=) must refuse a step that was never saved
+    or has been garbage-collected instead of handing back different
+    weights — and the error lists what all_steps() still holds."""
+    state = {"w": jnp.arange(4.0)}
+    with tempfile.TemporaryDirectory() as d:
+        with CheckpointManager(d, keep_last=2) as cm:
+            for s in (1, 2, 3, 4):
+                cm.save(state, s)
+            cm.wait()
+            assert cm.all_steps() == [3, 4]      # 1 and 2 were GC'd
+            with pytest.raises(ValueError, match=r"step 1 not available"):
+                cm.restore(state, step=1)
+            with pytest.raises(ValueError, match=r"\[3, 4\]"):
+                cm.restore(state, step=99)       # never saved
+            _, s = cm.restore(state, step=3)     # an existing step is fine
+            assert s == 3
+
+
 # --------------------------------------------------------------------- data
 def test_synthetic_data_deterministic():
     cfg = get_config("yi-6b", smoke=True)
