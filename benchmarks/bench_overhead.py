@@ -317,13 +317,19 @@ def capacity_sweep(depths=(96, 192)):
 # ---------------------------------------------------------------------------
 
 
-def journal_overhead(depth: int = 96):
+def journal_overhead(depth: int = 96, repeats: int = 5):
     """The cost of making the sweep resumable: the same compiled-engine
     chain with and without ``journal_dir=``.  Asserts the journaled
     gradients are *bit-identical* to the plain run's (the journal must be
     semantically invisible) and reports the wall-time ratio plus journal
     size, so the crash-consistency tax is tracked in BENCH_overhead.json
-    across PRs."""
+    across PRs.
+
+    Each variant is timed ``repeats`` times after a warmup pass and the
+    *minimum* wall is reported: the journal's overhead is additive, so
+    min-of-N estimates it without the scheduler noise that dominates a
+    single sub-100ms pass (one bad tick used to swing the ratio by
+    +-0.3x)."""
     import os
     import tempfile
 
@@ -339,20 +345,25 @@ def journal_overhead(depth: int = 96):
     spec = train_chain()
     opts = dict(strategy="multistage_async", interval=INTERVAL,
                 slots=S_SLOTS, engine="compiled")
+
+    def best_of(vg):
+        vg(params, batch)   # warm the compile cache: time steady-state
+        best, out = None, None
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            v, g = vg(params, batch)
+            jax.block_until_ready(g)
+            wall = time.perf_counter() - t0
+            if best is None or wall < best:
+                best, out = wall, (v, g)
+        return best, out
+
     vg = api.value_and_grad_offloaded(spec, **opts)
-    vg(params, batch)   # warm the compile cache: time steady-state passes
-    t0 = time.perf_counter()
-    v0, g0 = vg(params, batch)
-    jax.block_until_ready(g0)
-    plain_wall = time.perf_counter() - t0
+    plain_wall, (v0, g0) = best_of(vg)
     with tempfile.TemporaryDirectory() as d:
         jd = os.path.join(d, "wal")
         jvg = api.value_and_grad_offloaded(spec, journal_dir=jd, **opts)
-        jvg(params, batch)
-        t0 = time.perf_counter()
-        v1, g1 = jvg(params, batch)
-        jax.block_until_ready(g1)
-        journaled_wall = time.perf_counter() - t0
+        journaled_wall, (v1, g1) = best_of(jvg)
         journal_bytes = os.path.getsize(os.path.join(jd, "wal.log"))
     for a, b in zip(jax.tree_util.tree_leaves(g0),
                     jax.tree_util.tree_leaves(g1)):

@@ -7,28 +7,91 @@ Modules may *return* a JSON-serialisable payload; the overhead benchmark's
 payload (recompute factor, stall seconds, wall time and host-dispatch counts
 per strategy, plus the compiled-vs-interpreted engine comparison) is written
 to ``BENCH_overhead.json`` at the repo root — CI uploads it on main as the
-perf-trajectory artifact.
+perf-trajectory artifact.  The kernel benchmark's fused-vs-compiled
+head-to-head payload is merged into the same file under ``"kernels"``.
+
+Sections are imported lazily, one at a time: a module that fails to import
+is reported as SKIPPED with its traceback instead of aborting the whole
+harness (or worse, vanishing silently), and the run exits nonzero when
+*every* selected section was skipped — a harness that ran nothing must not
+look green.
 """
 import argparse
+import importlib
 import inspect
 import json
 import os
 import sys
 import time
-
-from benchmarks import (bench_kernels, bench_memory, bench_overhead,
-                        bench_perfmodel, bench_recompute)
+import traceback
 
 ALL = [
-    ("fig3_recompute_factors", bench_recompute.main),
-    ("fig4_peak_memory", bench_memory.main),
-    ("fig5_measured_overhead", bench_overhead.main),
-    ("sec3_perf_model", bench_perfmodel.main),
-    ("kernel_rooflines", bench_kernels.main),
+    ("fig3_recompute_factors", "benchmarks.bench_recompute"),
+    ("fig4_peak_memory", "benchmarks.bench_memory"),
+    ("fig5_measured_overhead", "benchmarks.bench_overhead"),
+    ("sec3_perf_model", "benchmarks.bench_perfmodel"),
+    ("kernel_rooflines", "benchmarks.bench_kernels"),
 ]
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 OVERHEAD_JSON = os.path.join(REPO_ROOT, "BENCH_overhead.json")
+
+
+def run(only=None, smoke=False, out_path=OVERHEAD_JSON, sections=None):
+    """Run the selected benchmark sections; returns a process exit code.
+
+    ``sections`` overrides the registry (tests inject fakes); entries are
+    ``(name, module_path)`` pairs resolved with ``importlib`` only when the
+    section is actually selected, so one unimportable module cannot take
+    down — or silently shrink — the rest of the harness.
+    """
+    failures = []
+    skipped = []
+    payloads = {}
+    selected = 0
+    for name, module_path in (ALL if sections is None else sections):
+        if only and only not in name:
+            continue
+        selected += 1
+        print(f"\n== {name} ==")
+        try:
+            fn = importlib.import_module(module_path).main
+        except Exception as e:  # broken module: loud skip, keep going
+            traceback.print_exc()
+            print(f"-- SKIPPED {name}: cannot import {module_path}: {e!r}")
+            skipped.append((name, repr(e)))
+            continue
+        kwargs = {}
+        if smoke and "smoke" in inspect.signature(fn).parameters:
+            kwargs["smoke"] = True
+        t0 = time.time()
+        try:
+            payloads[name] = fn(**kwargs)
+            print(f"-- ok in {time.time()-t0:.1f}s")
+        except Exception as e:  # keep going; report at the end
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+    overhead = payloads.get("fig5_measured_overhead")
+    if overhead is not None:
+        doc = {"smoke": smoke, "payload": overhead}
+        kernels = payloads.get("kernel_rooflines")
+        if kernels is not None:
+            doc["kernels"] = kernels
+        with open(out_path, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+        print(f"\nwrote {out_path}")
+    if skipped:
+        print("\nBENCH SKIPPED (import failures):", skipped)
+    if failures:
+        print("\nBENCH FAILURES:", failures)
+        return 1
+    if selected and len(skipped) == selected:
+        print("\nevery selected benchmark section was skipped — "
+              "treating an all-skip run as failure")
+        return 1
+    print("\nall benchmarks passed"
+          + (f" ({len(skipped)} section(s) skipped)" if skipped else ""))
+    return 0
 
 
 def main() -> None:
@@ -37,33 +100,7 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="reduced workloads for CI (minutes, not hours)")
     args = ap.parse_args()
-    failures = []
-    payloads = {}
-    for name, fn in ALL:
-        if args.only and args.only not in name:
-            continue
-        kwargs = {}
-        if args.smoke and "smoke" in inspect.signature(fn).parameters:
-            kwargs["smoke"] = True
-        print(f"\n== {name} ==")
-        t0 = time.time()
-        try:
-            payloads[name] = fn(**kwargs)
-            print(f"-- ok in {time.time()-t0:.1f}s")
-        except Exception as e:  # keep going; report at the end
-            import traceback
-            traceback.print_exc()
-            failures.append((name, repr(e)))
-    overhead = payloads.get("fig5_measured_overhead")
-    if overhead is not None:
-        with open(OVERHEAD_JSON, "w") as f:
-            json.dump({"smoke": args.smoke, "payload": overhead}, f,
-                      indent=2, sort_keys=True)
-        print(f"\nwrote {OVERHEAD_JSON}")
-    if failures:
-        print("\nBENCH FAILURES:", failures)
-        sys.exit(1)
-    print("\nall benchmarks passed")
+    sys.exit(run(only=args.only, smoke=args.smoke))
 
 
 if __name__ == "__main__":

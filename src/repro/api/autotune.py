@@ -65,6 +65,8 @@ class TuneResult:
 
     @property
     def never_stalls(self) -> bool:
+        """The §3 no-stall predicate: one boundary transfer (``T_T``)
+        hides completely behind its interval's compute (``I * T_A``)."""
         return self.t_t <= self.interval * self.t_a
 
 
@@ -113,6 +115,8 @@ class AutoTuner:
     """
 
     def __init__(self, l1_budget_states: int = 16, repeats: int = 3):
+        """``l1_budget_states`` caps Level-1 slots ``s``; ``repeats`` is
+        the best-of-N count each timing probe uses."""
         self.l1_budget_states = l1_budget_states
         self.repeats = repeats
         self._cache: Dict[Tuple, TuneResult] = {}
@@ -127,16 +131,19 @@ class AutoTuner:
 
     def lookup(self, name: str, n: int, state_bytes: int,
                level2: str) -> Optional[TuneResult]:
+        """Return the cached schedule for this identity, or ``None``."""
         with self._lock:
             return self._cache.get(self._key(name, n, state_bytes, level2))
 
     def store(self, name: str, n: int, state_bytes: int, level2: str,
               result: TuneResult) -> TuneResult:
+        """Cache ``result`` under this identity and return it."""
         with self._lock:
             self._cache[self._key(name, n, state_bytes, level2)] = result
         return result
 
     def clear(self) -> None:
+        """Drop every cached schedule (tests; hardware changes)."""
         with self._lock:
             self._cache.clear()
 
@@ -152,7 +159,8 @@ class AutoTuner:
                 forward_step: Optional[Callable[[Any, int], Any]] = None,
                 state0: Any, n: int, backend: Any,
                 forward_segment: Optional[Callable[[Any], Any]] = None,
-                segment_len: int = 1) -> TuneResult:
+                segment_len: int = 1,
+                store_state0: Any = None) -> TuneResult:
         """Time the forward compute and one Level-2 store; derive ``I`` per §3.
 
         Two probes, matching the two execution engines:
@@ -175,6 +183,14 @@ class AutoTuner:
         the fast-tier optimum would overflow the budget, ``I`` grows until
         either they fit or the slow tier keeps up — §3's rule applied to
         the medium that actually rate-limits the stores.
+
+        ``store_state0`` (optional) substitutes the value fed to the
+        store probes while ``state0`` still drives the compute probe and
+        the cache identity.  The fused Pallas runner passes a
+        host-resident copy here: its kernel has already DMA'd the
+        boundary off the device by the time the store is issued, so the
+        honest ``T_T`` is the un-hidden residual (serialisation +
+        backend write), not a device→host transfer the kernel hides.
         """
         state_bytes = tree_bytes(state0)
         level2 = type(backend).__name__
@@ -201,9 +217,10 @@ class AutoTuner:
             t_a = self._time(one_probe)
 
         tune_key = ("__autotune__", name)
+        store_val = state0 if store_state0 is None else store_state0
 
         def one_store():
-            backend.put(tune_key, state0)
+            backend.put(tune_key, store_val)
 
         t_t = self._time(one_store)
         backend.delete(tune_key)
@@ -214,7 +231,7 @@ class AutoTuner:
             capacity = backend.capacity_bytes
 
             def one_slow_store():
-                backend.slow.put(tune_key, state0)
+                backend.slow.put(tune_key, store_val)
 
             t_t_slow = self._time(one_slow_store)
             backend.slow.delete(tune_key)
@@ -336,6 +353,12 @@ class AutoTuner:
     def manual(self, name: str, *, n: int, interval: int,
                slots: Optional[int] = None,
                state_bytes: int = 0) -> TuneResult:
+        """Build a pinned schedule with no measurement (``source="manual"``)
+        — what the front-end uses when ``interval=``/``slots=`` are given.
+
+        >>> AutoTuner().manual("doc", n=32, interval=8).interval
+        8
+        """
         return TuneResult(
             interval=max(1, min(interval, n)),
             slots=slots if slots is not None

@@ -57,13 +57,15 @@ from repro.api.chain import (ChainSpec, chain_length, combine, diff_mask,
                              _is_inexact)
 from repro.core import offload as ofl
 from repro.core import schedule as ms
-from repro.core.compiled_ops import CompiledChainOps, CompiledSegmentRunner
+from repro.core.compiled_ops import (CompiledChainOps, CompiledSegmentRunner,
+                                     PallasSegmentRunner)
 from repro.core.executor import CheckpointExecutor, ExecutionStats
 from repro.core.multistage_scan import multistage_scan
 from repro.core.storage import AsyncTransferEngine, make_backend
 
 STRATEGIES = ("multistage_async", "revolve", "conventional")
 ENGINES = ("compiled", "interpreted", "scan")
+RUNNERS = ("compiled", "pallas")
 STORAGE_KINDS = ("ram", "disk", "compressed", "tiered")
 
 
@@ -85,6 +87,9 @@ class OffloadConfig:
     engine: str = "compiled"          # "compiled" (per-segment XLA calls) |
     #                                   "interpreted" (per-step Python ops) |
     #                                   "scan" (trace-native, one XLA call)
+    runner: str = "compiled"          # segment runner for engine="compiled":
+    #                                   "compiled" (jitted scan per segment) |
+    #                                   "pallas" (fused kernel, DMA overlap)
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:
@@ -93,6 +98,14 @@ class OffloadConfig:
         if self.engine not in ENGINES:
             raise ValueError(
                 f"unknown engine {self.engine!r}; known: {ENGINES}")
+        if self.runner not in RUNNERS:
+            raise ValueError(
+                f"unknown runner {self.runner!r}; known: {RUNNERS}")
+        if self.runner == "pallas" and self.engine != "compiled":
+            raise ValueError(
+                "runner='pallas' fuses the compiled engine's per-segment "
+                f"scan into a Pallas kernel; engine={self.engine!r} does "
+                "not use segment runners")
         if self.storage == "tiered" and self.l2_capacity_bytes is None:
             raise ValueError(
                 "storage='tiered' needs l2_capacity_bytes= (the fast-tier "
@@ -329,8 +342,28 @@ def _get_ops(spec: ChainSpec, xs_treedef, xs_mask) -> _Ops:
 # ---------------------------------------------------------------------------
 
 
+def _select_runner(cfg: OffloadConfig) -> str:
+    """Resolve ``cfg.runner`` against the hardware actually present.
+
+    ``runner="pallas"`` needs a Pallas lowering target (TPU, or interpret
+    mode forced via ``REPRO_PALLAS_INTERPRET=1``); anywhere else it falls
+    back to the plain compiled runner with a one-line warning so CPU CI
+    and laptops keep working untouched.
+    """
+    if cfg.runner != "pallas":
+        return cfg.runner
+    from repro.kernels import segment_pallas as sp
+
+    ok, reason = sp.runner_supported()
+    if ok:
+        return "pallas"
+    warnings.warn(reason, stacklevel=3)  # one line: why + the fallback
+    return "compiled"
+
+
 def _resolve_schedule(static: _Static, ops: _Ops, params, carry0, xs, batch,
-                      n: int, backend) -> at.TuneResult:
+                      n: int, backend, runner: str = "compiled"
+                      ) -> at.TuneResult:
     cfg = static.cfg
     tuner = _TUNERS.get(cfg.tuner_id, at.GLOBAL_TUNER)
     if cfg.interval is not None:
@@ -343,8 +376,11 @@ def _resolve_schedule(static: _Static, ops: _Ops, params, carry0, xs, batch,
                             slots=cfg.slots)
 
     # T_A depends on the execution engine (amortised compiled segments vs
-    # per-step dispatch), so the engine is part of the tuner cache identity.
+    # per-step dispatch), so the engine — and for the compiled engine the
+    # segment runner — is part of the tuner cache identity.
     tune_name = f"{static.spec.name}:{cfg.engine}"
+    if runner == "pallas":
+        tune_name += ":pallas"
     if cfg.engine == "compiled":
         # T_A is the *amortised* per-step time of a compiled segment, not a
         # per-step dispatch: probe one advance_segment over a short prefix.
@@ -360,18 +396,40 @@ def _resolve_schedule(static: _Static, ops: _Ops, params, carry0, xs, batch,
         probe_len = cand if cand >= min(cap, 8) else cap
         xs_probe = jax.tree_util.tree_map(lambda leaf: leaf[:probe_len], xs)
 
-        def forward_segment(state):
-            if ops.cops.donates_carry:
-                # advance_segment donates its carry on accelerators; the
-                # probe reuses state0 across repeats, so feed it a copy.
-                state = jax.tree_util.tree_map(
-                    lambda x: jnp.array(x, copy=True), state)
-            return ops.cops.advance_segment(params, state, xs_probe, batch)
+        store_state0 = None
+        if runner == "pallas":
+            # probe the *fused* path: T_A includes the in-kernel boundary
+            # copy, and T_T is measured from a host-resident state because
+            # the kernel has already DMA'd the boundary off the device —
+            # the store only pays the un-hidden (serialisation) residual.
+            from repro.kernels import segment_pallas as sp
+
+            interp = sp.default_interpret()
+
+            def forward_segment(state):
+                out, _ = sp.fused_advance_segment(
+                    ops.cops.body, ops.cops.xs_treedef, ops.cops.xs_mask,
+                    params, state, xs_probe, batch,
+                    chunk=probe_len, interpret=interp)
+                return out
+
+            store_state0 = jax.tree_util.tree_map(np.asarray, carry0)
+        else:
+            def forward_segment(state):
+                if ops.cops.donates_carry:
+                    # advance_segment donates its carry on accelerators;
+                    # the probe reuses state0 across repeats, so feed it a
+                    # copy.
+                    state = jax.tree_util.tree_map(
+                        lambda x: jnp.array(x, copy=True), state)
+                return ops.cops.advance_segment(params, state, xs_probe,
+                                                batch)
 
         tune = tuner.measure(tune_name,
                              forward_segment=forward_segment,
                              segment_len=probe_len,
-                             state0=carry0, n=n, backend=backend)
+                             state0=carry0, n=n, backend=backend,
+                             store_state0=store_state0)
     else:
         def forward_step(state, k):
             return ops.fwd(params, state, index_xs(xs, k), batch)
@@ -432,6 +490,7 @@ def _fwd_callback(static: _Static, params, carry0, xs, batch):
         return ops.fwd(params, state, index_xs(xs, k), batch)
 
     if cfg.strategy == "multistage_async":
+        runner_kind = _select_runner(cfg)
         backend, tmpdir = _make_backend(cfg)
         engine = None
         try:
@@ -461,7 +520,8 @@ def _fwd_callback(static: _Static, params, carry0, xs, batch):
                                     slots=recovered.cursor.s_l1)
             else:
                 tune = _resolve_schedule(static, ops, params, carry0, xs,
-                                         batch, n, backend)
+                                         batch, n, backend,
+                                         runner=runner_kind)
             engine = AsyncTransferEngine(backend)
             ex = CheckpointExecutor(fwd_op, None)
             runner = None
@@ -469,8 +529,14 @@ def _fwd_callback(static: _Static, params, carry0, xs, batch):
                 # one jitted advance/reverse call per segment (O(n/I) host
                 # dispatches); the runner also collects per-step input
                 # cotangents segment-wise during the reverse sweep
-                runner = CompiledSegmentRunner(ops.cops, params, xs, batch,
-                                               s_l1=tune.slots)
+                if runner_kind == "pallas":
+                    # fused kernel: the boundary copy overlaps the next
+                    # chunk's compute inside advance (advance_with_store)
+                    runner = PallasSegmentRunner(ops.cops, params, xs,
+                                                 batch, s_l1=tune.slots)
+                else:
+                    runner = CompiledSegmentRunner(ops.cops, params, xs,
+                                                   batch, s_l1=tune.slots)
             x_n, run = ex.multistage_forward(
                 carry0, n, interval=tune.interval, s_l1=tune.slots,
                 engine=engine, runner=runner, resume_from=recovered,
@@ -745,6 +811,7 @@ def value_and_grad_offloaded(
     tuner: Optional[at.AutoTuner] = None,
     fallback: bool = True,
     engine: str = "compiled",
+    runner: str = "compiled",
 ) -> Callable[[Any, Any], Tuple[Any, Any]]:
     """Drop-in ``jax.value_and_grad`` with multistage-offloaded backprop.
 
@@ -797,6 +864,35 @@ def value_and_grad_offloaded(
     ``jax.vmap`` and mesh sharding — use it on pods.  The scan engine
     implements the ``multistage_async`` strategy with the XLA host backend
     only (``storage`` must stay ``"ram"``).
+
+    ``runner`` (compiled engine only) selects the per-segment kernel:
+    ``"compiled"`` (default) is one jitted scan per segment with the
+    boundary store issued from the host; ``"pallas"`` fuses the segment
+    into a Pallas kernel that double-buffers the boundary-state DMA to
+    host memory while the next chunk computes, and reverses segments with
+    Echo-style in-kernel recompute.  Requires a Pallas target (TPU, or
+    ``REPRO_PALLAS_INTERPRET=1`` for interpret mode); anywhere else it
+    falls back to ``"compiled"`` with a one-line warning.  Gradients are
+    bit-identical across runners on matching chunking (fp32).
+
+    Example — a tiny chain, pinned schedule, gradients match autodiff:
+
+    >>> import jax, jax.numpy as jnp, numpy as np
+    >>> from repro import api
+    >>> spec = api.ChainSpec(
+    ...     prelude=lambda params, batch: (jnp.float32(0.0), batch["xs"]),
+    ...     body=lambda params, c, x, batch: c + params["w"] * jnp.tanh(x + c),
+    ...     readout=lambda params, c, batch: c,
+    ...     name="doc-vg-chain")
+    >>> params = {"w": jnp.float32(0.5)}
+    >>> batch = {"xs": jnp.linspace(-1.0, 1.0, 8)}
+    >>> vg = api.value_and_grad_offloaded(spec, interval=4, slots=2)
+    >>> loss, grads = vg(params, batch)
+    >>> ref_loss, ref_grads = jax.value_and_grad(spec.loss_fn())(params, batch)
+    >>> bool(np.allclose(loss, ref_loss))
+    True
+    >>> bool(np.allclose(grads["w"], ref_grads["w"]))
+    True
     """
     spec = _as_chain_spec(loss_fn)
     if spec is None:
@@ -816,7 +912,7 @@ def value_and_grad_offloaded(
                         journal_dir=journal_dir, resume=resume,
                         journal_repair=journal_repair,
                         autotune=autotune, tuner_id=_register_tuner(tuner),
-                        engine=engine)
+                        engine=engine, runner=runner)
     vg = jax.value_and_grad(offloaded_loss(spec, cfg))
     vg.chain_spec = spec
     vg.offload_config = cfg
@@ -878,6 +974,25 @@ def checkpointed_bptt(
     ``jax.value_and_grad(lambda p: sum-of-scan(body))``.
 
     Keyword options are those of :func:`value_and_grad_offloaded`.
+
+    >>> import jax, jax.numpy as jnp, numpy as np
+    >>> from repro import api
+    >>> def body(params, carry, x):
+    ...     carry = jnp.tanh(carry + params * x)
+    ...     return carry, carry ** 2
+    >>> bptt = api.checkpointed_bptt(body, interval=4, slots=2)
+    >>> loss, grad = bptt(jnp.float32(0.3), jnp.float32(0.0),
+    ...                   jnp.linspace(0.0, 1.0, 8))
+    >>> def ref(p):
+    ...     def step(c, x):
+    ...         c, out = body(p, c, x)
+    ...         return c, out
+    ...     _, outs = jax.lax.scan(step, jnp.float32(0.0),
+    ...                            jnp.linspace(0.0, 1.0, 8))
+    ...     return jnp.sum(outs)
+    >>> ref_loss, ref_grad = jax.value_and_grad(ref)(jnp.float32(0.3))
+    >>> bool(np.allclose(loss, ref_loss)), bool(np.allclose(grad, ref_grad))
+    (True, True)
     """
 
     def prelude(params, batch):

@@ -42,7 +42,8 @@ from jax import lax
 
 from repro.core.schedule import SegmentSpec, chunk_length
 
-__all__ = ["CompiledChainOps", "CompiledSegmentRunner", "chunk_length"]
+__all__ = ["CompiledChainOps", "CompiledSegmentRunner",
+           "PallasSegmentRunner", "chunk_length"]
 
 tree_map = jax.tree_util.tree_map
 
@@ -217,3 +218,90 @@ class CompiledSegmentRunner:
             jnp.concatenate([self.dx_segments[b][i] for b in begins])
             for i in range(num_leaves)
         ]
+
+
+class PallasSegmentRunner(CompiledSegmentRunner):
+    """The fourth segment runner: fused Pallas kernels with double-buffered
+    boundary DMA (``repro.kernels.segment_pallas``).
+
+    Same executor protocol as :class:`CompiledSegmentRunner` (which it
+    subclasses, so front-end ``isinstance`` dispatch — artifact collection,
+    ``collect_dx`` stitching — applies unchanged), plus
+    :meth:`advance_with_store`: the executor-side hook that lets the
+    segment-entry boundary come *out of the kernel* (already streamed to the
+    boundary buffer by DMA while the first chunk computed) instead of being
+    snapshotted host-side before the advance.  Gradients are bit-identical
+    to the compiled runner's (asserted in ``tests/test_kernels.py``) because
+    both formulate every chunk as the same ``lax.scan``/vjp-of-scan.
+
+    ``interpret=None`` resolves per backend (compiled on TPU, interpreted
+    elsewhere — the CPU-test configuration); the front-end gates the runner
+    behind :func:`repro.kernels.segment_pallas.runner_supported` so plain
+    CPU runs fall back to the compiled runner instead of paying
+    interpret-mode kernel cost.  Unlike the compiled advance, the fused
+    kernels never donate the carry, so no segment-0 defensive copy is
+    needed.
+    """
+
+    def __init__(self, ops: CompiledChainOps, params, xs, batch, *,
+                 s_l1: int, interpret: "bool | None" = None):
+        super().__init__(ops, params, xs, batch, s_l1=s_l1)
+        from repro.kernels import segment_pallas as sp
+        self._sp = sp
+        self.interpret = sp.default_interpret() if interpret is None \
+            else bool(interpret)
+
+    def _chunk(self, seg: SegmentSpec) -> int:
+        # the reverse MUST chunk exactly like the compiled runner's
+        # checkpointed vjp for bitwise gradient parity; the forward shares
+        # the layout so one boundary stream serves both
+        return chunk_length(seg.length, self.s_l1) or seg.length
+
+    def _advance_fused(self, state, seg: SegmentSpec, stats):
+        state, boundaries = self._sp.fused_advance_segment(
+            self.ops.body, self.ops.xs_treedef, self.ops.xs_mask,
+            self.params, state, self._slice(seg), self.batch,
+            chunk=self._chunk(seg), interpret=self.interpret)
+        stats.advances += seg.length
+        stats.host_dispatches += 1
+        stats.fused_segments += 1
+        nc = int(jax.tree_util.tree_leaves(boundaries)[0].shape[0])
+        stats.fused_boundary_copies += nc
+        return state, boundaries
+
+    def advance(self, state, seg: SegmentSpec, stats):
+        state, _ = self._advance_fused(state, seg, stats)
+        return state
+
+    def advance_with_store(self, state, seg: SegmentSpec, stats):
+        """Advance one segment and return ``(new_state, entry_boundary)``.
+
+        ``entry_boundary`` equals the pre-advance carry bit for bit — it is
+        the kernel's ``boundary[0]`` DMA stream, so on hardware the Level-2
+        copy overlapped the first chunk's compute instead of serialising
+        before the segment."""
+        state, boundaries = self._advance_fused(state, seg, stats)
+        bnd0 = tree_map(lambda leaf: leaf[0], boundaries)
+        return state, bnd0
+
+    def reverse(self, x_b, adjoint, seg: SegmentSpec, slots, stats):
+        dcarry, gacc = adjoint
+        dc, dp, dxd = self._sp.fused_reverse_segment(
+            self.ops.body, self.ops.xs_treedef, self.ops.xs_mask,
+            self.params, x_b, self._slice(seg), self.batch, dcarry,
+            chunk=self._chunk(seg), interpret=self.interpret)
+        gacc = tree_map(jnp.add, gacc, dp)
+        self.dx_segments[seg.begin] = dxd
+        # same logical accounting as the compiled runner: the fused vjp
+        # replays the segment once (phase A recompute) and chunked
+        # checkpointing rematerialises chunk interiors during the backward
+        replay = seg.length
+        if chunk_length(seg.length, self.s_l1) is not None:
+            replay += seg.length
+        stats.advances += replay
+        stats.backwards += seg.length
+        stats.host_dispatches += 1
+        stats.fused_segments += 1
+        nc = -(-seg.length // self._chunk(seg))
+        stats.fused_boundary_copies += 2 * nc  # spill out + prefetch back in
+        return dc, gacc

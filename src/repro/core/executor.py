@@ -35,7 +35,11 @@ to a pluggable **segment runner**:
   step through ``forward_op``/``backward_op`` (O(n) host dispatches; the
   paper-faithful interpreter, exact Revolve-optimal advance counts);
 * :class:`~repro.core.compiled_ops.CompiledSegmentRunner` — one jitted call
-  per segment (O(n/I) host dispatches; the fast path the API front-end uses).
+  per segment (O(n/I) host dispatches; the fast path the API front-end uses);
+* :class:`~repro.core.compiled_ops.PallasSegmentRunner` — fused Pallas
+  kernels: the boundary store streams out over double-buffered DMA *inside*
+  the segment kernel (``advance_with_store``), and the reverse fuses
+  recompute + transpose Echo-style; bit-identical to the compiled runner.
 """
 from __future__ import annotations
 
@@ -95,6 +99,9 @@ class ExecutionStats:
     l2_promotions: int = 0       # tiered backend: slow -> fast promotions
     l2_staged_peak_bytes: int = 0  # engine prefetch staging high-water mark
     prefetch_depth: int = 1      # segments of prefetch lead in the reverse
+    fused_segments: int = 0      # pallas runner: segments run as fused kernels
+    fused_boundary_copies: int = 0  # pallas runner: DMA boundary copies
+    #                                 overlapped with in-kernel compute
     store_stall_s: float = 0.0
     prefetch_stall_s: float = 0.0
     wall_s: float = 0.0
@@ -468,10 +475,22 @@ class CheckpointExecutor:
                 jb.begin_run({"plan_id": plan.plan_id, "n": n,
                               "interval": interval, "s_l1": s_l1,
                               **(run_meta or {})})
+            # Fused runners (pallas) produce the segment-entry boundary *from
+            # the kernel* — the DMA copy overlapped the segment's compute —
+            # so the store is enqueued after the advance with the kernel's
+            # boundary instead of snapshotting `current` before it.  The
+            # writer-queue FIFO still orders the store before the segment's
+            # cursor, so journal durability semantics are unchanged.
+            aws = getattr(fwd_runner, "advance_with_store", None)
             for seg in plan.segments[start_idx:]:
-                if seg.begin not in durable:
+                if seg.begin in durable:
+                    current = fwd_runner.advance(current, seg, stats)
+                elif aws is not None:
+                    current, boundary = aws(current, seg, stats)
+                    engine.store_async(seg.begin, boundary)
+                else:
                     engine.store_async(seg.begin, current)
-                current = fwd_runner.advance(current, seg, stats)
+                    current = fwd_runner.advance(current, seg, stats)
                 slots.note_extra(tree_bytes(current))
                 if jb is not None:
                     engine.cursor_async(plan.cursor("forward", seg.sid + 1))
@@ -540,9 +559,12 @@ class CheckpointExecutor:
             elif jb is not None:
                 # durable mark: the sweep has begun with this seed adjoint
                 # (a crash before the first segment completes resumes here)
+                # adjoint trees ride to the writer thread as-is (immutable
+                # jax arrays); the engine host-converts them there, off
+                # the reverse sweep's critical path
                 engine.cursor_async(run.plan.cursor(
                     "reverse", j_start,
-                    payload={"adjoint": _to_host(adjoint)}))
+                    payload={"adjoint": adjoint}))
             # Prefetch lead: 1 (double-buffer) unless the backend derives a
             # larger plan-aware distance (sizes are known now — the stores
             # above have all landed).
@@ -567,9 +589,8 @@ class CheckpointExecutor:
                         else None
                     engine.cursor_async(run.plan.cursor(
                         "reverse", j - 1,
-                        payload={"adjoint": _to_host(adjoint),
-                                 "artifact": _to_host(artifact)
-                                 if artifact is not None else None,
+                        payload={"adjoint": adjoint,
+                                 "artifact": artifact,
                                  "artifact_key": seg.begin}))
                     engine.delete_async(seg.begin)
                 else:

@@ -59,6 +59,7 @@ zero-overhead-when-disabled ``is not None`` test.
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 import pickle
 import queue
@@ -661,13 +662,19 @@ class TieredStorage:
 class JournaledStorage:
     """Crash-consistent wrapper: write-ahead journal over any inner backend.
 
-    Every ``put``/``delete`` appends a CRC'd, fsynced record to
-    ``<directory>/wal.log`` *before* touching the inner backend — by the
-    time a store is acknowledged its bytes are durable, whatever the inner
-    backend does with them (host RAM evaporates with the process; the
-    journal does not).  ``get`` serves from the inner backend when it has
-    the key and re-hydrates from the journal otherwise (a fresh process
-    after a crash), verifying the record CRC on that path.
+    Every ``put``/``delete`` appends a CRC'd record to
+    ``<directory>/wal.log`` *before* touching the inner backend, whatever
+    the inner backend does with the bytes (host RAM evaporates with the
+    process; the journal does not).  Durability is **group-commit** at
+    segment granularity: bulk records defer their fsync, and the next
+    cursor/BEGIN/END append (or :meth:`commit`/:meth:`close`) is the
+    commit barrier that lands them — one fsync per segment instead of one
+    per record, with the same recovery guarantee: a durable cursor implies
+    every store appended before it is durable (shared-fd fsync + WAL
+    prefix semantics), so recovery can never claim a non-durable boundary.
+    ``get`` serves from the inner backend when it has the key and
+    re-hydrates from the journal otherwise (a fresh process after a
+    crash), verifying the record CRC on that path.
 
     One gradient run is an *epoch*: ``begin_run(meta)`` marks the start
     (truncating the file when the previous epoch completed cleanly, so a
@@ -758,14 +765,23 @@ class JournaledStorage:
             self._meta = dict(meta or {})
             self._ended = False
 
-    def put_cursor(self, cursor: Any) -> None:
+    def put_cursor(self, cursor: Any, *, sync: bool = True) -> None:
         """Durably checkpoint the executor's plan cursor (FIFO-ordered
         behind the boundary stores when routed through the engine's
         writer queue — a cursor can never claim a segment whose boundary
-        is not yet durable)."""
+        is not yet durable).
+
+        ``sync=False`` defers the commit barrier: the record is written
+        in order but fsyncs with the *next* barrier (cursor coalescing —
+        the engine passes it when a newer cursor is already queued, so a
+        burst of cursors costs one sync).  Consistency is unaffected
+        (recovery reads a file prefix, and file order is unchanged); only
+        the crash window widens from one cursor to the in-flight burst.
+        """
         payload = pickle.dumps(cursor, protocol=pickle.HIGHEST_PROTOCOL)
         with self._lock:
-            self._journal.append(_journal.OP_CURSOR, payload=payload)
+            self._journal.append(_journal.OP_CURSOR, payload=payload,
+                                 sync=True if sync else False)
             self._note_cursor(cursor)
 
     def end_run(self) -> None:
@@ -780,16 +796,21 @@ class JournaledStorage:
                 # one cursor) instead of re-reading and re-CRC-ing the
                 # whole previous sweep's Level-2 traffic.
                 self._journal.truncate(0)
+                # group commit inside the compaction too: the rewritten
+                # epoch only matters as a whole, so its BEGIN/CURSOR defer
+                # to the closing END barrier (one sync, not three)
                 self._journal.append(
                     _journal.OP_BEGIN,
                     payload=pickle.dumps(dict(self._meta),
-                                         protocol=pickle.HIGHEST_PROTOCOL))
+                                         protocol=pickle.HIGHEST_PROTOCOL),
+                    sync=False)
                 if self._cursor is not None:
                     self._journal.append(
                         _journal.OP_CURSOR,
                         payload=pickle.dumps(
                             self._cursor,
-                            protocol=pickle.HIGHEST_PROTOCOL))
+                            protocol=pickle.HIGHEST_PROTOCOL),
+                        sync=False)
                 self._journal.append(_journal.OP_END)
 
     def recover(self) -> RecoveredRun:
@@ -823,8 +844,11 @@ class JournaledStorage:
         key_b = pickle.dumps(key, protocol=pickle.HIGHEST_PROTOCOL)
         payload = pickle.dumps(host, protocol=pickle.HIGHEST_PROTOCOL)
         with self._lock:
+            # group commit: the store's fsync is deferred to the segment's
+            # cursor barrier (put_cursor / begin_run / end_run / commit) —
+            # one fsync per batch, same durability at segment granularity
             start, end = self._journal.append(_journal.OP_STORE, key_b,
-                                              payload)
+                                              payload, sync=False)
             self._index[key] = start
         if self._faults is not None:
             # may tear/corrupt the record just written and/or kill the
@@ -870,9 +894,19 @@ class JournaledStorage:
     def delete(self, key: Any) -> None:
         key_b = pickle.dumps(key, protocol=pickle.HIGHEST_PROTOCOL)
         with self._lock:
-            self._journal.append(_journal.OP_DELETE, key_b)
+            # deferred like put: a retired boundary's delete only matters
+            # once a later cursor (which fsyncs) has superseded it
+            self._journal.append(_journal.OP_DELETE, key_b, sync=False)
             self._index.pop(key, None)
         self.inner.delete(key)
+
+    def commit(self) -> None:
+        """Explicit group-commit barrier: fsync any deferred STORE/DELETE
+        records now (no-op when nothing is pending).  The run verbs
+        (``put_cursor``/``begin_run``/``end_run``) are themselves barriers,
+        so the executor never needs this — it exists for callers driving
+        the backend directly."""
+        self._journal.flush()
 
     def __contains__(self, key: Any) -> bool:
         if key in self.inner:
@@ -886,7 +920,12 @@ class JournaledStorage:
         return list(journal_keys | set(self.inner.keys()))
 
     def close(self) -> None:
-        self._journal.close()
+        # land any deferred records before the fd goes away: close is a
+        # commit barrier too
+        try:
+            self._journal.flush()
+        finally:
+            self._journal.close()
 
     def __getattr__(self, name: str):
         inner = self.__dict__.get("inner")
@@ -993,6 +1032,7 @@ class AsyncTransferEngine:
         self.num_prefetches = 0
         self.staged_bytes = 0       # host RAM held by staged prefetches
         self.staged_peak_bytes = 0  # its high-water mark across the run
+        self._pending_cursors = 0   # queued cursors (for commit coalescing)
         self._writer = threading.Thread(target=self._writer_loop, daemon=True)
         self._writer.start()
 
@@ -1004,6 +1044,12 @@ class AsyncTransferEngine:
             except queue.Empty:
                 continue
             kind = item[0]
+            if kind == "stop":
+                # close() wake-up sentinel: exit now instead of sleeping
+                # out the remainder of the 50ms poll window (which used to
+                # add its residue to every run's shutdown latency)
+                self._store_q.task_done()
+                return
             try:
                 if kind == "put":
                     _, key, tree = item
@@ -1011,7 +1057,30 @@ class AsyncTransferEngine:
                         self.faults.on_writer_store(key)
                     self.backend.put(key, tree)
                 elif kind == "cursor":
-                    self.backend.put_cursor(item[1])
+                    cur = item[1]
+                    with self._lock:
+                        self._pending_cursors -= 1
+                        # coalesce: a newer cursor is already queued, so
+                        # this one's commit barrier can ride with it (one
+                        # sync per burst; file order — hence recovery
+                        # consistency — is unchanged)
+                        last = self._pending_cursors == 0
+                    payload = getattr(cur, "payload", None)
+                    if payload:
+                        # Host-convert the payload trees here, not on the
+                        # caller's thread: np.array on a jax array blocks
+                        # until the value is ready and copies it, which
+                        # used to serialise every reverse segment with its
+                        # cursor checkpoint.  The trees are immutable jax
+                        # arrays (fresh per segment), so deferring the
+                        # snapshot is safe.  Scalar fields (artifact_key)
+                        # stay untouched — they key dict lookups.
+                        payload = dict(payload)
+                        for f in ("adjoint", "artifact"):
+                            if payload.get(f) is not None:
+                                payload[f] = _to_host(payload[f])
+                        cur = dataclasses.replace(cur, payload=payload)
+                    self.backend.put_cursor(cur, sync=last)
                 else:  # "delete"
                     self.backend.delete(item[1])
             except WriterKilled:
@@ -1039,6 +1108,8 @@ class AsyncTransferEngine:
         is durable too, so recovery can trust the cursor's plan position.
         Requires a journaled backend (one with ``put_cursor``).
         """
+        with self._lock:
+            self._pending_cursors += 1
         self._store_q.put(("cursor", cursor))
 
     def delete_async(self, key: Any) -> None:
@@ -1197,6 +1268,10 @@ class AsyncTransferEngine:
         """
         self._join_stores(timeout=10.0)
         self._stop.set()
+        # Wake the writer immediately: after the last real item it parks in
+        # q.get(timeout=...), and joining without a wake-up pays the
+        # remainder of that poll window (~50ms) on every close.
+        self._store_q.put(("stop",))
         self._writer.join(timeout=2.0)
         with self._lock:
             events = list(self._prefetch_events.values())

@@ -119,3 +119,161 @@ def test_lstm_cell(B, Dx, Dh, bb, dtype):
                                rtol=tol, atol=tol)
     np.testing.assert_allclose(np.array(cn, np.float32), np.array(cr),
                                rtol=tol, atol=tol)
+
+
+# ------------------------------------------------- fused segment runner
+# segment_pallas in interpret mode, driven through the public frontend:
+# the pallas runner's loss/gradients must be *bit-identical* (fp32) to the
+# compiled runner's, and match the undecomposed autodiff oracle — for an
+# LSTM chain (int token inputs: no input cotangents), a chain built on
+# kernels/ref.py's lstm_cell_ref, and an SSM chain with differentiable
+# float inputs (exercises the in-kernel dxd cotangent path).  Intervals
+# are chosen so segments and in-segment chunks both have uneven tails.
+
+def _assert_bitwise(tree_a, tree_b, msg=""):
+    for (pa, a), (pb, b) in zip(
+            sorted(jax.tree_util.tree_leaves_with_path(tree_a),
+                   key=lambda kv: str(kv[0])),
+            sorted(jax.tree_util.tree_leaves_with_path(tree_b),
+                   key=lambda kv: str(kv[0]))):
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes(), \
+            (msg, pa, pb)
+
+
+def _runner_parity(spec, params, batch, *, interval, slots, monkeypatch):
+    from repro import api
+
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    out = {}
+    for runner in ("compiled", "pallas"):
+        vg = api.value_and_grad_offloaded(
+            spec, strategy="multistage_async", interval=interval,
+            slots=slots, engine="compiled", runner=runner)
+        v, g = vg(params, batch)
+        out[runner] = (np.asarray(v),
+                       jax.tree_util.tree_map(np.asarray, g))
+        if runner == "pallas":
+            st = api.last_stats()
+            n = api.last_plan().n
+            assert st.fused_segments == 2 * (-(-n // interval)), st
+            assert st.fused_boundary_copies > 0, st
+    assert out["compiled"][0].tobytes() == out["pallas"][0].tobytes()
+    _assert_bitwise(out["compiled"][1], out["pallas"][1], "runner grads")
+    # and both must agree with the undecomposed autodiff oracle
+    v_ref, g_ref = jax.value_and_grad(spec.loss_fn())(params, batch)
+    np.testing.assert_allclose(out["pallas"][0], np.asarray(v_ref),
+                               rtol=1e-5, atol=1e-6)
+    for (pa, a), (pb, b) in zip(
+            sorted(jax.tree_util.tree_leaves_with_path(out["pallas"][1]),
+                   key=lambda kv: str(kv[0])),
+            sorted(jax.tree_util.tree_leaves_with_path(
+                jax.tree_util.tree_map(np.asarray, g_ref)),
+                   key=lambda kv: str(kv[0]))):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5,
+                                   err_msg=str((pa, pb)))
+
+
+@pytest.mark.parametrize("T,interval,slots", [
+    (37, 8, 4),    # uneven segment tail (5) + uneven chunk tails
+    (24, 24, 5),   # single segment, chunked with short tail
+])
+def test_segment_pallas_lstm_chain_bitwise(T, interval, slots, monkeypatch):
+    from repro.models.lstm import init_lstm, train_chain
+
+    params = init_lstm(jax.random.fold_in(KEY, 30), vocab=17, d_embed=8,
+                       d_hidden=12)
+    tokens = jax.random.randint(jax.random.fold_in(KEY, 31), (3, T + 1),
+                                0, 17)
+    _runner_parity(train_chain(), params, {"tokens": tokens},
+                   interval=interval, slots=slots, monkeypatch=monkeypatch)
+
+
+def test_segment_pallas_ref_lstm_cell_chain(monkeypatch):
+    """Chain whose body is kernels/ref.py's lstm_cell_ref itself."""
+    from repro.api.chain import ChainSpec
+
+    B, Dx, Dh, T = 2, 4, 6, 29
+    params = {
+        "w": jax.random.normal(jax.random.fold_in(KEY, 32),
+                               (Dx + Dh, 4 * Dh)) * 0.2,
+        "b": jnp.zeros((4 * Dh,)),
+    }
+    xs = jax.random.normal(jax.random.fold_in(KEY, 33), (T, B, Dx)) * 0.5
+
+    def prelude(p, batch):
+        z = jnp.zeros((B, Dh))
+        return (z, z, jnp.float32(0.0)), batch["xs"]
+
+    def body(p, carry, x, batch):
+        h, c, acc = carry
+        h, c = ref.lstm_cell_ref(x, h, c, p["w"], p["b"])
+        return (h, c, acc + jnp.sum(h ** 2))
+
+    def readout(p, carry, batch):
+        return carry[2]
+
+    spec = ChainSpec(prelude, body, readout, name="ref-lstm-chain")
+    _runner_parity(spec, params, {"xs": xs}, interval=8, slots=4,
+                   monkeypatch=monkeypatch)
+
+
+def test_segment_pallas_ssm_chain_float_inputs(monkeypatch):
+    """Diagonal SSM chain with differentiable float xs: the reverse kernel
+    must thread per-step input cotangents (dxd) through its chunked
+    in-kernel recompute, not just the carry/params adjoints."""
+    from repro.api.chain import ChainSpec
+
+    B, D, T = 3, 8, 41
+    params = {
+        "logA": jax.random.normal(jax.random.fold_in(KEY, 34), (D,)) * 0.1,
+        "Bm": jax.random.normal(jax.random.fold_in(KEY, 35), (D, D)) * 0.3,
+        "Cm": jax.random.normal(jax.random.fold_in(KEY, 36), (D, D)) * 0.3,
+    }
+    xs = jax.random.normal(jax.random.fold_in(KEY, 37), (T, B, D)) * 0.4
+
+    def prelude(p, batch):
+        return (jnp.zeros((B, D)), jnp.float32(0.0)), batch["xs"]
+
+    def body(p, carry, x, batch):
+        h, acc = carry
+        h = jnp.exp(-jax.nn.softplus(p["logA"])) * h + x @ p["Bm"]
+        y = h @ p["Cm"]
+        return (h, acc + jnp.mean(y ** 2))
+
+    def readout(p, carry, batch):
+        return carry[1]
+
+    spec = ChainSpec(prelude, body, readout, name="ssm-chain")
+    _runner_parity(spec, params, {"xs": xs}, interval=16, slots=4,
+                   monkeypatch=monkeypatch)
+
+
+def test_segment_pallas_cpu_fallback_warns_once(monkeypatch):
+    """Off-TPU without the interpret override the pallas runner must fall
+    back to the compiled runner with a one-line warning — same numbers,
+    zero fused segments."""
+    import warnings as _warnings
+
+    from repro import api
+    from repro.models.lstm import init_lstm, train_chain
+
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET", raising=False)
+    params = init_lstm(jax.random.fold_in(KEY, 38), vocab=11, d_embed=4,
+                       d_hidden=8)
+    tokens = jax.random.randint(jax.random.fold_in(KEY, 39), (2, 25), 0, 11)
+    vg = api.value_and_grad_offloaded(
+        train_chain(), strategy="multistage_async", interval=8, slots=4,
+        runner="pallas")
+    with _warnings.catch_warnings(record=True) as w:
+        _warnings.simplefilter("always")
+        v, g = vg(params, {"tokens": tokens})
+    msgs = [str(x.message) for x in w]
+    assert any("falling back to the compiled segment runner" in m
+               for m in msgs), msgs
+    assert api.last_stats().fused_segments == 0
+    vg_ref = api.value_and_grad_offloaded(
+        train_chain(), strategy="multistage_async", interval=8, slots=4,
+        runner="compiled")
+    v_ref, g_ref = vg_ref(params, {"tokens": tokens})
+    assert np.asarray(v).tobytes() == np.asarray(v_ref).tobytes()
+    _assert_bitwise(g, g_ref, "fallback grads")

@@ -1,0 +1,109 @@
+"""Validate intra-repo markdown links (CI's docs-check job).
+
+Scans every tracked ``*.md`` file for inline links/images
+``[text](target)`` and checks, for each *relative* target:
+
+* the referenced file or directory exists, and
+* when the target carries a ``#fragment``, the destination file contains
+  a heading whose GitHub anchor slug matches.
+
+External targets (``http(s)://``, ``mailto:``) are not fetched.  Exits
+nonzero listing every broken link, so a doc rename or heading edit fails
+the PR instead of shipping a dead link.
+
+    python tools/check_docs_links.py [root]
+"""
+import os
+import re
+import sys
+
+# inline links/images, skipping fenced code blocks
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$")
+_FENCE = re.compile(r"^(```|~~~)")
+
+SKIP_DIRS = {".git", ".github", "node_modules", "__pycache__", ".venv"}
+SKIP_FILES = {"SNIPPETS.md"}  # exemplar scrapbook, not part of the docs site
+
+
+def gh_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, drop punctuation, spaces to dashes."""
+    text = re.sub(r"`([^`]*)`", r"\1", heading.strip())
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # linked headings
+    text = text.lower()
+    text = re.sub(r"[^\w\- ]", "", text, flags=re.UNICODE)
+    return text.replace(" ", "-")
+
+
+def md_files(root: str):
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        for fn in filenames:
+            if fn.endswith(".md") and fn not in SKIP_FILES:
+                yield os.path.join(dirpath, fn)
+
+
+def parse(path: str):
+    """(links, anchors) of one markdown file, code fences excluded."""
+    links, anchors = [], set()
+    in_fence = False
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            if _FENCE.match(line.strip()):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            m = _HEADING.match(line)
+            if m:
+                anchors.add(gh_slug(m.group(1)))
+            for lm in _LINK.finditer(line):
+                links.append((lineno, lm.group(1)))
+    return links, anchors
+
+
+def check(root: str):
+    files = list(md_files(root))
+    anchor_cache = {p: parse(p)[1] for p in files}
+    errors = []
+    for path in files:
+        links, _ = parse(path)
+        for lineno, target in links:
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):  # http:, mailto:, …
+                continue
+            target, _, fragment = target.partition("#")
+            if target:
+                dest = os.path.normpath(
+                    os.path.join(os.path.dirname(path), target))
+                if not os.path.exists(dest):
+                    errors.append(f"{path}:{lineno}: broken link -> {target}")
+                    continue
+            else:
+                dest = path  # same-file anchor
+            if fragment and dest.endswith(".md"):
+                anchors = anchor_cache.get(os.path.normpath(dest))
+                if anchors is None:
+                    anchors = parse(dest)[1]
+                if fragment not in anchors:
+                    errors.append(
+                        f"{path}:{lineno}: missing anchor -> "
+                        f"{target or os.path.basename(dest)}#{fragment}")
+    return errors
+
+
+def main() -> int:
+    root = sys.argv[1] if len(sys.argv) > 1 else "."
+    errors = check(root)
+    for e in errors:
+        print(e)
+    n_files = len(list(md_files(root)))
+    if errors:
+        print(f"\n{len(errors)} broken link(s) across {n_files} markdown "
+              "files")
+        return 1
+    print(f"all intra-repo markdown links OK ({n_files} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
