@@ -27,6 +27,15 @@ SEED = 20180611  # the paper's arXiv year+month, for want of a better constant
 def pytest_configure(config):
     random.seed(SEED)
     np.random.seed(SEED)
+    import jax
+
+    # The executor engines dispatch nested segment jits from inside
+    # io_callbacks; when the whole train step is jitted (launcher tests),
+    # XLA's async CPU dispatch runs the outer program on its nproc-sized
+    # execution pool, and on single-core runners the nested dispatch
+    # starves — a hard deadlock.  Synchronous CPU dispatch makes the
+    # nesting safe everywhere the suite runs.
+    jax.config.update("jax_cpu_enable_async_dispatch", False)
     try:  # derandomize property tests when the optional dep is present
         from hypothesis import settings
 

@@ -17,8 +17,9 @@ Two ways to obtain ``(T_A, T_T)``:
   ``repro.core.perfmodel.times_from_roofline`` (the dry-run path; no
   execution needed).
 
-The measured interval is snapped with ``choose_interval`` onto a nearby
-divisor of the chain length when one exists (even segments mean one
+The measured interval is snapped with ``snap_interval`` onto a nearby
+divisor of the chain length when one exists — never below the optimum,
+which is the *minimum* no-stall interval (even segments mean one
 compiled/trace segment variant instead of two — uneven tails are otherwise
 first-class in the ``SegmentPlan`` IR), and the result is cached so
 subsequent steps pay nothing.  Every engine shares the cache; the engine is
@@ -39,8 +40,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import offload as ofl
-from repro.core.multistage_scan import choose_interval
 from repro.core.perfmodel import (KNL, TPU_V5E, HardwareSpec, StepTimes,
+                                  choose_sharded_interval,
                                   choose_tiered_interval,
                                   effective_transfer_time, optimal_interval,
                                   times_from_roofline)
@@ -62,6 +63,14 @@ class TuneResult:
     # transfer time and the fast-tier budget behind the chosen interval.
     t_t_slow: float = 0.0
     capacity_bytes: Optional[int] = None
+    # Sharded Level 2 only (``ShardedStorage`` fan-out): the measured
+    # single-stream transfer time of the whole (gathered) state, the
+    # number of per-device streams behind the fan-out ``t_t``, and the
+    # per-mesh-axis single-stream times ``((axis, T_T), ...)`` — what the
+    # transfer would cost if the state were sharded along that axis alone.
+    t_t_global: float = 0.0
+    shard_streams: int = 0
+    t_t_axes: Tuple = ()
 
     @property
     def never_stalls(self) -> bool:
@@ -73,11 +82,19 @@ class TuneResult:
 def snap_interval(n: int, target: int) -> int:
     """Snap the §3 optimum onto the chain: prefer a nearby divisor of ``n``
     (even segments — one compiled/trace segment variant instead of two), but
-    never shrink below half the optimum — a too-small interval stalls the
-    forward pass on stores.  Uneven tails are first-class in the
-    :class:`~repro.core.schedule.SegmentPlan` IR, so for prime ``n`` the
-    optimum itself is kept (``choose_interval`` no longer degrades to 1)."""
-    return choose_interval(n, target)
+    never *below* the optimum — ``I = ceil(T_T / T_A)`` is the minimum
+    no-stall interval, so snapping down re-enters the stall regime the
+    tuner exists to avoid.  The smallest divisor of ``n`` in
+    ``[target, 2*target]`` wins; with none in range (prime-ish ``n``) the
+    target itself is kept and the plan simply ends in a shorter tail
+    segment (uneven tails are first-class in the
+    :class:`~repro.core.schedule.SegmentPlan` IR)."""
+    target = max(1, min(target, n))
+    hi = min(n, 2 * target)
+    for i in range(target, hi + 1):
+        if n % i == 0:
+            return i
+    return target
 
 
 def _aval_dtype(leaf: Any) -> np.dtype:
@@ -160,7 +177,8 @@ class AutoTuner:
                 state0: Any, n: int, backend: Any,
                 forward_segment: Optional[Callable[[Any], Any]] = None,
                 segment_len: int = 1,
-                store_state0: Any = None) -> TuneResult:
+                store_state0: Any = None,
+                mesh: Any = None) -> TuneResult:
         """Time the forward compute and one Level-2 store; derive ``I`` per §3.
 
         Two probes, matching the two execution engines:
@@ -191,12 +209,26 @@ class AutoTuner:
         boundary off the device by the time the store is issued, so the
         honest ``T_T`` is the un-hidden residual (serialisation +
         backend write), not a device→host transfer the kernel hides.
+
+        A sharded backend (``ShardedStorage`` fan-out, possibly behind a
+        journal) is probed twice more: once through a *single* inner
+        stream with the gathered global state (``t_t_global``, the
+        single-device baseline), and — when ``mesh`` is given — once per
+        mesh axis with the state's leading dim cut to ``1/k``.  The
+        fan-out ``T_T`` is clamped by the global time before §3's rule
+        (``perfmodel.choose_sharded_interval``), so the sharded interval
+        never exceeds the single-device one.
         """
         state_bytes = tree_bytes(state0)
         level2 = type(backend).__name__
         if isinstance(backend, TieredStorage):
             # the optimum depends on the budget: key it into the cache
             level2 = f"{level2}[{backend.capacity_bytes}]"
+        streams = int(getattr(backend, "shard_streams", 0) or 0)
+        if streams > 1:
+            # the per-stream payload (hence T_T, hence I) depends on the
+            # fan-out width: key it into the cache identity
+            level2 = f"sharded[{streams}]:{level2}"
         cached = self.lookup(name, n, state_bytes, level2)
         if cached is not None:
             return cached
@@ -225,6 +257,45 @@ class AutoTuner:
         t_t = self._time(one_store)
         backend.delete(tune_key)
 
+        t_t_global = 0.0
+        t_t_axes: Tuple = ()
+        if streams > 1:
+            inners = getattr(backend, "inners", None)
+            if inners:
+                # single-stream baseline: the whole (gathered) state
+                # through one inner backend — what a 1-device run pays.
+                host_global = jax.tree_util.tree_map(
+                    lambda a: np.asarray(a), store_val)
+                gkey = ("__autotune_global__", name)
+
+                def one_global():
+                    inners[0].put(gkey, host_global)
+
+                t_t_global = self._time(one_global)
+                inners[0].delete(gkey)
+                if mesh is not None:
+                    axes = []
+                    for axis, k in dict(mesh.shape).items():
+                        k = int(k)
+                        if k <= 1:
+                            axes.append((axis, t_t_global))
+                            continue
+
+                        def cut(a, k=k):
+                            nd = getattr(a, "ndim", 0)
+                            if nd and a.shape[0] % k == 0 and a.shape[0] >= k:
+                                return a[: a.shape[0] // k]
+                            return a
+
+                        sliced = jax.tree_util.tree_map(cut, host_global)
+
+                        def one_axis():
+                            inners[0].put(gkey, sliced)
+
+                        axes.append((axis, self._time(one_axis)))
+                        inners[0].delete(gkey)
+                    t_t_axes = tuple(axes)
+
         t_t_slow = 0.0
         capacity = None
         if isinstance(backend, TieredStorage):
@@ -242,6 +313,12 @@ class AutoTuner:
                 t_t = min(t_t, t_t_slow)
             target = choose_tiered_interval(
                 n, state_bytes, capacity, t_a, t_t, t_t_slow)
+        elif streams > 1 and t_t_global > 0.0:
+            # clamp: the fan-out streams only ever shrink the per-stream
+            # payload, so a noisy-slow fan-out probe must not pick a
+            # larger interval than the single-device baseline would
+            t_t = min(t_t, t_t_global)
+            target = choose_sharded_interval(t_a, t_t, t_t_global)
         else:
             target = optimal_interval(t_t, t_a)
 
@@ -260,7 +337,9 @@ class AutoTuner:
         return self.store(name, n, state_bytes, level2, TuneResult(
             interval=interval, slots=slots, t_a=t_a, t_t=t_t,
             state_bytes=state_bytes, n=n, source="measured",
-            t_t_slow=t_t_slow, capacity_bytes=capacity))
+            t_t_slow=t_t_slow, capacity_bytes=capacity,
+            t_t_global=t_t_global, shard_streams=streams,
+            t_t_axes=t_t_axes))
 
     # ------------------------------------------------------- scan engine
     def measure_scan(self, name: str, *, body: Callable[..., Any],

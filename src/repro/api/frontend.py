@@ -90,6 +90,10 @@ class OffloadConfig:
     runner: str = "compiled"          # segment runner for engine="compiled":
     #                                   "compiled" (jitted scan per segment) |
     #                                   "pallas" (fused kernel, DMA overlap)
+    mesh: Optional[Any] = None        # jax Mesh -> sharded Level-2 streams
+    state_spec: Optional[Any] = None  # PartitionSpec of the boundary carry
+    #                                   (None -> derive: batch axes over the
+    #                                   mesh's data axes when divisible)
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:
@@ -125,6 +129,24 @@ class OffloadConfig:
                 "journal_dir= journals the Level-2 boundary stores of the "
                 "multistage_async strategy; strategy="
                 f"{self.strategy!r} keeps no Level-2 state to journal")
+        if self.state_spec is not None and self.mesh is None:
+            raise ValueError(
+                "state_spec= partitions the boundary carry over a mesh; "
+                "pass mesh= as well")
+        if self.mesh is not None:
+            if self.strategy != "multistage_async":
+                raise ValueError(
+                    "mesh= shards the multistage_async Level-2 streams; "
+                    f"strategy={self.strategy!r} keeps no Level-2 state")
+            if self.engine == "scan":
+                raise ValueError(
+                    "engine='scan' is trace-native: shard it by jitting "
+                    "with NamedSharding'd inputs instead of mesh= (the "
+                    "executor engines own the sharded Level-2 streams)")
+            if self.runner == "pallas":
+                raise ValueError(
+                    "runner='pallas' drives a single device's DMA engine; "
+                    "sharded Level-2 streams (mesh=) need runner='compiled'")
         if self.engine == "scan":
             if self.strategy != "multistage_async":
                 raise ValueError(
@@ -272,6 +294,12 @@ def _make_backend(cfg: OffloadConfig):
     if cfg.journal_dir is not None:
         kwargs["journal"] = cfg.journal_dir
         kwargs["journal_repair"] = cfg.journal_repair
+    if cfg.mesh is not None:
+        # one Level-2 stream per mesh device: each device's shard of every
+        # boundary goes to its own inner backend on its own writer thread
+        devices = list(cfg.mesh.devices.flat)
+        kwargs["shards"] = len(devices)
+        kwargs["devices"] = devices
     try:
         return make_backend(cfg.storage, **kwargs), tmpdir
     except BaseException:
@@ -429,16 +457,55 @@ def _resolve_schedule(static: _Static, ops: _Ops, params, carry0, xs, batch,
                              forward_segment=forward_segment,
                              segment_len=probe_len,
                              state0=carry0, n=n, backend=backend,
-                             store_state0=store_state0)
+                             store_state0=store_state0, mesh=cfg.mesh)
     else:
         def forward_step(state, k):
             return ops.fwd(params, state, index_xs(xs, k), batch)
 
         tune = tuner.measure(tune_name, forward_step=forward_step,
-                             state0=carry0, n=n, backend=backend)
+                             state0=carry0, n=n, backend=backend,
+                             mesh=cfg.mesh)
     if cfg.slots is not None:
         tune = dataclasses.replace(tune, slots=cfg.slots)
     return tune
+
+
+def _mesh_place(cfg: OffloadConfig, backend, params, carry0, xs, batch,
+                dcarry=None):
+    """Commit the chain inputs to ``cfg.mesh`` (the io_callback hands the
+    host callbacks plain numpy — any sharding the caller had is gone):
+    boundary carries under the derived state sharding
+    (``distributed.sharding.state_shardings``), ``xs`` split along its
+    batch axis, params/batch replicated.  Records the carry shardings on
+    a sharded backend first, so its per-device streams know how to split
+    host-side payloads (journal replay, autotune probes) the same way.
+
+    With the inputs placed *before* schedule resolution, the autotune
+    probes run SPMD on the mesh — ``T_A`` is the real per-device rate and
+    the fan-out store probe measures the true per-stream ``T_T``."""
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed import sharding as shd
+
+    mesh = cfg.mesh
+    state_sh = shd.state_shardings(mesh, carry0, cfg.state_spec)
+    if backend is not None:
+        set_sh = getattr(backend, "set_state_sharding", None)
+        if set_sh is not None:
+            set_sh(state_sh)
+    rep = NamedSharding(mesh, P())
+    carry0 = jax.device_put(carry0, state_sh)
+    xs = jax.device_put(xs, shd.chain_input_shardings(mesh, xs))
+    params = jax.device_put(
+        params, jax.tree_util.tree_map(lambda _: rep, params))
+    batch = jax.device_put(
+        batch, jax.tree_util.tree_map(lambda _: rep, batch))
+    if dcarry is None:
+        return params, carry0, xs, batch
+    dcarry = jax.device_put(
+        dcarry, shd.state_shardings(mesh, dcarry, cfg.state_spec))
+    return params, carry0, xs, batch, dcarry
 
 
 def _input_fingerprint(*trees) -> str:
@@ -494,6 +561,11 @@ def _fwd_callback(static: _Static, params, carry0, xs, batch):
         backend, tmpdir = _make_backend(cfg)
         engine = None
         try:
+            if cfg.mesh is not None:
+                # rebind: fwd_op's closure is late-binding, so the placed
+                # (sharded) arrays drive the probes and the forward sweep
+                params, carry0, xs, batch = _mesh_place(
+                    cfg, backend, params, carry0, xs, batch)
             recovered = None
             fingerprint = None
             if cfg.journal_dir is not None:
@@ -580,6 +652,12 @@ def _bwd_callback(static: _Static, handle, params, carry0, xs, batch, dcarry):
     rec = _pop_run(int(handle))
     ops = _get_ops(spec, static.xs_treedef, static.xs_mask)
     n = chain_length(xs)
+    if static.cfg.mesh is not None:
+        # the reverse sweep reassembles boundaries under their recorded
+        # shardings; place the remaining operands to match (backend=None —
+        # the forward pass already recorded the carry shardings on it)
+        params, carry0, xs, batch, dcarry = _mesh_place(
+            static.cfg, None, params, carry0, xs, batch, dcarry)
     xs_diff, xs_nondiff = partition(xs, static.xs_mask)
     collect_dx = any(static.xs_mask)
     dx_slices: Dict[int, Any] = {}
@@ -812,6 +890,8 @@ def value_and_grad_offloaded(
     fallback: bool = True,
     engine: str = "compiled",
     runner: str = "compiled",
+    mesh: Optional[Any] = None,
+    state_spec: Optional[Any] = None,
 ) -> Callable[[Any, Any], Tuple[Any, Any]]:
     """Drop-in ``jax.value_and_grad`` with multistage-offloaded backprop.
 
@@ -875,6 +955,21 @@ def value_and_grad_offloaded(
     falls back to ``"compiled"`` with a one-line warning.  Gradients are
     bit-identical across runners on matching chunking (fp32).
 
+    ``mesh`` (executor engines only) makes the offloaded run first-class
+    on a multi-device mesh: chain inputs are committed to the mesh inside
+    the gradient's host callbacks, every jitted segment op runs SPMD, and
+    each device streams *its shard* of every boundary state to its own
+    Level-2 stream (a per-device ``ShardedStorage`` fan-out behind the
+    configured ``storage`` kind — composes with the journal and the
+    tiered budget).  ``state_spec`` pins the boundary carry's
+    ``PartitionSpec`` (fitted per-leaf to each shape); by default the
+    carry's leading axis shards over the mesh's data axes when divisible,
+    else replicates.  The autotuner measures the per-stream *and*
+    single-stream transfer times and applies §3 to the smaller — the
+    sharded interval never exceeds the single-device one
+    (``last_tune().t_t_global``, ``.shard_streams``); per-stream traffic
+    shows up in ``last_stats().l2_stream_bytes``.
+
     Example — a tiny chain, pinned schedule, gradients match autodiff:
 
     >>> import jax, jax.numpy as jnp, numpy as np
@@ -912,7 +1007,8 @@ def value_and_grad_offloaded(
                         journal_dir=journal_dir, resume=resume,
                         journal_repair=journal_repair,
                         autotune=autotune, tuner_id=_register_tuner(tuner),
-                        engine=engine, runner=runner)
+                        engine=engine, runner=runner,
+                        mesh=mesh, state_spec=state_spec)
     vg = jax.value_and_grad(offloaded_loss(spec, cfg))
     vg.chain_spec = spec
     vg.offload_config = cfg

@@ -98,6 +98,8 @@ class ExecutionStats:
     l2_evictions: int = 0        # tiered backend: fast -> slow spills
     l2_promotions: int = 0       # tiered backend: slow -> fast promotions
     l2_staged_peak_bytes: int = 0  # engine prefetch staging high-water mark
+    l2_shard_streams: int = 0    # sharded backend: per-device Level-2 streams
+    l2_stream_bytes: tuple = ()  # sharded backend: bytes written per stream
     prefetch_depth: int = 1      # segments of prefetch lead in the reverse
     fused_segments: int = 0      # pallas runner: segments run as fused kernels
     fused_boundary_copies: int = 0  # pallas runner: DMA boundary copies
@@ -612,6 +614,12 @@ class CheckpointExecutor:
             stats.l2_fast_peak_bytes = getattr(backend, "fast_peak_bytes", 0)
             stats.l2_evictions = getattr(backend, "evictions", 0)
             stats.l2_promotions = getattr(backend, "promotions", 0)
+            # sharded fan-out: stream count + per-stream traffic (delegated
+            # through journal/compressed wrappers by their __getattr__)
+            stats.l2_shard_streams = int(getattr(backend, "shard_streams", 0))
+            sbw = getattr(backend, "stream_bytes_written", None)
+            if callable(sbw):
+                stats.l2_stream_bytes = tuple(int(b) for b in sbw())
             stats.l2_staged_peak_bytes = engine.staged_peak_bytes
             stats.store_stall_s = engine.store_stall_s
             stats.prefetch_stall_s = engine.prefetch_stall_s

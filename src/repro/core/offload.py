@@ -183,3 +183,25 @@ def to_device(x: Any, mesh: Optional[jax.sharding.Mesh] = None,
     dev = jax.devices()[0]
     mem = dev.memory(DEVICE)
     return jax.tree_util.tree_map(lambda v: jax.device_put(v, mem), x)
+
+
+# ---------------------------------------------------------------------------
+# Per-shard host transfer (the sharded Level-2 streams)
+# ---------------------------------------------------------------------------
+
+
+def local_shards(x: jax.Array) -> dict:
+    """device -> host shard for one mesh-sharded array: each addressable
+    shard copies out independently (``jax.device_get`` of the per-device
+    buffer), so no global gather ever materialises on one host thread."""
+    import numpy as np
+    return {s.device: np.asarray(s.data) for s in x.addressable_shards}
+
+
+def assemble_shards(shape, sharding: NamedSharding, parts: dict) -> jax.Array:
+    """Inverse of :func:`local_shards`: commit each host shard back to its
+    device and reassemble the global array under ``sharding`` — the
+    ``NamedSharding`` recorded when the boundary was split."""
+    arrays = [jax.device_put(part, dev) for dev, part in parts.items()]
+    return jax.make_array_from_single_device_arrays(
+        tuple(shape), sharding, arrays)

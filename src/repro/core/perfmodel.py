@@ -185,6 +185,67 @@ def fast_peak_bytes_model(n: int, interval: int, state_bytes: int,
 
 
 # ---------------------------------------------------------------------------
+# Sharded (per-device Level-2 streams) model
+# ---------------------------------------------------------------------------
+#
+# On a mesh, every device owns a shard of each boundary state and streams it
+# to its *own* Level-2 stream, so the per-stream payload is the local shard
+# — ``state_bytes / num_shards`` when the state is evenly sharded — and the
+# streams run concurrently.  §3's rule then applies to the per-stream
+# transfer time, which is never larger than the global one, hence
+# ``I_sharded <= I_single`` whenever the fan-out actually parallelises.
+
+
+def local_shard_bytes(state_bytes: float, num_shards: int) -> float:
+    """Per-stream payload of one boundary state on an even mesh split."""
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    return state_bytes / num_shards
+
+
+def sharded_transfer_time(t_t_global: float, num_shards: int,
+                          efficiency: float = 1.0) -> float:
+    """Per-stream ``T_T`` predicted from the single-stream time: the
+    payload divides by ``num_shards`` and the streams overlap, degraded
+    by ``efficiency`` in (0, 1] for host-side contention (shared PCIe
+    root, one filesystem behind N writer threads)."""
+    if not 0.0 < efficiency <= 1.0:
+        raise ValueError(f"efficiency must be in (0, 1], got {efficiency}")
+    return local_shard_bytes(t_t_global, num_shards) / efficiency
+
+
+def choose_sharded_interval(t_a: float, t_t_stream: float,
+                            t_t_global: float | None = None) -> int:
+    """§3's ``I = ceil(T_T/T_A)`` at the *per-stream* transfer time,
+    clamped by the global time: ``min(T_T_stream, T_T_global)`` is
+    monotone in both arguments, so the sharded interval can never exceed
+    the single-device one even when a measured fan-out probe comes back
+    noisy-slow (contended CI machine)."""
+    t_t = t_t_stream if t_t_global is None else min(t_t_stream, t_t_global)
+    return optimal_interval(t_t, t_a)
+
+
+def t_async_sharded(n: int, interval: int, s: int, t_a: float, t_b: float,
+                    t_t_global: float, num_shards: int,
+                    efficiency: float = 1.0) -> float:
+    """Multistage runtime with per-device Level-2 streams: :func:`t_async`
+    at the per-stream transfer time.  With ``num_shards == 1`` this is
+    exactly the single-device model."""
+    t_t = sharded_transfer_time(t_t_global, num_shards, efficiency)
+    return t_async(n, interval, s, t_a, t_b, t_t)
+
+
+def mesh_axis_transfer_times(state_bytes: float, mesh_shape: dict,
+                             d2h_bw: float) -> dict:
+    """Roofline per-axis ``T_T``: the per-stream time if the state were
+    sharded along each mesh axis alone (``mesh_shape`` is the
+    ``{axis: size}`` dict of a ``jax.sharding.Mesh``).  The dry-run uses
+    this to pick which axis to put in ``state_spec`` before measuring."""
+    return {axis: local_shard_bytes(state_bytes, max(1, int(k))) / d2h_bw
+            for axis, k in mesh_shape.items()}
+
+
+# ---------------------------------------------------------------------------
 # Coupling to the roofline terms of a compiled program
 # ---------------------------------------------------------------------------
 

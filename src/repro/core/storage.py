@@ -116,9 +116,13 @@ def _freeze_in_place(tree: Any) -> Any:
 
 
 def tree_bytes(tree: Any) -> int:
-    return sum(
-        np.asarray(x).nbytes for x in jax.tree_util.tree_leaves(tree)
-    )
+    total = 0
+    for x in jax.tree_util.tree_leaves(tree):
+        # nbytes fast path: accounting on a mesh-sharded jax Array must not
+        # gather it to host (np.asarray would)
+        nb = getattr(x, "nbytes", None)
+        total += int(nb) if nb is not None else np.asarray(x).nbytes
+    return total
 
 
 class RAMStorage:
@@ -695,6 +699,12 @@ class JournaledStorage:
     (``bytes_written``, ``fast_peak_bytes``, ...) pass straight through.
     """
 
+    # The journal must WAL the *global* payload (recovery re-splits it), so
+    # the engine's pre-split snapshot hook is disabled through this wrapper:
+    # a class-level None stops attribute lookup before __getattr__ can
+    # delegate to a sharded inner's ``snapshot``.
+    snapshot = None
+
     def __init__(self, inner: Any, directory: str, *, fsync: bool = True,
                  repair: bool = False, faults: Any = None):
         self.inner = inner
@@ -934,6 +944,332 @@ class JournaledStorage:
         return getattr(inner, name)
 
 
+class _ShardWorker:
+    """One persistent writer/reader thread per Level-2 shard stream."""
+
+    def __init__(self, idx: int):
+        self.q: "queue.Queue" = queue.Queue()
+        self.t = threading.Thread(target=self._loop, daemon=True,
+                                  name=f"l2-shard-{idx}")
+        self.t.start()
+
+    def _loop(self) -> None:
+        while True:
+            item = self.q.get()
+            if item is None:
+                return
+            fn, out, ev = item
+            try:
+                out.append(fn())
+            except Exception as e:  # re-raised by the fan-out joiner
+                out.append(e)
+                out.append(_SHARD_ERR)
+            finally:
+                ev.set()
+
+    def submit(self, fn):
+        ev = threading.Event()
+        out: list = []
+        self.q.put((fn, out, ev))
+        return ev, out
+
+    def stop(self) -> None:
+        self.q.put(None)
+
+
+_SHARD_ERR = object()   # sentinel tagging a worker result as an exception
+
+
+@dataclasses.dataclass
+class _ShardedPayload:
+    """A boundary state pre-split into per-stream host shards.
+
+    Produced by :meth:`ShardedStorage.snapshot` on the executor's thread
+    (so the device->host copies of the *local* shards happen before the
+    payload rides the async writer queue) and consumed by
+    :meth:`ShardedStorage.put`, which fans the per-stream trees out to the
+    inner backends in parallel.
+    """
+    streams: list    # per-stream {str(leaf_idx): np.ndarray}
+    layout: tuple    # per-leaf ("rep"|"shard", sharding, shape, dtype)
+    treedef: Any
+
+
+class ShardedStorage:
+    """Fan-out Level-2 wrapper: one inner backend per mesh device.
+
+    Each device's shard of every boundary state streams to its *own*
+    Level-2 stream (inner backend + dedicated worker thread), so transfer
+    time scales with the **local** shard bytes, not the global state —
+    the mesh-aware refinement of the paper's ``I = ceil(T_T/T_A)`` rule.
+
+    Splitting is sharding-driven: a leaf that is a mesh-sharded
+    ``jax.Array`` contributes its ``addressable_shards`` directly (one
+    device->host copy per shard, no global gather); a host leaf splits
+    along the ``NamedSharding`` recorded via :meth:`set_state_sharding`
+    (the journal re-hydration path).  Replicated leaves (and whole trees
+    with nothing sharded) go to stream 0 only.  ``get`` fetches every
+    stream in parallel and reassembles: committed per-device arrays via
+    ``jax.make_array_from_single_device_arrays`` when the recorded
+    sharding names real devices (so the reverse sweep's jitted segment
+    ops resume SPMD without a broadcast), host concatenation otherwise.
+
+    Composes under :class:`JournaledStorage` (the WAL keeps the global
+    payload; re-split happens on the inner put) and over any registered
+    inner kind — ``make_backend(kind, shards=N, devices=...)``.
+    """
+
+    def __init__(self, inners: Iterable[Any], devices: Optional[list] = None):
+        self.inners = list(inners)
+        if not self.inners:
+            raise ValueError("ShardedStorage needs at least one inner backend")
+        self.devices = list(devices) if devices is not None else None
+        if self.devices is not None and len(self.devices) != len(self.inners):
+            raise ValueError(
+                f"{len(self.devices)} devices for {len(self.inners)} shard "
+                "streams: need exactly one inner backend per device")
+        self._lock = threading.Lock()
+        self._layouts: Dict[Any, Any] = {}   # key -> (treedef, layout)
+        self._state_sharding_leaves: Optional[list] = None
+        self._workers = [_ShardWorker(i) for i in range(len(self.inners))]
+
+    # -- fan-out machinery ----------------------------------------------------
+    def _fanout(self, fns) -> list:
+        pending = [w.submit(fn) for w, fn in zip(self._workers, fns)]
+        results, err = [], None
+        for ev, out in pending:
+            ev.wait()
+            if len(out) == 2 and out[1] is _SHARD_ERR:
+                err = err or out[0]
+                results.append(None)
+            else:
+                results.append(out[0])
+        if err is not None:
+            raise err
+        return results
+
+    # -- sharding bookkeeping -------------------------------------------------
+    def set_state_sharding(self, shardings: Any) -> None:
+        """Record the boundary-state pytree of shardings (one per carry
+        leaf) used to split host trees and reassemble fetched shards."""
+        # None entries mean "replicated leaf" and must stay leaves (a bare
+        # flatten would drop them and misalign the per-leaf zip)
+        leaves, _ = jax.tree_util.tree_flatten(
+            shardings, is_leaf=lambda x: x is None)
+        with self._lock:
+            self._state_sharding_leaves = leaves
+        for s in leaves:
+            if not getattr(s, "is_fully_replicated", True):
+                self._adopt_devices(s)
+                break
+
+    def _adopt_devices(self, sharding) -> Optional[list]:
+        """The stream->device mapping; adopted from the first sharding seen
+        when not pinned at construction.  None when no 1:1 mapping exists
+        (the caller degrades that leaf to replicated/stream-0)."""
+        if self.devices is not None:
+            return self.devices
+        devs = getattr(sharding, "addressable_devices", None)
+        if not devs:
+            return None
+        devs = sorted(devs, key=lambda d: getattr(d, "id", 0))
+        if len(devs) != len(self.inners):
+            return None
+        self.devices = devs
+        return devs
+
+    def _recorded_shardings(self, n_leaves: int) -> list:
+        with self._lock:
+            rec = self._state_sharding_leaves
+        if rec is not None and len(rec) == n_leaves:
+            return rec
+        return [None] * n_leaves
+
+    def _leaf_split_info(self, leaf, recorded):
+        sh = getattr(leaf, "sharding", None)
+        if sh is not None and not getattr(sh, "is_fully_replicated", True) \
+                and getattr(leaf, "addressable_shards", None):
+            return ("jax", sh)
+        if recorded is not None and not getattr(
+                recorded, "is_fully_replicated", True):
+            return ("spec", recorded)
+        return ("rep", None)
+
+    # -- split / assemble -----------------------------------------------------
+    def _split(self, tree: Any) -> Optional[_ShardedPayload]:
+        """Split a pytree into per-stream host trees; None when nothing in
+        it is sharded (degenerate single-stream case)."""
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        recorded = self._recorded_shardings(len(leaves))
+        sources, layout, any_shard = [], [], False
+        for leaf, rec in zip(leaves, recorded):
+            kind, sh = self._leaf_split_info(leaf, rec)
+            if kind != "rep" and self._adopt_devices(sh) is None:
+                kind, sh = "rep", None   # no stream<->device mapping
+            if kind == "jax":
+                by_dev = {s.device: s.data for s in leaf.addressable_shards}
+                if any(d not in by_dev for d in self.devices):
+                    kind, sh = "rep", None   # foreign device set: gather
+                else:
+                    sources.append(("jax", by_dev))
+            if kind == "spec":
+                idx_map = sh.addressable_devices_indices_map(
+                    tuple(leaf.shape))
+                sources.append(("spec", (np.asarray(leaf), idx_map)))
+            if kind == "rep":
+                sources.append(("rep", leaf))
+                layout.append(("rep", None, None, None))
+            else:
+                any_shard = True
+                layout.append(("shard", sh, tuple(leaf.shape),
+                               np.dtype(leaf.dtype)))
+        if not any_shard:
+            return None
+        devices = self.devices
+
+        def extract(i: int) -> Dict[str, np.ndarray]:
+            dev, out = devices[i], {}
+            for li, (kind, src) in enumerate(sources):
+                if kind == "jax":
+                    out[str(li)] = np.asarray(src[dev])
+                elif kind == "spec":
+                    host, idx_map = src
+                    out[str(li)] = np.ascontiguousarray(host[idx_map[dev]])
+                elif i == 0:   # replicated leaves live on stream 0 only
+                    out[str(li)] = np.array(src, copy=True)
+            return out
+
+        streams = self._fanout(
+            [(lambda i=i: extract(i)) for i in range(len(self.inners))])
+        return _ShardedPayload(streams=streams, layout=tuple(layout),
+                               treedef=treedef)
+
+    def snapshot(self, tree: Any) -> Any:
+        """Pre-split host snapshot for ``AsyncTransferEngine.store_async``
+        (replaces its ``_to_host``): per-device shard copies happen here,
+        on the caller's thread, in parallel across the shard workers."""
+        payload = self._split(tree)
+        return payload if payload is not None else _to_host(tree)
+
+    def _assemble_leaf(self, sharding, shape, dtype, parts):
+        if isinstance(sharding, jax.sharding.Sharding):
+            arrays = [jax.device_put(parts[i], d)
+                      for i, d in enumerate(self.devices)]
+            return jax.make_array_from_single_device_arrays(
+                tuple(shape), sharding, arrays)
+        # duck-typed sharding (tests without devices): host reassembly
+        out = np.empty(tuple(shape), dtype)
+        idx_map = sharding.addressable_devices_indices_map(tuple(shape))
+        for i, dev in enumerate(self.devices):
+            out[idx_map[dev]] = parts[i]
+        out.setflags(write=False)
+        return out
+
+    # -- backend protocol -----------------------------------------------------
+    def put(self, key: Any, tree: Any) -> None:
+        payload = tree if isinstance(tree, _ShardedPayload) \
+            else self._split(tree)
+        if payload is None:
+            with self._lock:
+                self._layouts.pop(key, None)
+            self.inners[0].put(key, tree)
+            return
+        streams = payload.streams
+        self._fanout([(lambda i=i: self.inners[i].put(key, streams[i]))
+                      for i in range(len(self.inners))])
+        with self._lock:
+            self._layouts[key] = (payload.treedef, payload.layout)
+
+    def get(self, key: Any) -> Any:
+        with self._lock:
+            layout = self._layouts.get(key)
+        if layout is None:
+            return self.inners[0].get(key)
+        treedef, entries = layout
+        streams = self._fanout([(lambda i=i: self.inners[i].get(key))
+                                for i in range(len(self.inners))])
+        leaves = []
+        for li, (kind, sh, shape, dtype) in enumerate(entries):
+            if kind == "rep":
+                leaves.append(streams[0][str(li)])
+            else:
+                parts = [streams[i][str(li)] for i in range(len(streams))]
+                leaves.append(self._assemble_leaf(sh, shape, dtype, parts))
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def delete(self, key: Any) -> None:
+        with self._lock:
+            self._layouts.pop(key, None)
+        self._fanout([(lambda i=i: self.inners[i].delete(key))
+                      for i in range(len(self.inners))])
+
+    def __contains__(self, key: Any) -> bool:
+        with self._lock:
+            if key in self._layouts:
+                return True
+        return any(key in inner for inner in self.inners)
+
+    def keys(self) -> Iterable[Any]:
+        out: set = set()
+        for inner in self.inners:
+            out |= set(inner.keys())
+        with self._lock:
+            out |= set(self._layouts)
+        return list(out)
+
+    # -- plan awareness (forwarded to tiered inners) --------------------------
+    def set_plan(self, plan: Any) -> None:
+        for inner in self.inners:
+            sp = getattr(inner, "set_plan", None)
+            if sp is not None:
+                sp(plan)
+
+    def plan_prefetch_distance(self, plan: Any) -> int:
+        fns = [getattr(i, "plan_prefetch_distance", None)
+               for i in self.inners]
+        vals = [f(plan) for f in fns if f is not None]
+        return max(vals) if vals else 1
+
+    # -- accounting -----------------------------------------------------------
+    @property
+    def shard_streams(self) -> int:
+        return len(self.inners)
+
+    def stream_bytes_written(self) -> list:
+        return [int(i.bytes_written) for i in self.inners]
+
+    def stream_bytes_read(self) -> list:
+        return [int(i.bytes_read) for i in self.inners]
+
+    @property
+    def bytes_written(self) -> int:
+        return sum(i.bytes_written for i in self.inners)
+
+    @property
+    def bytes_read(self) -> int:
+        return sum(i.bytes_read for i in self.inners)
+
+    @property
+    def live_bytes(self) -> int:
+        return sum(i.live_bytes for i in self.inners)
+
+    @property
+    def peak_bytes(self) -> int:
+        # sum of per-stream peaks: an upper bound on the simultaneous
+        # global high-water mark (streams peak together on this schedule)
+        return sum(i.peak_bytes for i in self.inners)
+
+    def close(self) -> None:
+        for w in self._workers:
+            w.stop()
+        for w in self._workers:
+            w.t.join(timeout=2.0)
+        for inner in self.inners:
+            c = getattr(inner, "close", None)
+            if c is not None:
+                c()
+
+
 # ---------------------------------------------------------------------------
 # backend registry
 # ---------------------------------------------------------------------------
@@ -948,6 +1284,7 @@ def register_backend(name: str, factory: Callable[..., Any]) -> None:
 
 def make_backend(kind: str, *, journal: Optional[str] = None,
                  journal_fsync: bool = True, journal_repair: bool = False,
+                 shards: Optional[int] = None, devices: Optional[list] = None,
                  **kwargs: Any) -> Any:
     """Build a Level-2 backend by name.
 
@@ -969,6 +1306,14 @@ def make_backend(kind: str, *, journal: Optional[str] = None,
     ``journal_repair=True`` truncates a CRC-damaged journal back to its
     last good record on open instead of raising
     :class:`~repro.core.faults.ChecksumError`.
+
+    ``shards=N`` wraps N instances of the backend in a
+    :class:`ShardedStorage` — one Level-2 stream per mesh device
+    (``devices=`` pins the stream->device mapping; disk directories get a
+    per-stream ``shard<i>`` suffix and a tiered ``capacity_bytes`` budget
+    is divided evenly across streams).  The journal composes *outside*
+    the fan-out, so the WAL stays a single global crash-consistency
+    domain.
     """
     try:
         factory = _BACKENDS[kind]
@@ -976,9 +1321,24 @@ def make_backend(kind: str, *, journal: Optional[str] = None,
         raise ValueError(
             f"unknown Level-2 backend {kind!r}; known: "
             f"{sorted(_BACKENDS)}") from None
+    if shards is None:
+        backend = factory(**kwargs)
+    else:
+        if shards < 1:
+            raise ValueError(f"need shards >= 1, got {shards}")
+        inners = []
+        for i in range(shards):
+            kw = dict(kwargs)
+            if kw.get("directory"):
+                kw["directory"] = os.path.join(kw["directory"], f"shard{i}")
+            if kw.get("capacity_bytes"):
+                kw["capacity_bytes"] = max(
+                    1, int(kw["capacity_bytes"]) // shards)
+            inners.append(factory(**kw))
+        backend = ShardedStorage(inners, devices=devices)
     if journal is None:
-        return factory(**kwargs)
-    return JournaledStorage(factory(**kwargs), journal,
+        return backend
+    return JournaledStorage(backend, journal,
                             fsync=journal_fsync, repair=journal_repair)
 
 
@@ -1095,8 +1455,13 @@ class AsyncTransferEngine:
 
     def store_async(self, key: Any, tree: Any) -> None:
         # Snapshot on the caller's thread (cheap) so later in-place mutation
-        # of the running state can never corrupt the checkpoint.
-        self._store_q.put(("put", key, _to_host(tree)))
+        # of the running state can never corrupt the checkpoint.  A backend
+        # that pre-splits per-device shards (ShardedStorage) supplies its
+        # own snapshot; JournaledStorage pins ``snapshot = None`` so
+        # journaled runs fall back to the global host copy the WAL needs.
+        snap = getattr(self.backend, "snapshot", None)
+        payload = snap(tree) if snap is not None else _to_host(tree)
+        self._store_q.put(("put", key, payload))
         with self._lock:
             self.num_stores += 1
 

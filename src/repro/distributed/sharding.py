@@ -226,26 +226,99 @@ def cache_shardings(mesh: Mesh, cache_shape: Any) -> Any:
     return jax.tree_util.tree_map_with_path(one, cache_shape)
 
 
+def batch_pspec(shape, mesh: Mesh, profile: str = "tp") -> P:
+    """PartitionSpec for one input-batch leaf: leading axis over
+    (pod, data) — or over *every* mesh axis under the ``dp`` profile;
+    long-context batch-1 inputs fall back to sequence sharding over the
+    ``data`` axis, but only when that axis exists *and* has size > 1
+    (a size-1 or absent axis would attach a pointless — or invalid —
+    ``P(None, "data", ...)`` constraint)."""
+    ba = batch_axes(mesh) if profile != "dp" else tuple(mesh.axis_names)
+    n_b = 1
+    for a in ba:
+        n_b *= mesh.shape[a]
+    if not shape:  # scalars (decode position)
+        return P()
+    if n_b > 1 and shape[0] % n_b == 0 and shape[0] >= n_b:
+        return P(ba, *(None,) * (len(shape) - 1))
+    n_seq = mesh.shape.get("data", 1)
+    if len(shape) >= 2 and n_seq > 1 and shape[1] % n_seq == 0:
+        # batch too small: shard the sequence axis (long-context decode)
+        return P(None, "data", *(None,) * (len(shape) - 2))
+    return P(*(None,) * len(shape))
+
+
 def batch_shardings(mesh: Mesh, batch_shape: Any,
                     profile: str = "tp") -> Any:
-    """Input batch: leading axis over (pod, data) — or over *every* mesh
-    axis under the ``dp`` profile; long-context batch-1 inputs fall back to
-    sequence sharding / replication."""
-    ba = batch_axes(mesh) if profile != "dp" else tuple(mesh.axis_names)
+    """NamedShardings for an input batch pytree (see ``batch_pspec``)."""
+
+    def one(leaf):
+        return NamedSharding(mesh, batch_pspec(tuple(leaf.shape), mesh,
+                                               profile))
+
+    return jax.tree_util.tree_map(one, batch_shape)
+
+
+# ---------------------------------------------------------------------------
+# boundary-state (carry) sharding — the sharded-offload path
+# ---------------------------------------------------------------------------
+
+
+def state_pspec(shape, mesh: Mesh, spec: Optional[P] = None) -> P:
+    """PartitionSpec for one boundary-state (carry) leaf.
+
+    With an explicit ``spec`` (the ``OffloadConfig(state_spec=...)``
+    override) the spec is padded/truncated to the leaf's rank and run
+    through ``fit_spec_to_shape`` — same machinery as ``param_pspec``
+    consumers, so axes missing from the mesh or not dividing the
+    dimension degrade to replication instead of erroring.
+
+    Without one, the derivation mirrors ``batch_pspec``'s leading-axis
+    rule: carries are (batch, feature...) pytrees, so the leading axis
+    shards over the batch axes when divisible and everything else
+    replicates.  Scalars (loss accumulators) always replicate.
+    """
+    shape = tuple(shape)
+    if spec is not None:
+        padded = tuple(spec)[:len(shape)]
+        padded = padded + (None,) * (len(shape) - len(padded))
+        return fit_spec_to_shape(mesh, padded, shape)
+    ba = batch_axes(mesh)
+    n_b = 1
+    for a in ba:
+        n_b *= mesh.shape[a]
+    if shape and n_b > 1 and shape[0] % n_b == 0 and shape[0] >= n_b:
+        return P(ba, *(None,) * (len(shape) - 1))
+    return P(*(None,) * len(shape))
+
+
+def state_shardings(mesh: Mesh, state: Any,
+                    spec: Optional[P] = None) -> Any:
+    """NamedShardings for a boundary-state pytree — what the sharded
+    Level-2 streams record and reassemble with."""
+
+    def one(leaf):
+        shape = tuple(getattr(leaf, "shape", ()) or ())
+        return NamedSharding(mesh, state_pspec(shape, mesh, spec))
+
+    return jax.tree_util.tree_map(one, state)
+
+
+def chain_input_shardings(mesh: Mesh, xs: Any) -> Any:
+    """NamedShardings for per-step chain inputs ``xs``: leaves are
+    time-major ``(n, batch, ...)``, so axis 1 — not axis 0 — shards over
+    the batch axes.  The time axis is never sharded (segments slice it
+    on the host)."""
+    ba = batch_axes(mesh)
     n_b = 1
     for a in ba:
         n_b *= mesh.shape[a]
 
     def one(leaf):
-        shape = leaf.shape
-        if not shape:  # scalars (decode position)
-            return NamedSharding(mesh, P())
-        if shape[0] % max(n_b, 1) == 0 and shape[0] >= n_b:
-            return NamedSharding(mesh, P(ba, *(None,) * (len(shape) - 1)))
-        if len(shape) >= 2 and shape[1] % mesh.shape.get("data", 1) == 0:
-            # batch too small: shard the sequence axis (long-context decode)
-            return NamedSharding(mesh, P(None, "data",
+        shape = tuple(getattr(leaf, "shape", ()) or ())
+        if len(shape) >= 2 and n_b > 1 and shape[1] % n_b == 0:
+            return NamedSharding(mesh, P(None, ba,
                                          *(None,) * (len(shape) - 2)))
         return NamedSharding(mesh, P(*(None,) * len(shape)))
 
-    return jax.tree_util.tree_map(one, batch_shape)
+    return jax.tree_util.tree_map(one, xs)

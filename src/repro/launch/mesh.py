@@ -19,7 +19,39 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_local_mesh():
-    """Whatever this process has (CPU smoke runs: 1 device)."""
-    n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"))
+def make_local_mesh(*, data: int | None = None, model: int = 1):
+    """A ``("data", "model")`` mesh over this process's devices.
+
+    ``model`` is the tensor-parallel axis size; it must divide the local
+    device count.  ``data`` defaults to ``device_count // model`` (use
+    every device); passing it explicitly lets smoke runs build a smaller
+    mesh than the process has devices.  Raises with the
+    ``--xla_force_host_platform_device_count`` escape hatch named when
+    the process has fewer devices than the mesh needs — on CPU that flag
+    (via ``XLA_FLAGS``, before the first jax call) is how forced
+    multi-device smoke runs get their devices.
+    """
+    devices = jax.devices()
+    n = len(devices)
+    if model < 1:
+        raise ValueError(f"model= axis size must be >= 1, got {model}")
+    if data is None:
+        if n % model != 0:
+            raise ValueError(
+                f"model={model} does not divide the {n} local device(s); "
+                f"pick a divisor or force more devices with "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count=N")
+        data = n // model
+    if data < 1:
+        raise ValueError(f"data= axis size must be >= 1, got {data}")
+    need = data * model
+    if need > n:
+        raise ValueError(
+            f"mesh ({data}, {model}) needs {need} devices but only {n} "
+            f"is/are visible; on CPU set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need} "
+            f"before the first jax call")
+    import numpy as np
+    from jax.sharding import Mesh
+    return Mesh(np.array(devices[:need]).reshape(data, model),
+                ("data", "model"))

@@ -97,7 +97,41 @@ def main(argv=None):
                     help="restore this exact checkpoint step instead of the "
                          "latest; raises (listing what exists) if the step "
                          "was never saved or has been garbage-collected")
+    ap.add_argument("--sharded-offload", action="store_true",
+                    help="multi-device executor engines: run the offloaded "
+                         "chain SPMD on a local mesh and stream each "
+                         "device's shard of every Level-2 boundary to its "
+                         "own per-device stream (requires --strategy "
+                         "multistage_async with --engine "
+                         "compiled/interpreted)")
+    ap.add_argument("--mesh-model", type=int, default=1, metavar="N",
+                    help="model (tensor-parallel) axis size of the local "
+                         "mesh (--sharded-offload); must divide the device "
+                         "count, remainder goes to the data axis")
+    ap.add_argument("--host-devices", type=int, default=None, metavar="N",
+                    help="force N CPU devices (XLA_FLAGS "
+                         "--xla_force_host_platform_device_count) for mesh "
+                         "smoke runs; must be set before jax initialises, "
+                         "i.e. only effective as a launcher flag")
     args = ap.parse_args(argv)
+
+    # Overlap flags (latency-hiding scheduler, async collectives) and any
+    # forced host device count must land in XLA_FLAGS before the first
+    # backend init — do it before anything touches a jax device.
+    from repro.launch.perf_env import configure_perf_env
+
+    configure_perf_env(host_device_count=args.host_devices)
+
+    if args.strategy is not None and args.engine != "scan" \
+            and jax.default_backend() == "cpu":
+        # The executor engines escape the jitted step via io_callback and
+        # dispatch nested segment computations from the callback thread.
+        # With XLA's async CPU dispatch the outer program occupies the
+        # (nproc-sized) execution pool, so on few-core hosts the nested
+        # dispatch starves and the step deadlocks; synchronous CPU
+        # dispatch makes the nesting safe and costs nothing here (host
+        # "transfers" are memcpys).
+        jax.config.update("jax_cpu_enable_async_dispatch", False)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     if args.policy:
@@ -158,26 +192,43 @@ def main(argv=None):
         # while a retry after a mid-sweep crash genuinely resumes from the
         # last durable boundary instead of redoing the O(n) forward
         offload_opts["resume"] = True
+
+    # Multi-device placement.  Two sharded paths: the trace-native ones
+    # (plain autodiff / --engine scan) jit the whole step over a
+    # data-parallel mesh with sharded batches; --sharded-offload instead
+    # hands the mesh to the executor engines, whose gradient callbacks
+    # commit the chain to the mesh themselves and stream each device's
+    # boundary shard to its own Level-2 stream (the outer jit stays
+    # unsharded — the io_callback boundary is where SPMD begins).
+    mesh = None
+    sharded_offload = False
+    if args.sharded_offload:
+        if args.strategy != "multistage_async" or args.engine == "scan":
+            ap.error("--sharded-offload shards the executor engines' "
+                     "Level-2 streams; pass --strategy multistage_async "
+                     "with --engine compiled/interpreted")
+        from repro.launch.mesh import make_local_mesh
+
+        mesh = make_local_mesh(model=args.mesh_model)
+        offload_opts["mesh"] = mesh
+        sharded_offload = True
+        print(f"[mesh] sharded Level-2 offload over "
+              f"{mesh.devices.size} device(s), axes {dict(mesh.shape)}")
     raw_step = make_train_step(api, opt, grad_accum=args.grad_accum,
                                strategy=args.strategy, engine=args.engine,
                                offload_opts=offload_opts or None)
 
-    # Multi-device host: jit over a data-parallel mesh with sharded batches.
-    # Only the trace-native paths can be SPMD-partitioned — plain autodiff
-    # (no strategy) and the scan engine; the executor engines escape the
-    # trace via io_callback, which deadlocks under a partitioned step, so
-    # they keep single-device placement.
-    mesh = None
-    if jax.device_count() > 1 and (args.strategy is None
-                                   or args.engine == "scan"):
+    if mesh is None and jax.device_count() > 1 and (
+            args.strategy is None or args.engine == "scan"):
         from repro.launch.mesh import make_local_mesh
 
         mesh = make_local_mesh()
         print(f"[mesh] data-parallel over {jax.device_count()} devices")
-    elif jax.device_count() > 1:
+    elif mesh is None and jax.device_count() > 1:
         print(f"[mesh] {jax.device_count()} devices present but engine="
               f"{args.engine or 'compiled'} escapes the trace; running "
-              "single-device (use --engine scan to shard)")
+              "single-device (use --engine scan to shard, or "
+              "--sharded-offload for per-device Level-2 streams)")
     def _recover(attempt, err):
         # Two recovery layers.  In-process retry (here): the step re-runs
         # with the same state/batch, and with --journal-dir its
@@ -230,7 +281,7 @@ def main(argv=None):
     for step, batch in zip(range(start_step, args.steps), it):
         wd.start()
         batch = jax.tree_util.tree_map(jnp.asarray, batch)
-        if mesh is not None:
+        if mesh is not None and not sharded_offload:
             if batch_sh is None:
                 from repro.distributed.sharding import batch_shardings
 

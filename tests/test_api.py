@@ -183,10 +183,17 @@ def test_fallback_without_chain_spec():
 
 def test_snap_interval():
     assert snap_interval(48, 8) == 8       # exact divisor
-    assert snap_interval(48, 7) == 6       # nearby divisor wins
+    assert snap_interval(48, 7) == 8       # nearby divisor wins, upward
+    assert snap_interval(48, 5) == 6       # never below the optimum:
+    #                                        I = ceil(T_T/T_A) is the
+    #                                        minimum no-stall interval
     assert snap_interval(37, 8) == 8       # prime length: keep the optimum
     assert snap_interval(48, 1000) == 48   # capped at n
     assert snap_interval(48, 0) == 1
+    # the no-stall invariant: the snap never shrinks the interval
+    for n in (24, 37, 48, 97):
+        for t in range(1, n + 1):
+            assert t <= snap_interval(n, t) <= min(2 * t, n), (n, t)
 
 
 def test_default_slots():

@@ -5,9 +5,11 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs import get_config
-from repro.distributed.sharding import (batch_shardings, cache_shardings,
+from repro.distributed.sharding import (batch_pspec, batch_shardings,
+                                        cache_shardings, chain_input_shardings,
                                         fit_spec_to_shape, param_pspec,
-                                        params_shardings)
+                                        params_shardings, state_pspec,
+                                        state_shardings)
 
 
 def _mesh(shape=(1, 1), names=("data", "model")):
@@ -104,3 +106,86 @@ def test_batch_shardings_scalar_and_small_batch():
         "tokens": jax.ShapeDtypeStruct((4, 33), jnp.int32),
         "pos": jax.ShapeDtypeStruct((), jnp.int32)})
     assert out["pos"].spec == P()
+
+
+def test_batch_pspec_no_seq_fallback_without_data_axis():
+    """Regression: the sequence-sharding fallback used to fire whenever
+    ``shape[1] % mesh.shape.get("data", 1) == 0`` — i.e. *always* when the
+    data axis is absent or size 1 (``x % 1 == 0``), attaching an invalid
+    ``P(None, "data", ...)`` referencing a missing axis."""
+    # data axis absent entirely: batch 3 not divisible by pod=4, and the
+    # fallback must NOT produce a spec naming "data"
+    mesh = FakeMesh(pod=4)
+    assert batch_pspec((3, 33), mesh) == P(None, None)
+    # data axis present but size 1: same — sharding over it is pointless
+    mesh = FakeMesh(pod=4, data=1, model=2)
+    assert batch_pspec((3, 32), mesh) == P(None, None)
+    # genuine long-context case still shards the sequence axis
+    mesh = FakeMesh(data=4)
+    assert batch_pspec((1, 32), mesh) == P(None, "data")
+    # and a divisible batch still takes the leading-axis path
+    assert batch_pspec((8, 33), mesh) == P(("data",), None)
+
+
+def test_param_pspec_optimizer_nested_and_stacked():
+    """Golden specs: rules see through optimizer-state nesting, and stacked
+    leading axes stay replicated for every optimizer slot."""
+    leaf3 = jax.ShapeDtypeStruct((4, 64, 128), jnp.float32)
+    leaf2 = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+
+    def spec_for(path, leaf):
+        keys = [jax.tree_util.DictKey(p) for p in path.split("/")]
+        return param_pspec(keys, leaf)
+
+    for slot in ("m", "v"):
+        assert spec_for(f"opt/{slot}/layers/pos0/attn/wq/w", leaf3) == \
+            P(None, "data", "model")
+        assert spec_for(f"opt/{slot}/embed/emb", leaf2) == P("model", None)
+    # enc_layers/ also matches the stacked marker ("layers/")
+    assert spec_for("enc_layers/pos0/mlp/down/w", leaf3) == \
+        P(None, "model", "data")
+    # norm scale nested in optimizer state: replicated
+    leaf1 = jax.ShapeDtypeStruct((64,), jnp.float32)
+    assert spec_for("opt/v/final_norm/scale", leaf1) == P(None)
+
+
+def test_fit_spec_whisper_vocab_cases():
+    """Whisper's 51865 vocab: every axis assignment degrades to replication
+    on the non-divisible dim, on 1D and tuple axes alike."""
+    mesh = FakeMesh(pod=2, data=16, model=16)
+    assert fit_spec_to_shape(mesh, P("model", None), (51865, 384)) == \
+        P(None, None)
+    assert fit_spec_to_shape(
+        mesh, P(("pod", "data"), "model"), (51865, 384)) == P(None, "model")
+    # stacked embedding (n_periods, vocab, d): vocab dim still degrades
+    assert fit_spec_to_shape(
+        mesh, P(None, "model", None), (4, 51865, 384)) == P(None, None, None)
+
+
+def test_state_pspec_derivation_and_override():
+    mesh = FakeMesh(data=4, model=2)
+    # leading axis shards over the batch axes when divisible
+    assert state_pspec((8, 16), mesh) == P(("data",), None)
+    # non-divisible leading axis replicates
+    assert state_pspec((6, 16), mesh) == P(None, None)
+    # scalars (loss accumulators) replicate
+    assert state_pspec((), mesh) == P()
+    # explicit spec is fitted per-shape: padded to rank, non-divisible
+    # axes dropped
+    assert state_pspec((8, 16), mesh, spec=P(None, "model")) == \
+        P(None, "model")
+    assert state_pspec((8, 15), mesh, spec=P(None, "model")) == P(None, None)
+    assert state_pspec((8,), mesh, spec=P(None, "model")) == P(None)
+
+
+def test_state_and_chain_input_shardings_build():
+    devs = np.array(jax.devices()[:1]).reshape(1, 1)
+    mesh = Mesh(devs, ("data", "model"))
+    state = {"h": jax.ShapeDtypeStruct((8, 16), jnp.float32),
+             "acc": jax.ShapeDtypeStruct((), jnp.float32)}
+    sh = state_shardings(mesh, state)
+    assert sh["acc"].spec == P()
+    xs = {"x": jax.ShapeDtypeStruct((24, 8, 16), jnp.float32)}
+    xsh = chain_input_shardings(mesh, xs)
+    # 1-device mesh: n_b == 1, everything replicates
+    assert xsh["x"].spec == P(None, None, None)
