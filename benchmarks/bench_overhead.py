@@ -22,7 +22,12 @@ Three sections:
    ``fast_peak_bytes_model`` (and therefore obey the budget) at every
    point, while the wall-time overhead stays ~constant in ``n`` (the
    paper's "reduce memory to *any* size" claim, enforced);
-5. the crash-consistency tax: the same chain with ``journal_dir=`` — the
+5. the 2D-plan budget sweep: a deep-per-step transformer under shrinking
+   ``step_memory_budget`` — the planner's inner (layer) axis must match
+   ``choose_2d_plan`` on the same ``jaxpr_cost`` byte profile, the measured
+   per-step peak must equal ``inner_boundary_bytes_model`` exactly, and the
+   inner recompute must be count-exact (``n * n_layers``) at every budget;
+6. the crash-consistency tax: the same chain with ``journal_dir=`` — the
    journaled gradients must be bit-identical to the plain run's, and the
    wall-time ratio + WAL size are tracked across PRs.
 
@@ -309,6 +314,111 @@ def capacity_sweep(depths=(96, 192)):
     for label in ("all", "half", "one"):
         per_step = [r[f"{label}_wall_per_step_us"] for r in rows]
         assert max(per_step) < 3.0 * min(per_step) + 50.0, (label, per_step)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# 2D plans: per-step budget sweep (time x layer, measured == model)
+# ---------------------------------------------------------------------------
+
+
+def plan2d_sweep():
+    """``step_memory_budget`` sweep over a transformer whose per-step layer
+    stack is deep enough for the inner axis to matter (the jamba hybrid's
+    8-layer period, deepened to two chain steps).
+
+    For each budget — one step's full activations (1D suffices), then half
+    and a quarter of that (the Gruslys DP must chunk the stack) — asserted:
+
+    * the planner's chosen ``InnerPlan`` equals ``choose_2d_plan`` fed the
+      same ``jaxpr_cost`` byte profile (one decision procedure, end to end);
+    * the measured fast-tier per-step peak ``inner_peak_bytes`` equals
+      ``inner_boundary_bytes_model`` **exactly** — the executor saves
+      precisely the chunk-boundary states the model counts;
+    * the inner recompute is count-exact: ``inner_recomputed_layers`` equals
+      ``n * n_layers`` (every chunk interior replays once, StreamBP-style
+      constant overhead — ``inner_recompute_factor == 1.0`` at every
+      budget);
+    * gradients match plain autodiff.  The model computes in bf16 and inner
+      remat regions fence XLA fusion (optimization barriers at chunk
+      boundaries reassociate bf16 sums), so the parity tolerance is
+      bf16-scale — the loss *value* must still match tightly, and the 1D
+      point must be exact.
+    """
+    from repro.analysis.jaxpr_cost import chain_step_byte_profile
+    from repro.api.chain import chain_length, index_xs
+    from repro.configs import SMOKE_SHAPE, get_config
+    from repro.configs.shapes import make_batch
+    from repro.core import perfmodel as pm
+    from repro.core.storage import tree_bytes
+    from repro.models import get_model
+
+    cfg = get_config("jamba-v0.1-52b", smoke=True).replace(n_layers=16)
+    m = get_model(cfg)
+    spec = m.train_chain
+    params = m.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, SMOKE_SHAPE)
+    carry0, xs = spec.prelude(params, batch)
+    state_bytes, layer_bytes, head_bytes = chain_step_byte_profile(
+        spec, params, carry0, index_xs(xs, 0), batch)
+    n = chain_length(xs)
+    step_1d = int(sum(layer_bytes) + head_bytes)
+
+    ref_v, ref_g = jax.value_and_grad(m.train_loss)(params, batch)
+    rows = []
+    for label, budget in (("1d", step_1d), ("half", step_1d // 2),
+                          ("quarter", step_1d // 4)):
+        expected = pm.choose_2d_plan(
+            n, t_a=1.0, t_t=0.0, s_l1=2, state_bytes=state_bytes,
+            layer_bytes=layer_bytes, budget_bytes=budget,
+            head_bytes=head_bytes, interval=2)
+        assert expected.feasible, (label, budget)
+        vg = api.value_and_grad_offloaded(
+            m.train_loss, interval=2, slots=2, step_memory_budget=budget)
+        vg(params, batch)              # warmup: trace + compile once
+        t0 = time.perf_counter()
+        v, g = vg(params, batch)
+        jax.block_until_ready((v, g))
+        wall = time.perf_counter() - t0
+
+        err = max(float(jnp.max(jnp.abs(a - b) / (1.0 + jnp.abs(b))))
+                  for a, b in zip(jax.tree_util.tree_leaves(g),
+                                  jax.tree_util.tree_leaves(ref_g)))
+        tol = 1e-6 if label == "1d" else 5e-2   # bf16 remat reassociation
+        assert err < tol, (label, err)
+        assert abs(float(v) - float(ref_v)) < \
+            1e-5 * max(1.0, abs(float(ref_v))), (label, v, ref_v)
+
+        plan = api.last_plan()
+        st = api.last_stats()
+        assert plan.inner == expected.inner, (label, plan.inner, expected)
+        inner = plan.inner
+        model_peak = int(pm.inner_boundary_bytes_model(inner, state_bytes))
+        assert st.inner_peak_bytes == model_peak, (label, st, model_peak)
+        assert st.inner_recomputed_layers == \
+            pm.inner_recomputed_layers_model(n, inner), (label, st)
+        if inner is not None:
+            assert st.inner_recompute_factor == 1.0, (label, st)
+            assert plan.plan_id.endswith(
+                f":L={inner.layer_chunks}:H={inner.head_chunks}"), plan
+        rows.append({
+            "budget_label": label,
+            "budget_bytes": budget,
+            "step_bytes_1d": step_1d,
+            "layer_chunks": 1 if inner is None else inner.layer_chunks,
+            "head_chunks": 1 if inner is None else inner.head_chunks,
+            "inner_peak_bytes": st.inner_peak_bytes,
+            "inner_peak_bytes_model": model_peak,
+            "inner_recomputed_layers": st.inner_recomputed_layers,
+            "recompute_factor_model": expected.recompute_factor,
+            "grad_rel_err": err,
+            "wall_s": wall,
+        })
+    # tighter budget -> more chunks, never fewer; peak always under budget
+    chunks = [r["layer_chunks"] for r in rows]
+    assert chunks == sorted(chunks), rows
+    for r in rows:
+        assert r["inner_peak_bytes"] <= r["budget_bytes"], r
     return rows
 
 
@@ -600,6 +710,16 @@ def main(smoke: bool = False):
     crows = capacity_sweep((96,) if smoke else (96, 192))
     _print_rows(crows)
 
+    print("\n# 2D plan budget sweep (inner peak == model, count-exact "
+          "recompute)")
+    prows = plan2d_sweep()
+    _print_rows(prows)
+    for r in prows:
+        print(f"# budget {r['budget_label']}: L={r['layer_chunks']} "
+              f"H={r['head_chunks']} peak {r['inner_peak_bytes']} "
+              f"(model {r['inner_peak_bytes_model']}) "
+              f"err {r['grad_rel_err']:.1e}")
+
     print("\n# crash-consistency tax (journaled vs plain, gradients "
           "bit-identical)")
     jrow = journal_overhead(96)
@@ -618,8 +738,8 @@ def main(smoke: bool = False):
               f" stream_bytes={r['stream_bytes']}")
 
     return {"executor": rows, "api": arows, "engine_comparison": comparison,
-            "capacity_sweep": crows, "journal_overhead": jrow,
-            "mesh_sweep": mrows}
+            "capacity_sweep": crows, "plan2d_sweep": prows,
+            "journal_overhead": jrow, "mesh_sweep": mrows}
 
 
 if __name__ == "__main__":

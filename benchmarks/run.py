@@ -45,6 +45,16 @@ def run(only=None, smoke=False, out_path=OVERHEAD_JSON, sections=None):
     section is actually selected, so one unimportable module cannot take
     down — or silently shrink — the rest of the harness.
     """
+    # The executor-engine sections dispatch nested segment jits from inside
+    # io_callbacks; with XLA's async CPU dispatch the outer program occupies
+    # the (nproc-sized) execution pool, so on few-core hosts the nested
+    # dispatch starves and the bench deadlocks.  The flag is read once, at
+    # CPU client creation, so it must be set before any section touches a
+    # backend (tests get the same treatment from conftest.py).
+    import jax
+
+    jax.config.update("jax_cpu_enable_async_dispatch", False)
+
     failures = []
     skipped = []
     payloads = {}

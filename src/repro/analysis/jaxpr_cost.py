@@ -87,18 +87,45 @@ def _conv_flops(eqn) -> float:
     return 2.0 * out * window * cin
 
 
+def _as_closed(v):
+    if isinstance(v, core.ClosedJaxpr):
+        return v
+    if isinstance(v, core.Jaxpr):
+        return core.ClosedJaxpr(v, ())
+    return None
+
+
 def _sub_jaxprs(params: Dict[str, Any]):
     for v in params.values():
-        if isinstance(v, core.ClosedJaxpr):
-            yield v
-        elif isinstance(v, core.Jaxpr):
-            yield core.ClosedJaxpr(v, ())
+        cj = _as_closed(v)
+        if cj is not None:
+            yield cj
         elif isinstance(v, (tuple, list)):
             for x in v:
-                if isinstance(x, core.ClosedJaxpr):
-                    yield x
-                elif isinstance(x, core.Jaxpr):
-                    yield core.ClosedJaxpr(x, ())
+                cj = _as_closed(x)
+                if cj is not None:
+                    yield cj
+        elif isinstance(v, dict):
+            # custom-call style params sometimes tuck bodies inside dicts
+            for x in v.values():
+                cj = _as_closed(x)
+                if cj is not None:
+                    yield cj
+
+
+def _pallas_trips(eqn) -> float:
+    """Grid trip count of a ``pallas_call`` — the kernel body executes once
+    per grid point, so its cost must be multiplied accordingly."""
+    gm = eqn.params.get("grid_mapping")
+    grid = getattr(gm, "grid", ()) if gm is not None else ()
+    trips = 1.0
+    for g in grid:
+        try:
+            trips *= float(g)
+        except (TypeError, ValueError):
+            # symbolic / dynamic grid axis — count it once (lower bound)
+            pass
+    return max(trips, 1.0)
 
 
 def jaxpr_cost(cj: core.ClosedJaxpr) -> Cost:
@@ -124,6 +151,17 @@ def jaxpr_cost(cj: core.ClosedJaxpr) -> Cost:
             branches = eqn.params["branches"]
             costs = [jaxpr_cost(b) for b in branches]
             total = total + max(costs, key=lambda c: c.flops)
+            continue
+        if name == "pallas_call":
+            # The kernel body runs once per grid point; counting it once
+            # (what the generic sub-jaxpr walk would do) under-reports any
+            # gridded kernel by the full trip count.
+            trips = _pallas_trips(eqn)
+            for s in _sub_jaxprs(eqn.params):
+                total = total + jaxpr_cost(s) * trips
+            for ov in eqn.outvars:
+                total.bytes += 2.0 * _nbytes(ov)
+                total.bytes_major += 2.0 * _nbytes(ov)
             continue
         subs = list(_sub_jaxprs(eqn.params))
         if subs:
@@ -157,6 +195,63 @@ def jaxpr_cost(cj: core.ClosedJaxpr) -> Cost:
             total.flops += out_n
             total.bytes += 2.0 * out_b
     return total
+
+
+def _tree_sds(tree):
+    """Shape/dtype stand-ins for a pytree — the arguments may be tracers
+    (trace-time planning) or concrete arrays; only shapes matter here."""
+    import numpy as np
+
+    def sds(leaf):
+        dt = getattr(leaf, "dtype", None)
+        if dt is None:
+            dt = np.asarray(leaf).dtype
+        return jax.ShapeDtypeStruct(np.shape(leaf), dt)
+
+    return jax.tree_util.tree_map(sds, tree)
+
+
+def _tree_aval_bytes(tree) -> int:
+    import numpy as np
+
+    return int(sum(
+        int(np.prod(np.shape(leaf), dtype=np.int64))
+        * np.dtype(getattr(leaf, "dtype", None) or np.asarray(leaf).dtype
+                   ).itemsize
+        for leaf in jax.tree_util.tree_leaves(tree)))
+
+
+def chain_step_byte_profile(spec, params, carry0, x0, batch):
+    """Per-step byte profile of a 2D-plannable chain: what the Gruslys-style
+    inner DP (``schedule.gruslys_split`` via ``perfmodel.choose_2d_plan``)
+    allocates against.
+
+    Returns ``(state_bytes, layer_bytes, head_bytes)``:
+
+    * ``state_bytes`` — one carry (an inner chunk-boundary state);
+    * ``layer_bytes[j]`` — materialization-model bytes of one
+      ``spec.layer_body(..., j)`` application (the activations that go live
+      when layer ``j``'s chunk is rematerialised);
+    * ``head_bytes`` — the ``spec.readout`` head's bytes (what head
+      chunking divides).
+
+    Shapes only: every argument may be a tracer — each layer is traced once
+    on ShapeDtypeStruct stand-ins and the carry's shapes are threaded
+    through ``jax.eval_shape``, so no FLOP executes.
+    """
+    p, c, x, b = (_tree_sds(t) for t in (params, carry0, x0, batch))
+    state_bytes = _tree_aval_bytes(carry0)
+    layer_bytes = []
+    for j in range(spec.n_layers):
+        def f(pp, cc, xx, bb, j=j):
+            return spec.layer_body(pp, cc, xx, bb, j)
+
+        layer_bytes.append(float(jaxpr_cost(jax.make_jaxpr(f)(p, c, x, b)
+                                            ).bytes))
+        c = _tree_sds(jax.eval_shape(f, p, c, x, b))
+    head_bytes = float(jaxpr_cost(jax.make_jaxpr(spec.readout)(p, c, b)
+                                  ).bytes)
+    return state_bytes, tuple(layer_bytes), head_bytes
 
 
 def cost_of_fn(fn, *args, **kwargs) -> Cost:

@@ -29,11 +29,14 @@ from repro.api.frontend import (ENGINES, STORAGE_KINDS, STRATEGIES,
                                 offloaded_loss, resume_offloaded,
                                 value_and_grad_offloaded)
 from repro.core.faults import StorageFault  # typed Level-2 failure root
+from repro.core.perfmodel import Plan2D, choose_2d_plan
+from repro.core.schedule import InnerPlan
 
 __all__ = [
     "AutoTuner", "GLOBAL_TUNER", "TuneResult",
     "ChainSpec", "chain_length",
     "ENGINES", "STORAGE_KINDS", "STRATEGIES",
+    "InnerPlan", "Plan2D", "choose_2d_plan",
     "OffloadConfig", "StorageFault", "checkpointed_bptt", "last_plan",
     "last_stats", "last_tune",
     "offloaded_loss", "resume_offloaded", "value_and_grad_offloaded",

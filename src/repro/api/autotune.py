@@ -429,6 +429,26 @@ class AutoTuner:
             interval=interval, slots=slots, t_a=st.t_a, t_t=st.t_t,
             state_bytes=state_bytes, n=n, source="roofline"))
 
+    def plan_2d(self, tune: TuneResult, *, n: int, state_bytes: float,
+                layer_bytes, budget_bytes: float, head_bytes: float = 0.0):
+        """Pick 1D vs 2D for a measured schedule under a per-step budget.
+
+        Couples a :meth:`measure` result (the outer axis: §3's interval
+        from real ``T_A``/``T_T``) to the 2D overhead model
+        (``perfmodel.choose_2d_plan``): ``layer_bytes``/``head_bytes`` are
+        the chain's per-step byte profile
+        (``analysis.jaxpr_cost.chain_step_byte_profile``), and the returned
+        ``Plan2D`` carries the chosen inner axis (``.inner is None`` when
+        time-only segmentation already fits), the modeled per-step peak and
+        the combined recompute factor of both axes."""
+        from repro.core import perfmodel as pm
+
+        return pm.choose_2d_plan(
+            n, t_a=tune.t_a, t_t=tune.t_t, s_l1=tune.slots,
+            state_bytes=state_bytes, layer_bytes=layer_bytes,
+            budget_bytes=budget_bytes, head_bytes=head_bytes,
+            interval=tune.interval)
+
     def manual(self, name: str, *, n: int, interval: int,
                slots: Optional[int] = None,
                state_bytes: int = 0) -> TuneResult:

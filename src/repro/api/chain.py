@@ -21,7 +21,7 @@ autodiff, so stacked-layer gradients scatter back into ``params`` for free.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import numpy as np
@@ -33,6 +33,10 @@ Batch = Any
 PreludeFn = Callable[[Params, Batch], Tuple[Carry, Any]]
 BodyFn = Callable[[Params, Carry, Any, Batch], Carry]
 ReadoutFn = Callable[[Params, Carry, Batch], Any]
+# 2D plans: one per-step layer application (j is a static Python int) and a
+# readout whose logits/loss head is evaluated in ``head_chunks`` pieces.
+LayerBodyFn = Callable[[Params, Carry, Any, Batch, int], Carry]
+ChunkedReadoutFn = Callable[[Params, Carry, Batch, int], Any]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +62,21 @@ class ChainSpec:
     body: BodyFn
     readout: ReadoutFn
     name: str = "chain"
+    # Optional per-step layer substructure — what makes the chain 2D-plannable
+    # (``OffloadConfig(step_memory_budget=...)``).  Contract:
+    # ``layer_body(params, carry, x, batch, j)`` applies the step's ``j``-th
+    # layer (``j`` a static int in ``range(n_layers)``) and composing
+    # ``j = 0 .. n_layers-1`` must equal one ``body`` application exactly.
+    # ``readout_chunked(params, carry, batch, head_chunks)`` must equal
+    # ``readout`` at ``head_chunks == 1``.
+    layer_body: Optional[LayerBodyFn] = None
+    n_layers: int = 0
+    readout_chunked: Optional[ChunkedReadoutFn] = None
+
+    @property
+    def supports_2d(self) -> bool:
+        """Whether a 2D (time x layer) plan can execute this chain."""
+        return self.layer_body is not None and self.n_layers >= 1
 
     def loss_fn(self) -> Callable[[Params, Batch], Any]:
         """The undecomposed loss — reference semantics for the front-end

@@ -58,7 +58,7 @@ from repro.api.chain import (ChainSpec, chain_length, combine, diff_mask,
 from repro.core import offload as ofl
 from repro.core import schedule as ms
 from repro.core.compiled_ops import (CompiledChainOps, CompiledSegmentRunner,
-                                     PallasSegmentRunner)
+                                     PallasSegmentRunner, inner_chunked_body)
 from repro.core.executor import CheckpointExecutor, ExecutionStats
 from repro.core.multistage_scan import multistage_scan
 from repro.core.storage import AsyncTransferEngine, make_backend
@@ -94,6 +94,13 @@ class OffloadConfig:
     state_spec: Optional[Any] = None  # PartitionSpec of the boundary carry
     #                                   (None -> derive: batch axes over the
     #                                   mesh's data axes when divisible)
+    step_memory_budget: Optional[int] = None  # per-step reverse-peak budget
+    #                                   (bytes): when one step's activations
+    #                                   exceed it, the planner goes 2D —
+    #                                   inner layer/head chunks chosen by
+    #                                   perfmodel.choose_2d_plan
+    plan_2d: Optional[Tuple[int, int]] = None  # pin the inner axis instead:
+    #                                   (layer_chunks, head_chunks)
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:
@@ -147,6 +154,37 @@ class OffloadConfig:
                 raise ValueError(
                     "runner='pallas' drives a single device's DMA engine; "
                     "sharded Level-2 streams (mesh=) need runner='compiled'")
+        if self.step_memory_budget is not None:
+            if self.plan_2d is not None:
+                raise ValueError(
+                    "pass either step_memory_budget= (the planner chooses "
+                    "the inner axis) or plan_2d= (pin it), not both")
+            if self.step_memory_budget <= 0:
+                raise ValueError(
+                    "step_memory_budget must be a positive byte count, got "
+                    f"{self.step_memory_budget}")
+        if self.plan_2d is not None:
+            if len(self.plan_2d) != 2 or any(
+                    int(c) < 1 for c in self.plan_2d):
+                raise ValueError(
+                    "plan_2d must be (layer_chunks, head_chunks) with both "
+                    f">= 1, got {self.plan_2d!r}")
+        if self.step_memory_budget is not None or self.plan_2d is not None:
+            if self.strategy != "multistage_async":
+                raise ValueError(
+                    "2D plans (step_memory_budget=/plan_2d=) chunk the "
+                    "multistage_async reverse sweep's per-step work; "
+                    f"strategy={self.strategy!r} has no such sweep")
+            if self.engine != "compiled":
+                raise ValueError(
+                    "2D plans execute in the compiled engine's segment "
+                    f"runner; engine={self.engine!r} cannot run the inner "
+                    "axis")
+            if self.runner == "pallas":
+                raise ValueError(
+                    "runner='pallas' fuses the plain step body into its "
+                    "kernel; the inner remat regions of a 2D plan need "
+                    "runner='compiled'")
         if self.engine == "scan":
             if self.strategy != "multistage_async":
                 raise ValueError(
@@ -173,6 +211,7 @@ class _Static:
     cfg: OffloadConfig
     xs_treedef: Any
     xs_mask: Tuple[bool, ...]
+    inner: Optional[ms.InnerPlan] = None  # 2D plans: the resolved inner axis
 
 
 # ---------------------------------------------------------------------------
@@ -322,9 +361,18 @@ class _Ops:
     over this class *is* the compile cache — a second transform over the same
     spec reuses every compiled segment."""
 
-    def __init__(self, spec: ChainSpec, xs_treedef, xs_mask):
+    def __init__(self, spec: ChainSpec, xs_treedef, xs_mask,
+                 inner: Optional[ms.InnerPlan] = None):
         self.spec = spec
-        self.cops = CompiledChainOps(spec.body, xs_treedef, xs_mask)
+        rbody = None
+        if inner is not None:
+            # 2D plan: the reverse sweep differentiates through the
+            # inner-chunked body (primal-identical — remat regions only
+            # change what the backward keeps live), the forward advance
+            # keeps the plain body for maximal fusion.
+            rbody = inner_chunked_body(spec.layer_body, inner)
+        self.cops = CompiledChainOps(spec.body, xs_treedef, xs_mask,
+                                     reverse_body=rbody)
 
         @jax.jit
         def fwd(params, state, x, batch):
@@ -361,8 +409,73 @@ class _Ops:
 
 
 @functools.lru_cache(maxsize=128)
-def _get_ops(spec: ChainSpec, xs_treedef, xs_mask) -> _Ops:
-    return _Ops(spec, xs_treedef, xs_mask)
+def _get_ops(spec: ChainSpec, xs_treedef, xs_mask,
+             inner: Optional[ms.InnerPlan] = None) -> _Ops:
+    return _Ops(spec, xs_treedef, xs_mask, inner)
+
+
+# ---------------------------------------------------------------------------
+# 2D plans: trace-time inner-axis resolution
+# ---------------------------------------------------------------------------
+
+# The inner axis must be known when the loss is *traced* (the chunked
+# readout and the inner-chunked reverse body are part of the traced
+# computation), and it is a pure function of shapes — memory feasibility
+# does not depend on the measured (T_A, T_T) the way the outer interval
+# does.  Cached per (spec, budget, input shapes) so repeated gradient
+# calls re-trace nothing.
+_INNER_CACHE: Dict[Tuple, Optional[ms.InnerPlan]] = {}
+
+
+def _shape_signature(*trees) -> Tuple:
+    return tuple(
+        (str(np.shape(leaf)), str(_dtype_of(leaf)))
+        for tree in trees for leaf in jax.tree_util.tree_leaves(tree))
+
+
+def _resolve_inner(spec: ChainSpec, cfg: OffloadConfig, params, carry0, xs,
+                   batch) -> Optional[ms.InnerPlan]:
+    """The inner (per-step) axis of the plan, or ``None`` for 1D.
+
+    ``cfg.plan_2d`` pins it; ``cfg.step_memory_budget`` derives it from the
+    chain's real per-layer byte profile (``analysis.jaxpr_cost``) through
+    the Gruslys-style DP (``perfmodel.choose_2d_plan``).  Raises when the
+    budget is infeasible, naming the smallest budget that would work."""
+    if cfg.plan_2d is None and cfg.step_memory_budget is None:
+        return None
+    if not spec.supports_2d:
+        raise ValueError(
+            f"chain {spec.name!r} has no per-step layer decomposition — 2D "
+            "plans (step_memory_budget=/plan_2d=) need "
+            "ChainSpec.layer_body/n_layers (and readout_chunked for head "
+            "chunking)")
+    if cfg.plan_2d is not None:
+        lc, hc = cfg.plan_2d
+        return ms.InnerPlan(n_layers=spec.n_layers, layer_chunks=int(lc),
+                            head_chunks=int(hc))
+    key = (spec, cfg.step_memory_budget,
+           _shape_signature(params, carry0, xs, batch))
+    if key not in _INNER_CACHE:
+        from repro.analysis.jaxpr_cost import chain_step_byte_profile
+        from repro.core import perfmodel as pm
+
+        state_bytes, layer_bytes, head_bytes = chain_step_byte_profile(
+            spec, params, carry0, index_xs(xs, 0), batch)
+        plan2d = pm.choose_2d_plan(
+            chain_length(xs), t_a=1.0, t_t=0.0,
+            s_l1=cfg.slots if cfg.slots is not None else 16,
+            state_bytes=state_bytes, layer_bytes=layer_bytes,
+            budget_bytes=cfg.step_memory_budget, head_bytes=head_bytes,
+            interval=cfg.interval if cfg.interval is not None else 1)
+        if not plan2d.feasible:
+            need = int(np.ceil(plan2d.min_budget_bytes))
+            raise ValueError(
+                f"step_memory_budget={cfg.step_memory_budget} is infeasible "
+                f"for chain {spec.name!r}: even layer_chunks="
+                f"{spec.n_layers} peaks above it; the smallest feasible "
+                f"budget is {need} bytes")
+        _INNER_CACHE[key] = plan2d.inner
+    return _INNER_CACHE[key]
 
 
 # ---------------------------------------------------------------------------
@@ -549,7 +662,7 @@ def _input_fingerprint(*trees) -> str:
 
 def _fwd_callback(static: _Static, params, carry0, xs, batch):
     spec, cfg = static.spec, static.cfg
-    ops = _get_ops(spec, static.xs_treedef, static.xs_mask)
+    ops = _get_ops(spec, static.xs_treedef, static.xs_mask, static.inner)
     n = chain_length(xs)
     handle = next(_HANDLES)
 
@@ -608,10 +721,12 @@ def _fwd_callback(static: _Static, params, carry0, xs, batch):
                                                  batch, s_l1=tune.slots)
                 else:
                     runner = CompiledSegmentRunner(ops.cops, params, xs,
-                                                   batch, s_l1=tune.slots)
+                                                   batch, s_l1=tune.slots,
+                                                   inner=static.inner)
             x_n, run = ex.multistage_forward(
                 carry0, n, interval=tune.interval, s_l1=tune.slots,
                 engine=engine, runner=runner, resume_from=recovered,
+                inner=static.inner,
                 run_meta={"fingerprint": fingerprint}
                 if fingerprint is not None else None)
         except BaseException:
@@ -650,7 +765,7 @@ def _fwd_callback(static: _Static, params, carry0, xs, batch):
 def _bwd_callback(static: _Static, handle, params, carry0, xs, batch, dcarry):
     spec = static.spec
     rec = _pop_run(int(handle))
-    ops = _get_ops(spec, static.xs_treedef, static.xs_mask)
+    ops = _get_ops(spec, static.xs_treedef, static.xs_mask, static.inner)
     n = chain_length(xs)
     if static.cfg.mesh is not None:
         # the reverse sweep reassembles boundaries under their recorded
@@ -866,8 +981,17 @@ def offloaded_loss(spec: ChainSpec, cfg: OffloadConfig
     def loss(params, batch):
         carry0, xs = spec.prelude(params, batch)
         treedef, mask = diff_mask(xs)
-        static = _Static(spec=spec, cfg=cfg, xs_treedef=treedef, xs_mask=mask)
+        inner = _resolve_inner(spec, cfg, params, carry0, xs, batch)
+        static = _Static(spec=spec, cfg=cfg, xs_treedef=treedef,
+                         xs_mask=mask, inner=inner)
         carry_n = _chain(static, params, carry0, xs, batch)
+        if inner is not None and inner.head_chunks > 1:
+            if spec.readout_chunked is None:
+                raise ValueError(
+                    f"2D plan wants head_chunks={inner.head_chunks} but "
+                    f"chain {spec.name!r} has no readout_chunked")
+            return spec.readout_chunked(params, carry_n, batch,
+                                        inner.head_chunks)
         return spec.readout(params, carry_n, batch)
 
     return loss
@@ -892,6 +1016,8 @@ def value_and_grad_offloaded(
     runner: str = "compiled",
     mesh: Optional[Any] = None,
     state_spec: Optional[Any] = None,
+    step_memory_budget: Optional[int] = None,
+    plan_2d: Optional[Tuple[int, int]] = None,
 ) -> Callable[[Any, Any], Tuple[Any, Any]]:
     """Drop-in ``jax.value_and_grad`` with multistage-offloaded backprop.
 
@@ -970,6 +1096,24 @@ def value_and_grad_offloaded(
     (``last_tune().t_t_global``, ``.shard_streams``); per-stream traffic
     shows up in ``last_stats().l2_stream_bytes``.
 
+    ``step_memory_budget`` (compiled engine + runner only) bounds the
+    *per-step* reverse peak in bytes and makes the planner two-dimensional:
+    when one chain step's own activations exceed the budget — deep per-step
+    layer stacks, or a logits/loss head larger than everything else — the
+    step itself is chunked.  The chain's real per-layer byte profile
+    (``analysis.jaxpr_cost``) feeds a Gruslys-style DP
+    (``perfmodel.choose_2d_plan``) that picks the fewest rematted layer
+    sub-ranges (and logits/loss head chunks) that fit; the outer interval
+    stays the tuner's §3 optimum.  Needs a chain with a layer
+    decomposition (``ChainSpec.layer_body``/``n_layers`` — the model
+    factories attach these); an infeasible budget raises, naming the
+    smallest feasible one.  ``plan_2d=(layer_chunks, head_chunks)`` pins
+    the inner axis instead.  ``api.last_plan()`` reports both axes
+    (``plan.inner``), ``api.last_stats()`` the per-axis recompute and peak
+    counters (``inner_recomputed_layers``, ``inner_peak_bytes``).
+    Gradients stay bit-identical to the 1D plan's (fp32): inner chunking
+    only changes *when* interiors are recomputed, never what is computed.
+
     Example — a tiny chain, pinned schedule, gradients match autodiff:
 
     >>> import jax, jax.numpy as jnp, numpy as np
@@ -1008,7 +1152,10 @@ def value_and_grad_offloaded(
                         journal_repair=journal_repair,
                         autotune=autotune, tuner_id=_register_tuner(tuner),
                         engine=engine, runner=runner,
-                        mesh=mesh, state_spec=state_spec)
+                        mesh=mesh, state_spec=state_spec,
+                        step_memory_budget=step_memory_budget,
+                        plan_2d=tuple(plan_2d) if plan_2d is not None
+                        else None)
     vg = jax.value_and_grad(offloaded_loss(spec, cfg))
     vg.chain_spec = spec
     vg.offload_config = cfg

@@ -40,12 +40,41 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.schedule import SegmentSpec, chunk_length
+from repro.core.schedule import InnerPlan, SegmentSpec, chunk_length
 
 __all__ = ["CompiledChainOps", "CompiledSegmentRunner",
-           "PallasSegmentRunner", "chunk_length"]
+           "PallasSegmentRunner", "chunk_length", "inner_chunked_body"]
 
 tree_map = jax.tree_util.tree_map
+
+
+def inner_chunked_body(layer_body, inner: InnerPlan):
+    """Build a chain-step body that executes the per-step layer stack in the
+    2D plan's inner sub-ranges, each under ``jax.checkpoint``.
+
+    ``layer_body(params, carry, x, batch, j)`` is the
+    :class:`~repro.api.chain.ChainSpec` per-layer contract; composing
+    ``j = 0 .. n_layers-1`` equals one plain ``body`` application, so the
+    returned function is primal-identical to the 1D body — remat only
+    changes *when* interiors are computed.  During the segment vjp only the
+    ``layer_chunks`` sub-range entry states are saved per step; each chunk
+    interior is rematerialised exactly once when the step is backwarded
+    (StreamBP-style exact chunking, constant overhead).
+    """
+    ranges = inner.chunk_ranges()
+
+    def body(params, carry, x, batch):
+        for lo, hi in ranges:
+            def chunk_fn(p, c, x_, lo=lo, hi=hi):
+                for j in range(lo, hi):
+                    c = layer_body(p, c, x_, batch, j)
+                return c
+
+            carry = jax.checkpoint(chunk_fn, prevent_cse=False)(
+                params, carry, x)
+        return carry
+
+    return body
 
 
 class CompiledChainOps:
@@ -60,8 +89,14 @@ class CompiledChainOps:
     and reuse it across runs (``repro.api.frontend`` holds them in an LRU).
     """
 
-    def __init__(self, body, xs_treedef, xs_mask: Tuple[bool, ...]):
+    def __init__(self, body, xs_treedef, xs_mask: Tuple[bool, ...],
+                 reverse_body=None):
         self.body = body
+        # 2D plans reverse through an inner-chunked body
+        # (:func:`inner_chunked_body`) — primal-identical to ``body``, so
+        # the forward advance keeps the plain (fusion-friendliest) one.
+        self.reverse_body = body if reverse_body is None else reverse_body
+        rbody = self.reverse_body
         self.xs_treedef = xs_treedef
         self.xs_mask = tuple(xs_mask)
         self.advance_traces = 0
@@ -93,7 +128,7 @@ class CompiledChainOps:
             def seg(p, c, xd_):
                 def step(c_, x):
                     xd_k, xnd_k = x
-                    return body(p, c_, _combine(xd_k, xnd_k), batch), None
+                    return rbody(p, c_, _combine(xd_k, xnd_k), batch), None
 
                 xs = (tuple(xd_), tuple(xnd))
                 if chunk is None or chunk >= seg_len:
@@ -165,12 +200,13 @@ class CompiledSegmentRunner:
     """
 
     def __init__(self, ops: CompiledChainOps, params, xs, batch, *,
-                 s_l1: int):
+                 s_l1: int, inner: "InnerPlan | None" = None):
         self.ops = ops
         self.params = params
         self.xs = xs
         self.batch = batch
         self.s_l1 = s_l1
+        self.inner = inner
         self.dx_segments: Dict[int, List[Any]] = {}
 
     def _slice(self, seg: SegmentSpec):
@@ -205,6 +241,16 @@ class CompiledSegmentRunner:
         stats.advances += replay
         stats.backwards += seg.length
         stats.host_dispatches += 1
+        if self.inner is not None:
+            # inner-axis accounting: each backwarded step remats its whole
+            # layer stack once, saving layer_chunks sub-range entry states
+            # (the entry state is the same pytree as the carry, measured
+            # from the actual boundary arrays in hand)
+            from repro.core.storage import tree_bytes
+            stats.inner_recomputed_layers += \
+                seg.length * self.inner.n_layers
+            bnd = self.inner.layer_chunks * tree_bytes(x_b)
+            stats.inner_peak_bytes = max(stats.inner_peak_bytes, bnd)
         return dc, gacc
 
     def collect_dx(self, plan) -> List[Any]:

@@ -104,6 +104,13 @@ class ExecutionStats:
     fused_segments: int = 0      # pallas runner: segments run as fused kernels
     fused_boundary_copies: int = 0  # pallas runner: DMA boundary copies
     #                                 overlapped with in-kernel compute
+    # -- 2D (time x layer) plans: inner-axis counters ----------------------
+    inner_layer_chunks: int = 0  # rematted layer sub-ranges per step (0 = 1D)
+    inner_head_chunks: int = 0   # chunked logits/loss head chunks (0 = 1D)
+    inner_layers: int = 0        # layer applications per chain step
+    inner_recomputed_layers: int = 0  # layer applications replayed by the
+    #                                   inner remat during the reverse sweep
+    inner_peak_bytes: int = 0    # per-step saved inner-boundary high-water
     store_stall_s: float = 0.0
     prefetch_stall_s: float = 0.0
     wall_s: float = 0.0
@@ -111,6 +118,13 @@ class ExecutionStats:
     @property
     def recompute_factor(self) -> float:
         return self.advances / max(1, self.n - 1)
+
+    @property
+    def inner_recompute_factor(self) -> float:
+        """Extra forwards of the per-step layer stack per chain step
+        (0.0 for a 1D plan, 1.0 for the exact inner chunking)."""
+        denom = self.n * self.inner_layers
+        return self.inner_recomputed_layers / denom if denom else 0.0
 
 
 class _L1Slots:
@@ -360,6 +374,7 @@ class CheckpointExecutor:
                            runner: Any = None,
                            resume_from: Optional[RecoveredRun] = None,
                            run_meta: Optional[Dict[str, Any]] = None,
+                           inner: Any = None,
                            ) -> "tuple[Any, MultistageRun]":
         """Phase 1 of the split multistage API: advance the chain to ``x_n``
         while the engine asynchronously streams every ``interval``-th state to
@@ -394,7 +409,11 @@ class CheckpointExecutor:
             engine = AsyncTransferEngine(RAMStorage())
         stats = ExecutionStats(n=n)
         slots = _L1Slots(stats)
-        plan = ms.segment_plan(n, interval, s_l1)
+        plan = ms.segment_plan(n, interval, s_l1, inner=inner)
+        if inner is not None:
+            stats.inner_layer_chunks = inner.layer_chunks
+            stats.inner_head_chunks = inner.head_chunks
+            stats.inner_layers = inner.n_layers
         jb = _journal_backend(engine)
         run = MultistageRun(n=n, interval=interval, s_l1=s_l1, engine=engine,
                             stats=stats, slots=slots, plan=plan,

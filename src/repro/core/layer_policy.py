@@ -29,10 +29,24 @@ from repro.core import offload as ofl
 LayerFn = Callable[[Any, Any, Any], Any]  # (layer_params, x, extras) -> x
 
 
+def validate_policy_name(policy_name: str) -> None:
+    """Raise ``ValueError`` listing the registry for an unknown policy.
+
+    Called eagerly at every combinator entry point so a typo fails at call
+    time with the full menu, not deep inside a trace."""
+    known = ("none", *ofl.policy_names())
+    if policy_name not in known:
+        raise ValueError(
+            f"unknown layer policy {policy_name!r}; known policies: "
+            f"{list(known)}"
+        )
+
+
 def remat_layer(layer_fn: Callable, policy_name: str = "offload_layer",
                 tag_input: bool = True) -> Callable:
     """Wrap ``layer_fn(params, x, *extras) -> x`` in a remat region whose
     input activation is tagged ``LAYER_INPUT`` (the offloaded state)."""
+    validate_policy_name(policy_name)
     if policy_name == "none":
         return layer_fn
 
@@ -64,6 +78,7 @@ def scan_layers(
     boundary lives in HBM or host memory, and XLA turns host placements into
     asynchronous DMA transfers overlapped with compute.
     """
+    validate_policy_name(policy_name)
     wrapped = remat_layer(layer_fn, policy_name)
 
     def body(carry, lp):
@@ -84,6 +99,7 @@ def scan_layers_collect(
 ) -> Tuple[Any, Any]:
     """Like ``scan_layers`` but the layer returns ``(x, aux)`` and the stacked
     aux is returned (used for MoE balance losses, per-layer KV caches)."""
+    validate_policy_name(policy_name)
     wrapped = remat_layer(layer_fn, policy_name)
 
     def body(carry, lp):

@@ -246,6 +246,135 @@ def mesh_axis_transfer_times(state_bytes: float, mesh_shape: dict,
 
 
 # ---------------------------------------------------------------------------
+# 2D (time x layer) plan model
+# ---------------------------------------------------------------------------
+#
+# The outer axis bounds how many *steps'* states are live; when a single
+# step's own activations exceed the per-step budget (deep per-step layer
+# stacks, huge logits/loss heads — the regime ROADMAP's StreamBP x Gruslys
+# item names), the step must be chunked too.  ``choose_2d_plan`` decides
+# 1D-vs-2D from real per-layer costs (``analysis.jaxpr_cost``), allocates
+# inner slots with the Gruslys-style DP (``schedule.gruslys_split``) and
+# models both the recompute factor and the per-step peak as functions of
+# both axes; the bench asserts the executor's counters match count-exactly.
+
+
+def inner_boundary_bytes_model(inner, state_bytes: float) -> float:
+    """Saved inner sub-range entry states while one step is backwarded:
+    ``layer_chunks * state_bytes`` (0 for a 1D plan).  This is the
+    measurable half of the per-step peak — the executor counts exactly the
+    boundary saves it dispatches."""
+    if inner is None:
+        return 0.0
+    return inner.layer_chunks * float(state_bytes)
+
+
+def inner_peak_bytes_model(inner, layer_bytes, state_bytes: float) -> float:
+    """Modeled reverse-time per-step peak of a 2D plan: the saved sub-range
+    boundaries plus the largest chunk's activations (the chunk being
+    rematerialised).  For a 1D plan (``inner is None``) the whole step's
+    activations are live at once."""
+    vals = tuple(float(b) for b in layer_bytes)
+    if inner is None:
+        return sum(vals)
+    peak = inner_boundary_bytes_model(inner, state_bytes)
+    worst = max(sum(vals[lo:hi]) for lo, hi in inner.chunk_ranges())
+    return peak + worst
+
+
+def inner_recomputed_layers_model(n: int, inner) -> int:
+    """Count-exact model of the inner axis's recompute: every chunk interior
+    replays exactly once when its step is backwarded, so a full reverse
+    sweep re-runs ``n * n_layers`` layer applications (0 for 1D)."""
+    if inner is None:
+        return 0
+    return int(n) * int(inner.n_layers)
+
+
+def recompute_factor_2d(n: int, interval: int, s_l1: int, inner) -> float:
+    """Combined recompute factor of a 2D plan, in the physical
+    (``multistage_recompute_factor``) convention: the outer factor plus one
+    extra forward of every step's layer stack for the inner remat —
+    independent of ``layer_chunks`` (exact chunking, constant overhead,
+    StreamBP-style)."""
+    from repro.core.schedule import multistage_recompute_factor
+    base = multistage_recompute_factor(n, interval, s_l1)
+    if inner is None:
+        return base
+    return base + n / max(1, n - 1)
+
+
+@dataclass(frozen=True)
+class Plan2D:
+    """Outcome of the 1D-vs-2D decision for one chain under a per-step
+    budget.  ``inner is None`` means time-only segmentation suffices."""
+
+    interval: int
+    inner: object                  # Optional[schedule.InnerPlan]
+    step_bytes_1d: float           # one step's activations, unchunked
+    step_peak_bytes: float         # modeled per-step reverse peak (chosen plan)
+    inner_boundary_bytes: float    # measurable: saved inner boundaries
+    recompute_factor: float        # both axes, physical convention
+    feasible: bool
+    min_budget_bytes: float        # smallest budget any inner split satisfies
+
+    @property
+    def is_2d(self) -> bool:
+        return self.inner is not None
+
+
+def choose_2d_plan(n: int, *, t_a: float, t_t: float, s_l1: int,
+                   state_bytes: float, layer_bytes,
+                   budget_bytes: float, head_bytes: float = 0.0,
+                   interval: "int | None" = None) -> Plan2D:
+    """Pick 1D vs 2D for an ``n``-step chain under ``budget_bytes`` of
+    per-step memory.
+
+    The outer interval stays §3's ``I = ceil(T_T/T_A)`` (outer boundaries
+    live in Level 2; the budget constrains the *per-step* reverse peak, not
+    the boundary count).  If one step's unchunked activations
+    (``sum(layer_bytes) + head_bytes``) fit the budget, the answer is 1D.
+    Otherwise the Gruslys-style DP (:func:`~repro.core.schedule.gruslys_split`)
+    finds the fewest layer sub-ranges whose peak fits, and the logits/loss
+    head is split into the fewest sequence chunks that fit.  ``feasible`` is
+    False when even ``layer_chunks == n_layers`` overflows;
+    ``min_budget_bytes`` then names the smallest budget that would work
+    (what the launcher error reports).
+    """
+    from repro.core import schedule as sched
+    if interval is None:
+        interval = optimal_interval(t_t, t_a)
+    vals = tuple(float(b) for b in layer_bytes)
+    step_1d = sum(vals) + float(head_bytes)
+    min_budget = sched.min_step_budget_bytes(vals, state_bytes)
+    if step_1d <= budget_bytes:
+        return Plan2D(interval=interval, inner=None, step_bytes_1d=step_1d,
+                      step_peak_bytes=step_1d, inner_boundary_bytes=0.0,
+                      recompute_factor=recompute_factor_2d(
+                          n, interval, s_l1, None),
+                      feasible=True, min_budget_bytes=min_budget)
+    inner = sched.gruslys_split(vals, budget_bytes, state_bytes)
+    if inner is None:
+        return Plan2D(interval=interval, inner=None, step_bytes_1d=step_1d,
+                      step_peak_bytes=step_1d, inner_boundary_bytes=0.0,
+                      recompute_factor=recompute_factor_2d(
+                          n, interval, s_l1, None),
+                      feasible=False, min_budget_bytes=min_budget)
+    if head_bytes > 0 and budget_bytes > 0:
+        head_chunks = max(1, math.ceil(float(head_bytes) / budget_bytes))
+        if head_chunks > 1:
+            inner = sched.InnerPlan(
+                n_layers=inner.n_layers, layer_chunks=inner.layer_chunks,
+                head_chunks=head_chunks, boundaries=inner.boundaries)
+    return Plan2D(
+        interval=interval, inner=inner, step_bytes_1d=step_1d,
+        step_peak_bytes=inner_peak_bytes_model(inner, vals, state_bytes),
+        inner_boundary_bytes=inner_boundary_bytes_model(inner, state_bytes),
+        recompute_factor=recompute_factor_2d(n, interval, s_l1, inner),
+        feasible=True, min_budget_bytes=min_budget)
+
+
+# ---------------------------------------------------------------------------
 # Coupling to the roofline terms of a compiled program
 # ---------------------------------------------------------------------------
 

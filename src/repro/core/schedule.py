@@ -48,6 +48,144 @@ def chunk_length(seg_len: int, s_l1: int) -> Optional[int]:
     return math.ceil(seg_len / s_l1)
 
 
+# ---------------------------------------------------------------------------
+# Inner (per-step) axis — the second dimension of a 2D plan
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class InnerPlan:
+    """Inner axis of a 2D plan: how one chain step's own computation is
+    chunked during the reverse sweep.
+
+    The outer axis (segments + Revolve) bounds how many *steps'* states are
+    live; when a *single step's* activations exceed the budget — deep layer
+    stacks per step, or a huge logits/loss head — the step itself must be
+    chunked.  ``layer_chunks`` sub-ranges of the per-step layer stack are
+    each wrapped in a remat region (only the ``layer_chunks`` sub-range
+    entry states are saved; interiors are recomputed once during the step's
+    backward, StreamBP-style exact chunking), and the logits/loss head is
+    evaluated in ``head_chunks`` sequence chunks so the full logits tensor
+    never materialises.
+
+    ``boundaries`` are the chunk *start* layer indices chosen by the
+    Gruslys-style DP (:func:`gruslys_split`): strictly increasing, first
+    element 0, length ``layer_chunks``.
+    """
+
+    n_layers: int
+    layer_chunks: int
+    head_chunks: int = 1
+    boundaries: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if self.n_layers < 1:
+            raise ValueError(f"need n_layers >= 1, got {self.n_layers}")
+        if not 1 <= self.layer_chunks <= self.n_layers:
+            raise ValueError(
+                f"need 1 <= layer_chunks <= n_layers ({self.n_layers}), "
+                f"got {self.layer_chunks}")
+        if self.head_chunks < 1:
+            raise ValueError(f"need head_chunks >= 1, got {self.head_chunks}")
+        if not self.boundaries:
+            # uniform split by default
+            per = self.n_layers / self.layer_chunks
+            object.__setattr__(
+                self, "boundaries",
+                tuple(int(round(i * per)) for i in range(self.layer_chunks)))
+        if len(self.boundaries) != self.layer_chunks \
+                or self.boundaries[0] != 0 \
+                or list(self.boundaries) != sorted(set(self.boundaries)) \
+                or self.boundaries[-1] >= self.n_layers:
+            raise ValueError(
+                f"boundaries must be {self.layer_chunks} strictly increasing "
+                f"layer indices starting at 0 and < {self.n_layers}; got "
+                f"{self.boundaries}")
+
+    def chunk_ranges(self) -> Tuple[Tuple[int, int], ...]:
+        """``(lo, hi)`` half-open layer sub-ranges, in application order."""
+        ends = (*self.boundaries[1:], self.n_layers)
+        return tuple(zip(self.boundaries, ends))
+
+    @property
+    def id_suffix(self) -> str:
+        return f":L={self.layer_chunks}:H={self.head_chunks}"
+
+
+def _minmax_partition(vals: Tuple[float, ...], k: int):
+    """Partition ``vals`` into ``k`` contiguous chunks minimising the largest
+    chunk sum.  Returns ``(best_max, boundaries)`` with ``boundaries`` the
+    chunk start indices.  O(k * n^2) DP — n is a layer count, tiny."""
+    n = len(vals)
+    prefix = [0.0]
+    for v in vals:
+        prefix.append(prefix[-1] + float(v))
+
+    def rng(i, j):  # sum of vals[i:j]
+        return prefix[j] - prefix[i]
+
+    INF = float("inf")
+    # f[j][i]: minimal max-chunk-sum splitting vals[:i] into j chunks
+    f = [[INF] * (n + 1) for _ in range(k + 1)]
+    cut = [[0] * (n + 1) for _ in range(k + 1)]
+    f[0][0] = 0.0
+    for j in range(1, k + 1):
+        for i in range(j, n + 1):
+            for m in range(j - 1, i):
+                cand = max(f[j - 1][m], rng(m, i))
+                if cand < f[j][i]:
+                    f[j][i] = cand
+                    cut[j][i] = m
+    bounds = []
+    i = n
+    for j in range(k, 0, -1):
+        m = cut[j][i]
+        bounds.append(m)
+        i = m
+    return f[k][n], tuple(reversed(bounds))
+
+
+def gruslys_split(layer_bytes, budget_bytes: float,
+                  state_bytes: float) -> Optional[InnerPlan]:
+    """Gruslys-style slot allocation for the inner axis: the smallest number
+    of rematted layer sub-ranges whose reverse-time peak fits the budget.
+
+    The peak while one step is backwarded with ``k`` chunks is
+
+        ``k * state_bytes``  (saved sub-range entry states)
+        ``+ max chunk activation bytes``  (the chunk being rematerialised),
+
+    so for each candidate ``k`` the DP places boundaries to minimise the
+    largest chunk (:func:`_minmax_partition` — the minmax analogue of
+    Gruslys et al.'s optimal slot placement, arXiv:1606.03401), and the
+    smallest feasible ``k`` wins: recompute cost is one extra forward of the
+    step regardless of ``k`` (every chunk interior replays exactly once), so
+    fewer chunks means fewer saved states and larger fusion regions at the
+    same recompute.  Returns ``None`` when even ``k = n_layers`` does not
+    fit — :func:`min_step_budget_bytes` names the smallest budget that would.
+    """
+    vals = tuple(float(b) for b in layer_bytes)
+    n = len(vals)
+    if n < 1:
+        raise ValueError("need at least one layer cost")
+    for k in range(1, n + 1):
+        worst, bounds = _minmax_partition(vals, k)
+        if k * float(state_bytes) + worst <= float(budget_bytes):
+            return InnerPlan(n_layers=n, layer_chunks=k, boundaries=bounds)
+    return None
+
+
+def min_step_budget_bytes(layer_bytes, state_bytes: float) -> float:
+    """Smallest per-step budget any inner split can satisfy (used by the
+    launcher's infeasibility error)."""
+    vals = tuple(float(b) for b in layer_bytes)
+    best = float("inf")
+    for k in range(1, len(vals) + 1):
+        worst, _ = _minmax_partition(vals, k)
+        best = min(best, k * float(state_bytes) + worst)
+    return best
+
+
 class MOp(enum.Enum):
     ADVANCE = "advance"          # forward steps [index, end)
     STORE_L2 = "store_l2"        # async: current state (== x_index) -> Level 2
@@ -174,12 +312,19 @@ class SegmentPlan:
     reversed, segment ``j-1``'s boundary is already in flight).  The legacy
     flat ``MAction`` stream (``multistage_schedule``) is *derived* from this
     plan, so the two can never disagree.
+
+    ``inner`` is the optional second axis (:class:`InnerPlan`): when set,
+    the plan is 2D — the per-step computation itself is chunked during the
+    reverse.  A 1D plan's ``plan_id`` is byte-identical to what it was
+    before the second axis existed, so journaled cursors from 1D runs stay
+    valid; a 2D plan appends ``:L=<layer_chunks>:H=<head_chunks>``.
     """
 
     n: int
     interval: int
     s_l1: int
     segments: Tuple[SegmentSpec, ...]
+    inner: Optional[InnerPlan] = None
 
     @property
     def num_segments(self) -> int:
@@ -189,7 +334,8 @@ class SegmentPlan:
     def plan_id(self) -> str:
         """Stable identity of this plan — what a journaled
         :class:`RunCursor` is validated against on resume."""
-        return f"plan:n={self.n}:I={self.interval}:s={self.s_l1}"
+        base = f"plan:n={self.n}:I={self.interval}:s={self.s_l1}"
+        return base + self.inner.id_suffix if self.inner is not None else base
 
     def cursor(self, phase: str, segment_index: int,
                payload: Any = None) -> RunCursor:
@@ -283,10 +429,11 @@ class SegmentPlan:
         return self.n + self.reverse_advances()
 
 
-def segment_plan(n: int, interval: int, s_l1: int) -> SegmentPlan:
+def segment_plan(n: int, interval: int, s_l1: int,
+                 inner: Optional[InnerPlan] = None) -> SegmentPlan:
     """Build the SegmentPlan IR for an n-step chain (validates arguments;
     uneven tail segments are first-class — the last segment is simply
-    shorter)."""
+    shorter).  Pass ``inner`` to make the plan 2D."""
     if n < 1:
         raise ValueError(f"need n >= 1, got {n}")
     if interval < 1:
@@ -300,7 +447,7 @@ def segment_plan(n: int, interval: int, s_l1: int) -> SegmentPlan:
             else None
         segments.append(SegmentSpec(sid=sid, begin=b, end=e, revolve=sub))
     return SegmentPlan(n=n, interval=interval, s_l1=s_l1,
-                       segments=tuple(segments))
+                       segments=tuple(segments), inner=inner)
 
 
 @dataclass

@@ -14,7 +14,11 @@ Offloaded-backprop strategies ride the same flags the API exposes: pass
 ``--strategy multistage_async`` (plus ``--engine``/``--interval``/``--slots``,
 and ``--storage``/``--l2-capacity`` to bound the Level-2 host-RAM footprint
 with the tiered RAM-over-disk backend) to route the backward pass through
-the planner-driven engines — with
+the planner-driven engines.  ``--step-memory-budget BYTES`` caps one step's
+Level-1 activations: when they exceed the cap the planner switches to a 2D
+(time x layer) plan, chunking the per-step layer stack and loss head so the
+chunk peak fits (infeasible budgets fail fast, naming the smallest feasible
+one).  With
 ``--engine scan`` the whole train step stays one XLA computation, so on a
 multi-device host the launcher jits it over a data-parallel mesh with
 sharded batches (the sharded step executes the identical ``SegmentPlan``
@@ -31,6 +35,8 @@ Examples::
         --smoke --steps 8 --strategy multistage_async --engine scan
     PYTHONPATH=src python -m repro.launch.train --arch lstm-paper --smoke \
         --steps 8 --strategy multistage_async --l2-capacity 1000000
+    PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b --smoke \
+        --steps 4 --strategy multistage_async --step-memory-budget 2000000
 """
 from __future__ import annotations
 
@@ -85,6 +91,16 @@ def main(argv=None):
                          "store never exceeds this; cold boundaries spill "
                          "to disk and autotune sizes I from the effective "
                          "(capacity-aware) transfer time")
+    ap.add_argument("--step-memory-budget", type=int, default=None,
+                    metavar="BYTES",
+                    help="per-step Level-1 activation budget: when one "
+                         "step's activations exceed it, the planner adds "
+                         "the inner (layer/head) axis — a 2D plan whose "
+                         "chunking the Gruslys-style DP sizes from the "
+                         "chain's measured byte profile "
+                         "(requires --strategy multistage_async with "
+                         "--engine compiled); an infeasible budget fails "
+                         "fast naming the smallest feasible one")
     ap.add_argument("--journal-dir", default=None, metavar="DIR",
                     help="write-ahead journal for the offloaded backward "
                          "pass: Level-2 boundary stores become "
@@ -122,15 +138,18 @@ def main(argv=None):
 
     configure_perf_env(host_device_count=args.host_devices)
 
-    if args.strategy is not None and args.engine != "scan" \
-            and jax.default_backend() == "cpu":
+    if args.strategy is not None and args.engine != "scan":
         # The executor engines escape the jitted step via io_callback and
         # dispatch nested segment computations from the callback thread.
         # With XLA's async CPU dispatch the outer program occupies the
         # (nproc-sized) execution pool, so on few-core hosts the nested
         # dispatch starves and the step deadlocks; synchronous CPU
         # dispatch makes the nesting safe and costs nothing here (host
-        # "transfers" are memcpys).
+        # "transfers" are memcpys).  The flag is read once, when the CPU
+        # client is created — it must be set before anything initialises a
+        # backend (even ``jax.default_backend()`` would), so this cannot
+        # be guarded on the detected platform; it is a no-op for
+        # accelerator clients anyway.
         jax.config.update("jax_cpu_enable_async_dispatch", False)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -161,10 +180,16 @@ def main(argv=None):
                                   or args.slots is not None
                                   or args.storage is not None
                                   or args.l2_capacity is not None
-                                  or args.journal_dir is not None):
+                                  or args.journal_dir is not None
+                                  or args.step_memory_budget is not None):
         ap.error("--engine/--interval/--slots/--storage/--l2-capacity/"
-                 "--journal-dir configure an offloaded strategy; pass "
-                 "--strategy as well")
+                 "--journal-dir/--step-memory-budget configure an offloaded "
+                 "strategy; pass --strategy as well")
+    if args.step_memory_budget is not None \
+            and args.engine in ("scan", "interpreted"):
+        ap.error("--step-memory-budget selects 2D (time x layer) plans, "
+                 "which execute in the compiled engine's segment runner; "
+                 "drop --engine or pass --engine compiled")
     if args.journal_dir is not None and args.engine == "scan":
         ap.error("--journal-dir needs an executor engine "
                  "(compiled/interpreted); --engine scan runs entirely "
@@ -185,6 +210,8 @@ def main(argv=None):
         offload_opts["storage"] = args.storage
     if args.l2_capacity is not None:
         offload_opts["l2_capacity_bytes"] = args.l2_capacity
+    if args.step_memory_budget is not None:
+        offload_opts["step_memory_budget"] = args.step_memory_budget
     if args.journal_dir is not None:
         offload_opts["journal_dir"] = args.journal_dir
         # standing resume mode: every gradient call first consults the

@@ -149,24 +149,22 @@ def chunked_ce_loss(h: jnp.ndarray, emb_w: jnp.ndarray, labels: jnp.ndarray,
 
     Memory: O(B * chunk * V) per step — with vocab sharded over the model
     axis this is what keeps the loss layer inside HBM at 150k-vocab scale.
+    A sequence length that does not divide into ``chunk`` gets a shorter
+    remainder chunk (no divisibility requirement), so the bound holds for
+    every (S, chunk) pair.
     """
     B, S, D = h.shape
-    if S % chunk != 0:
-        chunk = S  # degenerate fallback for tiny smoke shapes
-    n_chunks = S // chunk
+    chunk = min(chunk, S)
+    num_full, rem = divmod(S, chunk)
     V = emb_w.shape[0]
     pad_mask = None
     if valid_vocab is not None and valid_vocab < V:
         pad_mask = (jnp.arange(V) < valid_vocab)
-    hc = h.reshape(B, n_chunks, chunk, D).transpose(1, 0, 2, 3)
-    lc = labels.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
     if mask is None:
         mask = jnp.ones((B, S), dtype=jnp.float32)
-    mc = mask.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
     wt = emb_w.astype(h.dtype)
 
-    def body(acc, args):
-        hk, lk, mk = args
+    def terms(hk, lk, mk):
         logits = hk @ wt.T  # (B, chunk, V)
         logits = softcap(logits.astype(jnp.float32), logit_cap)
         if pad_mask is not None:
@@ -174,10 +172,21 @@ def chunked_ce_loss(h: jnp.ndarray, emb_w: jnp.ndarray, labels: jnp.ndarray,
         lse = jax.nn.logsumexp(logits, axis=-1)
         gold = jnp.take_along_axis(logits, lk[..., None], axis=-1)[..., 0]
         nll = (lse - gold) * mk
-        return (acc[0] + jnp.sum(nll), acc[1] + jnp.sum(mk)), None
+        return jnp.sum(nll), jnp.sum(mk)
 
+    def body(acc, args):
+        t, c = terms(*args)
+        return (acc[0] + t, acc[1] + c), None
+
+    Sf = num_full * chunk
+    hc = h[:, :Sf].reshape(B, num_full, chunk, D).transpose(1, 0, 2, 3)
+    lc = labels[:, :Sf].reshape(B, num_full, chunk).transpose(1, 0, 2)
+    mc = mask[:, :Sf].reshape(B, num_full, chunk).transpose(1, 0, 2)
     (tot, cnt), _ = lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)),
                              (hc, lc, mc))
+    if rem:
+        t, c = terms(h[:, Sf:], labels[:, Sf:], mask[:, Sf:])
+        tot, cnt = tot + t, cnt + c
     return tot / jnp.maximum(cnt, 1.0)
 
 

@@ -215,27 +215,43 @@ def train_chain(cfg: ArchConfig):
         h = constrain(h, "act")
         return (h, jnp.zeros((), jnp.float32)), params["layers"]
 
-    def body(params, carry, lp, batch):
+    def layer_body(params, carry, lp, batch, j):
+        # one layer of the period — the 2D planner's inner-axis unit (the
+        # rope table is rebuilt per layer; it is deterministic and tiny, and
+        # XLA CSEs the rebuilds away within a remat region)
         x, aux_t = carry
         S = batch["tokens"].shape[1] - 1
         rope = rope_table(S, cfg.hd, cfg.rope_theta)
-        for j, kind in enumerate(cfg.layer_pattern):
-            x, aux = _apply_layer_seq(lp[f"pos{j}"], x, kind, cfg, rope, dt)
-            aux_t = aux_t + aux
-        return x, aux_t
+        kind = cfg.layer_pattern[j]
+        x, aux = _apply_layer_seq(lp[f"pos{j}"], x, kind, cfg, rope, dt)
+        return x, aux_t + aux
 
-    def readout(params, carry, batch):
+    def body(params, carry, lp, batch):
+        for j in range(len(cfg.layer_pattern)):
+            carry = layer_body(params, carry, lp, batch, j)
+        return carry
+
+    def readout_chunked(params, carry, batch, head_chunks):
         x, aux_t = carry
         labels = batch["tokens"][:, 1:]
+        S = labels.shape[1]
         h = rmsnorm(params["final_norm"], x, dt=dt)
+        chunk = cfg.ce_chunk if head_chunks <= 1 \
+            else max(1, -(-S // head_chunks))
         loss = chunked_ce_loss(h, unembed_weight(params, cfg), labels,
-                               chunk=cfg.ce_chunk, logit_cap=cfg.logit_softcap,
+                               chunk=chunk, logit_cap=cfg.logit_softcap,
                                mask=batch.get("mask"),
                                valid_vocab=cfg.vocab)
         coef = cfg.moe.aux_coef if cfg.moe else 0.0
         return loss + coef * aux_t / max(1, cfg.n_layers)
 
-    return ChainSpec(prelude, body, readout, name=f"{cfg.name}-depth")
+    def readout(params, carry, batch):
+        return readout_chunked(params, carry, batch, 1)
+
+    return ChainSpec(prelude, body, readout, name=f"{cfg.name}-depth",
+                     layer_body=layer_body,
+                     n_layers=len(cfg.layer_pattern),
+                     readout_chunked=readout_chunked)
 
 
 # ---------------------------------------------------------------------------

@@ -82,6 +82,29 @@ def test_jaxpr_cost_includes_remat_recompute():
     assert g_remat.flops >= g_plain.flops  # replay appears in the jaxpr
 
 
+def test_jaxpr_cost_pallas_grid_multiplied():
+    # Regression: a gridded pallas_call body used to be counted once (one
+    # opaque sub-jaxpr visit) even when wrapped in remat under a pjit
+    # sub-jaxpr.  A 2-layer rematted flash-attention stack must report at
+    # least the analytic 4*BH*S^2*D flops per layer.
+    from repro.kernels.flash_attention import flash_attention
+
+    BH, S, D = 2, 64, 16
+
+    def layer(x):
+        return flash_attention(x, x, x, causal=False, block_q=32, block_k=32)
+
+    def stack(x):
+        for _ in range(2):
+            x = jax.checkpoint(layer)(x)
+        return jnp.sum(x)
+
+    x = jnp.ones((BH, S, D), jnp.float32)
+    c = cost_of_fn(jax.jit(stack), x)
+    per_layer = 4.0 * BH * S * S * D  # QK^T + PV dots
+    assert c.flops >= 2 * per_layer
+
+
 def test_build_report_bottleneck_and_fraction():
     r = build_report(
         arch="a", shape="s", mesh_name="m", n_chips=256,

@@ -111,3 +111,25 @@ def test_zero3_constraints_are_noop_without_context():
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32))
     q, k, v = _project_qkv(p, x, 4, 2, 8, DTypes(compute=jnp.float32))
     assert q.shape == (2, 16, 4, 8) and k.shape == (2, 16, 2, 8)
+
+
+def test_layer_policy_unknown_name_raises_eagerly():
+    """A typo'd policy name must fail at the combinator entry point with a
+    ValueError listing the registry, not deep inside a trace."""
+    from repro.core import layer_policy as lp
+
+    def layer(p, x):
+        return x @ p
+
+    stacked = jnp.ones((3, 8, 8))
+    with pytest.raises(ValueError, match="unknown layer policy"):
+        lp.remat_layer(layer, policy_name="offload_layre")
+    with pytest.raises(ValueError, match="offload_layer"):  # lists registry
+        lp.scan_layers(layer, stacked, jnp.ones((4, 8)),
+                       policy_name="not-a-policy")
+    with pytest.raises(ValueError, match="known policies"):
+        lp.scan_layers_collect(lambda p, x: (x @ p, jnp.sum(x)), stacked,
+                               jnp.ones((4, 8)), policy_name="bogus")
+    # the "none" passthrough still validates nothing else and works
+    y = lp.scan_layers(layer, stacked, jnp.ones((4, 8)), policy_name="none")
+    assert y.shape == (4, 8)

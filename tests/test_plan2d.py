@@ -1,0 +1,337 @@
+"""2D (time x layer) checkpoint plans.
+
+The outer axis is the paper's multistage segmentation; the inner axis
+chunks one chain step's own computation (rematted layer sub-ranges chosen
+by the Gruslys-style DP, plus a chunked logits/loss head).  Covered here:
+
+* chunked-vs-unchunked loss head gradient parity (bit-identical fp32,
+  including a vocab size and sequence length no chunking divides);
+* the end-to-end ``step_memory_budget=`` path: a transformer whose 1D
+  per-step activations exceed the budget trains through
+  ``value_and_grad_offloaded`` with gradients matching plain autodiff,
+  ``last_plan()`` reporting both axes and the executor's inner counters
+  matching the perfmodel count-exactly;
+* infeasible budgets raise naming the smallest feasible one;
+* ``OffloadConfig`` validation of the 2D knobs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _helpers import max_rel_err, tree_equal
+from repro import api
+from repro.api.chain import chain_length, index_xs
+from repro.configs import SMOKE_SHAPE, get_config
+from repro.configs.shapes import make_batch
+from repro.core import perfmodel as pm
+from repro.core.storage import tree_bytes
+from repro.models import get_model
+from repro.models.layers import chunked_ce_loss
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _grads_bit_identical(g, ref) -> bool:
+    return tree_equal(g, ref)
+
+
+# ---------------------------------------------------------------------------
+# chunked loss head: gradient parity
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_ce_bit_identical_fp32_nondividing_vocab():
+    """fp32 CE gradients are bit-identical across head chunkings — chunking
+    splits the sequence, never a position's own logits row — including a
+    prime vocab (97) and a prime sequence length (31) nothing divides."""
+    B, S, D, V = 2, 31, 16, 97
+    h = jax.random.normal(KEY, (B, S, D), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(KEY, 1), (V, D), jnp.float32)
+    labels = jax.random.randint(jax.random.fold_in(KEY, 2), (B, S), 0, V)
+
+    ref_v, ref_g = jax.value_and_grad(
+        lambda hh: chunked_ce_loss(hh, w, labels, chunk=S))(h)
+    for chunk in (31, 7, 5, 4, 1):
+        v, g = jax.value_and_grad(
+            lambda hh: chunked_ce_loss(hh, w, labels, chunk=chunk))(h)
+        assert _grads_bit_identical(g, ref_g), f"chunk={chunk}"
+        # the mean is a sum whose association order depends on the
+        # chunking; the per-position terms themselves are bit-identical
+        assert abs(float(v) - float(ref_v)) <= 1e-6
+
+
+def test_whisper_tiny_chunked_head_parity():
+    """The whisper-tiny decoder's real logits/CE head: chunked vs unchunked
+    per-position gradients (w.r.t. the decoder output) are bit-identical at
+    fp32 for every chunking, dividing or not — chunking splits the
+    sequence, never a position's own logits row.  The tied-embedding
+    gradient is a reduction *over* positions, so only its association
+    order changes: allclose at fp32."""
+    from repro.models import encdec
+
+    cfg = get_config("whisper-tiny", smoke=True)
+    m = get_model(cfg)
+    params = m.init(jax.random.fold_in(KEY, 3))
+    batch = make_batch(cfg, SMOKE_SHAPE)
+    tokens = batch["tokens"]
+    labels = tokens[:, 1:]
+    S = int(labels.shape[1])
+
+    # the decoder hidden states the head consumes (forward only)
+    dt = encdec._dtypes(cfg)
+    enc = encdec.encode(params, batch["frames"], cfg)
+    from repro.models.layers import embed, rmsnorm, rope_table
+
+    x = embed(params["embed"], tokens[:, :-1], dt)
+    rope = rope_table(S, cfg.hd, cfg.rope_theta)
+    for j in range(cfg.n_layers):
+        lp = jax.tree_util.tree_map(lambda a, j=j: a[j],
+                                    params["dec_layers"])
+        x = encdec._dec_layer_seq(lp, x, enc, rope, cfg, dt)
+    h = rmsnorm(params["final_norm"], x, dt=dt).astype(jnp.float32)
+    w = params["embed"]["emb"].astype(jnp.float32)
+
+    def head(hh, ww, chunk):
+        return chunked_ce_loss(hh, ww, labels, chunk=chunk)
+
+    ref_v, (ref_gh, ref_gw) = jax.value_and_grad(
+        head, argnums=(0, 1))(h, w, S)
+    for chunk in (S, 7, 3):   # S = 31 at smoke shapes: nothing divides it
+        v, (gh, gw) = jax.value_and_grad(head, argnums=(0, 1))(h, w, chunk)
+        assert _grads_bit_identical(gh, ref_gh), f"chunk={chunk}"
+        np.testing.assert_allclose(np.asarray(gw), np.asarray(ref_gw),
+                                   rtol=1e-5, atol=1e-7)
+        assert abs(float(v) - float(ref_v)) <= 1e-6
+
+
+def test_gemma2_chunked_readout_grad_parity():
+    """gemma2-2b's ChainSpec.readout_chunked: equal to readout at
+    head_chunks=1, gradients bit-identical for every head_chunks
+    (3 and 5 do not divide the smoke sequence length 31)."""
+    cfg = get_config("gemma2-2b", smoke=True)
+    m = get_model(cfg)
+    spec = m.train_chain
+    assert spec.supports_2d and spec.readout_chunked is not None
+    params = m.init(jax.random.fold_in(KEY, 4))
+    batch = make_batch(cfg, SMOKE_SHAPE)
+    carry0, xs = spec.prelude(params, batch)
+    c = carry0
+    for k in range(chain_length(xs)):
+        c = spec.body(params, c, index_xs(xs, k), batch)
+
+    # contract: readout_chunked == readout at head_chunks == 1 (compare
+    # eager-to-eager — tracing under vjp fuses the bf16 forward differently)
+    assert float(spec.readout_chunked(params, c, batch, 1)) == \
+        float(spec.readout(params, c, batch))
+    ref_v, ref_g = jax.value_and_grad(
+        lambda cc: spec.readout(params, cc, batch))(c)
+    for hc in (1, 3, 5):
+        v, g = jax.value_and_grad(
+            lambda cc: spec.readout_chunked(params, cc, batch, hc))(c)
+        assert _grads_bit_identical(g, ref_g), f"head_chunks={hc}"
+        assert abs(float(v) - float(ref_v)) <= 1e-4
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: budget-driven 2D plans through value_and_grad_offloaded
+# ---------------------------------------------------------------------------
+
+
+def _byte_profile(spec, params, batch):
+    from repro.analysis.jaxpr_cost import chain_step_byte_profile
+
+    carry0, xs = spec.prelude(params, batch)
+    return chain_step_byte_profile(spec, params, carry0, index_xs(xs, 0),
+                                   batch), (carry0, xs)
+
+
+def test_budget_forces_2d_plan_grads_match_autodiff():
+    """A transformer whose 1D per-step activations exceed the budget trains
+    via ``value_and_grad_offloaded(step_memory_budget=...)``: the planner
+    goes 2D, gradients match plain autodiff, and the executor's inner
+    counters match the perfmodel count-exactly."""
+    cfg = get_config("granite-3-2b", smoke=True)
+    m = get_model(cfg)
+    spec = m.train_chain
+    params = m.init(jax.random.fold_in(KEY, 5))
+    batch = make_batch(cfg, SMOKE_SHAPE)
+    (state_bytes, layer_bytes, head_bytes), (carry0, xs) = \
+        _byte_profile(spec, params, batch)
+    n = chain_length(xs)
+
+    # below the 1D step bytes (forces 2D), above the smallest feasible
+    budget = int(sum(layer_bytes) + head_bytes) - 1
+    assert budget > pm.choose_2d_plan(
+        n, t_a=1.0, t_t=0.0, s_l1=2, state_bytes=state_bytes,
+        layer_bytes=layer_bytes, budget_bytes=budget,
+        head_bytes=head_bytes, interval=1).min_budget_bytes
+
+    ref_v, ref_g = jax.value_and_grad(m.train_loss)(params, batch)
+    vg = api.value_and_grad_offloaded(m.train_loss, interval=2, slots=2,
+                                      step_memory_budget=budget)
+    v, g = vg(params, batch)
+    assert abs(float(v) - float(ref_v)) <= 1e-6
+    assert max_rel_err(g, ref_g) <= 1e-6
+
+    plan = api.last_plan()
+    inner = plan.inner
+    assert inner is not None
+    assert plan.plan_id.endswith(
+        f":L={inner.layer_chunks}:H={inner.head_chunks}")
+
+    st = api.last_stats()
+    assert st.inner_layer_chunks == inner.layer_chunks
+    assert st.inner_head_chunks == inner.head_chunks
+    assert st.inner_layers == inner.n_layers
+    # count-exact vs the 2D perfmodel
+    assert st.inner_recomputed_layers == \
+        pm.inner_recomputed_layers_model(n, inner)
+    assert st.inner_peak_bytes == \
+        int(pm.inner_boundary_bytes_model(inner, tree_bytes(carry0)))
+    assert st.inner_recompute_factor == 1.0
+
+
+def test_pinned_plan_2d_head_chunks():
+    """plan_2d=(layer_chunks, head_chunks) pins the inner axis; gradients
+    stay close to autodiff (bf16 head reassociation only)."""
+    cfg = get_config("granite-3-2b", smoke=True)
+    m = get_model(cfg)
+    params = m.init(jax.random.fold_in(KEY, 6))
+    batch = make_batch(cfg, SMOKE_SHAPE)
+    ref_v, ref_g = jax.value_and_grad(m.train_loss)(params, batch)
+    vg = api.value_and_grad_offloaded(m.train_loss, interval=2, slots=2,
+                                      plan_2d=(1, 3))
+    v, g = vg(params, batch)
+    assert api.last_plan().plan_id.endswith(":L=1:H=3")
+    assert abs(float(v) - float(ref_v)) <= 1e-4
+    assert max_rel_err(g, ref_g) <= 1e-2
+
+
+def test_infeasible_budget_names_smallest_feasible():
+    cfg = get_config("granite-3-2b", smoke=True)
+    m = get_model(cfg)
+    params = m.init(jax.random.fold_in(KEY, 7))
+    batch = make_batch(cfg, SMOKE_SHAPE)
+    vg = api.value_and_grad_offloaded(m.train_loss, interval=2, slots=2,
+                                      step_memory_budget=1000)
+    with pytest.raises(ValueError,
+                       match=r"smallest feasible budget is \d+ bytes"):
+        vg(params, batch)
+
+
+def test_2d_needs_layer_decomposition():
+    spec = api.ChainSpec(
+        prelude=lambda p, b: (jnp.float32(0.0), b["xs"]),
+        body=lambda p, c, x, b: c + p * jnp.tanh(x),
+        readout=lambda p, c, b: c ** 2,
+        name="no-2d-chain")
+    vg = api.value_and_grad_offloaded(spec, interval=2,
+                                      step_memory_budget=100)
+    with pytest.raises(ValueError, match="layer decomposition"):
+        vg(jnp.float32(0.5), {"xs": jnp.linspace(-1.0, 1.0, 8)})
+
+
+def test_offload_config_2d_validation():
+    with pytest.raises(ValueError, match="positive byte count"):
+        api.OffloadConfig(step_memory_budget=0)
+    with pytest.raises(ValueError, match="layer_chunks, head_chunks"):
+        api.OffloadConfig(plan_2d=(0, 1))
+    with pytest.raises(ValueError, match="not both"):
+        api.OffloadConfig(step_memory_budget=1, plan_2d=(1, 1))
+    with pytest.raises(ValueError, match="compiled engine"):
+        api.OffloadConfig(step_memory_budget=1, engine="interpreted")
+    with pytest.raises(ValueError, match="runner='compiled'"):
+        api.OffloadConfig(step_memory_budget=1, runner="pallas")
+    with pytest.raises(ValueError, match="no such sweep"):
+        api.OffloadConfig(plan_2d=(1, 2), strategy="revolve")
+    # valid configs construct
+    api.OffloadConfig(step_memory_budget=1 << 20)
+    api.OffloadConfig(plan_2d=(2, 3))
+
+
+# ---------------------------------------------------------------------------
+# planner units: DP, perfmodel, tuner coupling
+# ---------------------------------------------------------------------------
+
+
+def test_gruslys_split_minmax_boundaries():
+    from repro.core.schedule import gruslys_split, min_step_budget_bytes
+
+    layer_bytes = (100.0, 10.0, 10.0, 100.0)
+    state = 5.0
+    # generous budget: one chunk
+    p = gruslys_split(layer_bytes, 1000.0, state)
+    assert p.layer_chunks == 1 and p.boundaries == (0,)
+    # tight: must split around the heavy ends
+    p = gruslys_split(layer_bytes, 130.0, state)
+    assert p is not None
+    worst = max(sum(layer_bytes[lo:hi]) for lo, hi in p.chunk_ranges())
+    assert p.layer_chunks * state + worst <= 130.0
+    # infeasible: even per-layer chunks overflow
+    assert gruslys_split(layer_bytes, 50.0, state) is None
+    assert min_step_budget_bytes(layer_bytes, state) <= 130.0
+
+
+def test_choose_2d_plan_1d_when_it_fits():
+    plan = pm.choose_2d_plan(16, t_a=1.0, t_t=2.0, s_l1=4,
+                             state_bytes=10.0, layer_bytes=(50.0, 50.0),
+                             budget_bytes=500.0, head_bytes=100.0)
+    assert not plan.is_2d and plan.feasible
+    assert plan.step_peak_bytes == plan.step_bytes_1d == 200.0
+
+
+def test_choose_2d_plan_chunks_layers_and_head():
+    plan = pm.choose_2d_plan(16, t_a=1.0, t_t=2.0, s_l1=4,
+                             state_bytes=10.0,
+                             layer_bytes=(50.0,) * 8,
+                             budget_bytes=150.0, head_bytes=400.0)
+    assert plan.is_2d and plan.feasible
+    inner = plan.inner
+    assert inner.layer_chunks > 1
+    assert inner.head_chunks == 3          # ceil(400 / 150)
+    assert plan.step_peak_bytes <= 150.0
+    assert plan.inner_boundary_bytes == inner.layer_chunks * 10.0
+    # recompute: outer factor plus one extra forward of the step
+    base = pm.recompute_factor_2d(16, plan.interval, 4, None)
+    assert plan.recompute_factor == pytest.approx(base + 16.0 / 15.0)
+
+
+def test_autotuner_plan_2d_uses_measured_schedule():
+    tuner = api.AutoTuner()
+    tune = tuner.manual("t2d", n=32, interval=8, slots=4)
+    plan = tuner.plan_2d(tune, n=32, state_bytes=8.0,
+                         layer_bytes=(64.0, 64.0, 64.0),
+                         budget_bytes=120.0)
+    assert plan.interval == 8          # the measured outer axis is kept
+    assert plan.is_2d and plan.feasible
+    plan1d = tuner.plan_2d(tune, n=32, state_bytes=8.0,
+                           layer_bytes=(64.0, 64.0, 64.0),
+                           budget_bytes=10_000.0)
+    assert not plan1d.is_2d
+
+
+def test_chain_step_byte_profile_shapes_only():
+    """The byte profile is computable from tracers (trace-time planning)."""
+    cfg = get_config("granite-3-2b", smoke=True)
+    m = get_model(cfg)
+    spec = m.train_chain
+    params = m.init(jax.random.fold_in(KEY, 8))
+    batch = make_batch(cfg, SMOKE_SHAPE)
+    (state_bytes, layer_bytes, head_bytes), _ = \
+        _byte_profile(spec, params, batch)
+    assert state_bytes > 0 and head_bytes > 0
+    assert len(layer_bytes) == spec.n_layers
+    assert all(b > 0 for b in layer_bytes)
+
+    # same numbers when every argument is a tracer
+    def probe(p, b):
+        carry0, xs = spec.prelude(p, b)
+        from repro.analysis.jaxpr_cost import chain_step_byte_profile
+
+        sb, lb, hb = chain_step_byte_profile(spec, p, carry0,
+                                             index_xs(xs, 0), b)
+        assert (sb, lb, hb) == (state_bytes, layer_bytes, head_bytes)
+        return jnp.float32(0.0)
+
+    jax.eval_shape(probe, params, batch)
