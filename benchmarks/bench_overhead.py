@@ -318,6 +318,186 @@ def capacity_sweep(depths=(96, 192)):
 
 
 # ---------------------------------------------------------------------------
+# MoE expert parameter streaming (offload_params="moe_experts")
+# ---------------------------------------------------------------------------
+
+
+def expert_stream(smoke: bool = False):
+    """Routing-trace-driven sweep of the MoE expert working set against the
+    tiered fast-tier budget (``offload_params="moe_experts"``).
+
+    A phi3.5-MoE-shaped smoke chain streams its per-(layer, expert) FFN
+    blobs through Level 2 while the fast tier shrinks from holding the
+    whole working set (expert blobs + boundary states — they share one
+    budget) down to a fraction of it.  Asserted at every sweep point:
+
+    * gradients are **bit-identical** (``np.array_equal``) to the
+      non-streaming offloaded run — spilling blobs must never change math;
+    * the measured fast-tier peak equals
+      ``perfmodel.fast_peak_bytes_resources`` replaying the merged
+      ``ResourceAccessPlan`` (and therefore never exceeds the budget);
+    * the engine's ``param_bytes_moved`` equals the read traffic of
+      ``perfmodel.expert_traffic_model`` (each blob read once per sweep);
+    * a routing-trace-*ordered* plan (per-expert keep counts from
+      ``models.moe.routing_stats`` driving the intra-step priority)
+      replayed through a real ``TieredStorage`` matches the same model —
+      the Belady order is exact for busiest-first access order too.
+    """
+    import numpy as np
+
+    from repro.api.frontend import _expert_leaf_ids
+    from repro.configs import SMOKE_SHAPE, get_config
+    from repro.configs.shapes import make_batch
+    from repro.core import perfmodel as pm
+    from repro.core.executor import ParamStream
+    from repro.core.storage import TieredStorage, tree_bytes
+    from repro.models import get_model
+    from repro.models.moe import routing_stats
+
+    cfg = get_config("phi3.5-moe-42b", smoke=True)
+    cfg = cfg.replace(n_layers=4 if smoke else 8)
+    interval, slots = 2, 4
+    m = get_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, SMOKE_SHAPE)
+    spec = m.train_loss.chain_spec
+    carry0, xs = spec.prelude(params, batch)
+    state_bytes = tree_bytes(jax.tree_util.tree_map(np.asarray, carry0))
+
+    leaf_ids = _expert_leaf_ids(xs)
+    assert leaf_ids, "phi3.5-moe chain must expose per-expert leaves"
+    flat = jax.tree_util.tree_leaves(xs)
+    leaves = {i: np.asarray(flat[i]) for i in leaf_ids}
+    n_experts = int(next(iter(leaves.values())).shape[1])
+    n = int(next(iter(leaves.values())).shape[0])
+    step_param_bytes = sum(int(a[0].nbytes) for a in leaves.values())
+    num_segments = -(-n // interval)
+    working_set = n * step_param_bytes + num_segments * state_bytes
+
+    # routing trace: step the chain once, reading each step's post-capacity
+    # per-expert keep counts off its own hidden-state input (the per-step
+    # export the plan producer consumes; a proxy for the exact in-layer
+    # routing input, which only sets prefetch priority, never membership)
+    counts = np.zeros((n, n_experts), np.int64)
+    dropped_tokens = 0
+    c = carry0
+    for k in range(n):
+        lp = jax.tree_util.tree_map(lambda a: a[k], xs)
+        for pos, sub in lp.items():
+            if isinstance(sub, dict) and "moe" in sub:
+                rs = routing_stats(
+                    sub["moe"], np.asarray(c[0], np.float32),
+                    n_experts=cfg.moe.n_experts, top_k=cfg.moe.top_k,
+                    capacity_factor=cfg.moe.capacity_factor)
+                counts[k] += rs["expert_counts"]
+                dropped_tokens += rs["dropped_tokens"]
+        c = spec.body(params, c, lp, batch)
+
+    # reference: the same offloaded schedule without parameter streaming
+    vg_ref = api.value_and_grad_offloaded(
+        m.train_loss, interval=interval, slots=slots)
+    ref_v, ref_g = vg_ref(params, batch)
+    ref_leaves = [np.asarray(l) for l in jax.tree_util.tree_leaves(ref_g)]
+
+    rows = []
+    points = [("all", working_set), ("half", working_set // 2),
+              ("quarter", working_set // 4)]
+    if not smoke:
+        points.append(("eighth", working_set // 8))
+    for label, cap in points:
+        vg = api.value_and_grad_offloaded(
+            m.train_loss, interval=interval, slots=slots,
+            storage="tiered", l2_capacity_bytes=int(cap),
+            offload_params="moe_experts")
+        vg(params, batch)              # warmup: compile segments once
+        t0 = time.perf_counter()
+        v, g = vg(params, batch)
+        jax.block_until_ready((v, g))
+        wall = time.perf_counter() - t0
+
+        assert np.array_equal(np.asarray(v), np.asarray(ref_v)), label
+        for a, b in zip(jax.tree_util.tree_leaves(g), ref_leaves):
+            assert np.array_equal(np.asarray(a), b), label
+
+        st = api.last_stats()
+        plan = api.last_plan()
+        # exact replay of the fast-tier peak: population order + per-
+        # segment boundary puts under the forward-merged distances (the
+        # uniform-priority plan the front-end's ParamStream registers)
+        ps = ParamStream(None, leaves, n_experts=n_experts)
+        ps.bind(plan)
+        puts = [(key, ps.blob_bytes[key[1]])
+                for key in ps.population_order()]
+        puts += [(seg.begin, state_bytes) for seg in plan.segments]
+        fwd_plan = ms.merge_access_plans(
+            ps.access_plan("forward"),
+            plan.resource_access_plan(state_bytes)
+            .shift(len(plan.segments)))
+        model_peak = pm.fast_peak_bytes_resources(
+            puts, fwd_plan.distances(), int(cap))
+        assert st.l2_fast_peak_bytes <= cap, (label, st)
+        assert st.l2_fast_peak_bytes == model_peak, (
+            label, st.l2_fast_peak_bytes, model_peak)
+
+        # traffic: every blob is read exactly once per sweep (populate
+        # writes are stores, not lane traffic)
+        traffic = pm.expert_traffic_model(n, interval, step_param_bytes,
+                                          state_bytes, int(cap))
+        read_bytes = traffic["moved_param_bytes"] \
+            - traffic["total_param_bytes"]
+        assert st.param_bytes_moved == read_bytes, (
+            label, st.param_bytes_moved, read_bytes)
+        assert st.param_prefetches > 0, label
+
+        # routing-ordered replay on a *real* tiered store: busiest-first
+        # intra-step priority, same membership, still exactly modeled
+        ps_routed = ParamStream(None, leaves, n_experts=n_experts,
+                                expert_counts=counts)
+        ps_routed.bind(plan)
+        routed_plan = ms.merge_access_plans(
+            ps_routed.access_plan("forward"),
+            plan.resource_access_plan(state_bytes)
+            .shift(len(plan.segments)))
+        puts_routed = [(key, ps_routed.blob_bytes[key[1]])
+                       for key in ps_routed.population_order()]
+        puts_routed += [(seg.begin, state_bytes)
+                        for seg in plan.segments]
+        ts = TieredStorage(capacity_bytes=int(cap))
+        ts.set_plan(routed_plan)
+        for key, nb in puts_routed:
+            ts.put(key, {"b": np.zeros(nb, np.uint8)})
+        routed_peak = pm.fast_peak_bytes_resources(
+            puts_routed, routed_plan.distances(), int(cap))
+        assert ts.fast_peak_bytes == routed_peak, (
+            label, ts.fast_peak_bytes, routed_peak)
+
+        resident, spilled_keys, resident_bytes = \
+            routed_plan.tier_residency(int(cap))
+        rows.append({
+            "label": label, "capacity_bytes": int(cap),
+            "working_set_bytes": working_set,
+            "fast_peak_bytes": st.l2_fast_peak_bytes,
+            "fast_peak_bytes_model": model_peak,
+            "routed_peak_bytes": routed_peak,
+            "param_prefetches": st.param_prefetches,
+            "param_fetch_stalls": st.param_fetch_stalls,
+            "param_bytes_moved": st.param_bytes_moved,
+            "spilled_keys": spilled_keys,
+            "resident_bytes": resident_bytes,
+            "dropped_tokens": int(dropped_tokens),
+            "routed_tokens": int(counts.sum()),
+            "wall_s": wall,
+        })
+
+    # capacity only moves traffic between tiers, never the math or the
+    # asymptotics: wall time stays ~flat as the budget shrinks (generous
+    # bound — shared-CI clocks are noisy)
+    walls = [r["wall_s"] for r in rows]
+    assert max(walls) < 3.0 * min(walls) + 0.5, walls
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # 2D plans: per-step budget sweep (time x layer, measured == model)
 # ---------------------------------------------------------------------------
 
@@ -710,6 +890,17 @@ def main(smoke: bool = False):
     crows = capacity_sweep((96,) if smoke else (96, 192))
     _print_rows(crows)
 
+    print("\n# MoE expert streaming (grads bit-identical, fast peak == "
+          "resource-plan replay)")
+    erows = expert_stream(smoke=smoke)
+    _print_rows(erows)
+    for r in erows:
+        print(f"# {r['label']}: cap {r['capacity_bytes']/1e6:.2f} MB peak "
+              f"{r['fast_peak_bytes']/1e6:.2f} MB "
+              f"(model {r['fast_peak_bytes_model']/1e6:.2f}) "
+              f"stalls={r['param_fetch_stalls']} "
+              f"spilled_keys={r['spilled_keys']}")
+
     print("\n# 2D plan budget sweep (inner peak == model, count-exact "
           "recompute)")
     prows = plan2d_sweep()
@@ -738,7 +929,8 @@ def main(smoke: bool = False):
               f" stream_bytes={r['stream_bytes']}")
 
     return {"executor": rows, "api": arows, "engine_comparison": comparison,
-            "capacity_sweep": crows, "plan2d_sweep": prows,
+            "capacity_sweep": crows, "expert_stream": erows,
+            "plan2d_sweep": prows,
             "journal_overhead": jrow, "mesh_sweep": mrows}
 
 

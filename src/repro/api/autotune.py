@@ -41,6 +41,7 @@ from jax import lax
 
 from repro.core import offload as ofl
 from repro.core.perfmodel import (KNL, TPU_V5E, HardwareSpec, StepTimes,
+                                  choose_interval_with_params,
                                   choose_sharded_interval,
                                   choose_tiered_interval,
                                   effective_transfer_time, optimal_interval,
@@ -71,6 +72,9 @@ class TuneResult:
     t_t_global: float = 0.0
     shard_streams: int = 0
     t_t_axes: Tuple = ()
+    # Parameter streaming (``offload_params=``) only: measured Level-2
+    # read-back time of one chain step's streamed parameter blobs (s).
+    t_t_param: float = 0.0
 
     @property
     def never_stalls(self) -> bool:
@@ -178,7 +182,8 @@ class AutoTuner:
                 forward_segment: Optional[Callable[[Any], Any]] = None,
                 segment_len: int = 1,
                 store_state0: Any = None,
-                mesh: Any = None) -> TuneResult:
+                mesh: Any = None,
+                param_stream_bytes: int = 0) -> TuneResult:
         """Time the forward compute and one Level-2 store; derive ``I`` per §3.
 
         Two probes, matching the two execution engines:
@@ -218,12 +223,23 @@ class AutoTuner:
         fan-out ``T_T`` is clamped by the global time before §3's rule
         (``perfmodel.choose_sharded_interval``), so the sharded interval
         never exceeds the single-device one.
+
+        ``param_stream_bytes`` (parameter streaming, ``offload_params=``)
+        is the byte size of one chain step's streamed parameter blobs.
+        When non-zero, a third probe measures their Level-2 *read-back*
+        time (``t_t_param`` — the traffic the prefetch lane adds behind
+        every segment) and the interval is widened per
+        ``perfmodel.choose_interval_with_params`` so the boundary store
+        still hides behind the compute left over after the reads.
         """
         state_bytes = tree_bytes(state0)
         level2 = type(backend).__name__
         if isinstance(backend, TieredStorage):
             # the optimum depends on the budget: key it into the cache
             level2 = f"{level2}[{backend.capacity_bytes}]"
+        if param_stream_bytes:
+            # added per-segment read traffic changes the optimum
+            level2 = f"pstream[{param_stream_bytes}]:{level2}"
         streams = int(getattr(backend, "shard_streams", 0) or 0)
         if streams > 1:
             # the per-stream payload (hence T_T, hence I) depends on the
@@ -322,6 +338,27 @@ class AutoTuner:
         else:
             target = optimal_interval(t_t, t_a)
 
+        t_t_param = 0.0
+        if param_stream_bytes:
+            # probe the read-back path the prefetch lane uses: put one
+            # step's worth of blob bytes, then time the non-promoting
+            # peek (falling back to get on backends without one)
+            blob = np.zeros(max(1, param_stream_bytes // 4), np.float32)
+            pkey = ("__autotune_param__", name)
+            backend.put(pkey, blob)
+            read = getattr(backend, "peek", None) or backend.get
+
+            def one_read():
+                read(pkey)
+
+            t_t_param = self._time(one_read)
+            backend.delete(pkey)
+            # widen, never shrink: T_P eats into the compute window that
+            # hides the boundary store, so the tiered/sharded minimum
+            # stays a floor
+            target = max(target, choose_interval_with_params(
+                t_a, t_t, t_t_param))
+
         interval = snap_interval(n, target)
         if capacity is not None and interval < target:
             # choose_tiered_interval's result is a *minimum viable*
@@ -339,7 +376,7 @@ class AutoTuner:
             state_bytes=state_bytes, n=n, source="measured",
             t_t_slow=t_t_slow, capacity_bytes=capacity,
             t_t_global=t_t_global, shard_streams=streams,
-            t_t_axes=t_t_axes))
+            t_t_axes=t_t_axes, t_t_param=t_t_param))
 
     # ------------------------------------------------------- scan engine
     def measure_scan(self, name: str, *, body: Callable[..., Any],

@@ -58,8 +58,11 @@ from repro.api.chain import (ChainSpec, chain_length, combine, diff_mask,
 from repro.core import offload as ofl
 from repro.core import schedule as ms
 from repro.core.compiled_ops import (CompiledChainOps, CompiledSegmentRunner,
-                                     PallasSegmentRunner, inner_chunked_body)
-from repro.core.executor import CheckpointExecutor, ExecutionStats
+                                     PallasSegmentRunner,
+                                     ParamStreamSegmentRunner,
+                                     inner_chunked_body)
+from repro.core.executor import (CheckpointExecutor, ExecutionStats,
+                                 ParamStream)
 from repro.core.multistage_scan import multistage_scan
 from repro.core.storage import AsyncTransferEngine, make_backend
 
@@ -101,6 +104,11 @@ class OffloadConfig:
     #                                   perfmodel.choose_2d_plan
     plan_2d: Optional[Tuple[int, int]] = None  # pin the inner axis instead:
     #                                   (layer_chunks, head_chunks)
+    offload_params: Optional[str] = None  # stream these parameters through
+    #                                   Level-2 alongside boundary states:
+    #                                   "moe_experts" streams per-(layer,
+    #                                   expert) FFN blobs with plan-aware
+    #                                   prefetch one segment ahead
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:
@@ -201,6 +209,41 @@ class OffloadConfig:
                     "engine='scan' runs entirely inside XLA — its Level-2 "
                     "state cannot be journaled; use the executor engines "
                     "('compiled'/'interpreted') for crash consistency")
+        if self.offload_params is not None:
+            if self.offload_params != "moe_experts":
+                raise ValueError(
+                    f"unknown offload_params {self.offload_params!r}; "
+                    "known: ('moe_experts',)")
+            if self.strategy != "multistage_async":
+                raise ValueError(
+                    "offload_params= streams parameters through the "
+                    "multistage_async Level-2 store; strategy="
+                    f"{self.strategy!r} keeps no Level-2 state")
+            if self.engine != "compiled" or self.runner != "compiled":
+                raise ValueError(
+                    "offload_params= assembles streamed parameter slices in "
+                    "the compiled segment runner; it needs engine='compiled' "
+                    f"with runner='compiled' (got engine={self.engine!r}, "
+                    f"runner={self.runner!r})")
+            if self.mesh is not None:
+                raise ValueError(
+                    "offload_params= drives a single Level-2 parameter lane; "
+                    "sharded streams (mesh=) are not supported yet")
+            if self.journal_dir is not None:
+                raise ValueError(
+                    "offload_params= keeps transient parameter blobs in "
+                    "Level-2; journaling (journal_dir=/resume=) tracks "
+                    "boundary states only and cannot replay them")
+            if self.storage == "compressed":
+                raise ValueError(
+                    "offload_params= reads blobs back via non-promoting "
+                    "peek, which storage='compressed' would return encoded; "
+                    "use 'ram', 'disk' or 'tiered'")
+            if self.step_memory_budget is not None or \
+                    self.plan_2d is not None:
+                raise ValueError(
+                    "offload_params= is not supported together with 2D "
+                    "plans (step_memory_budget=/plan_2d=)")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -502,9 +545,28 @@ def _select_runner(cfg: OffloadConfig) -> str:
     return "compiled"
 
 
+_EXPERT_LEAF_NAMES = ("w_gate", "w_up", "w_down")
+
+
+def _expert_leaf_ids(xs) -> Tuple[int, ...]:
+    """Flat indices of the per-(layer, expert) MoE parameter leaves in the
+    stacked chain inputs: leaves under a ``'moe'`` subtree named
+    ``w_gate``/``w_up``/``w_down`` (shape ``(n_layers, n_experts, ...)``).
+    ``tree_flatten_with_path`` enumerates leaves in ``tree_flatten`` order,
+    so these indices address the plain flattened list too."""
+    ids = []
+    flat, _ = jax.tree_util.tree_flatten_with_path(xs)
+    for i, (path, leaf) in enumerate(flat):
+        names = [getattr(p, "key", None) for p in path]
+        if "moe" in names and names and names[-1] in _EXPERT_LEAF_NAMES \
+                and np.ndim(leaf) >= 2:
+            ids.append(i)
+    return tuple(ids)
+
+
 def _resolve_schedule(static: _Static, ops: _Ops, params, carry0, xs, batch,
-                      n: int, backend, runner: str = "compiled"
-                      ) -> at.TuneResult:
+                      n: int, backend, runner: str = "compiled",
+                      param_stream_bytes: int = 0) -> at.TuneResult:
     cfg = static.cfg
     tuner = _TUNERS.get(cfg.tuner_id, at.GLOBAL_TUNER)
     if cfg.interval is not None:
@@ -522,6 +584,10 @@ def _resolve_schedule(static: _Static, ops: _Ops, params, carry0, xs, batch,
     tune_name = f"{static.spec.name}:{cfg.engine}"
     if runner == "pallas":
         tune_name += ":pallas"
+    if param_stream_bytes:
+        # param streaming adds per-segment Level-2 read traffic (T_P) to
+        # the interval trade-off — keep its schedule out of the plain cache
+        tune_name += ":pstream"
     if cfg.engine == "compiled":
         # T_A is the *amortised* per-step time of a compiled segment, not a
         # per-step dispatch: probe one advance_segment over a short prefix.
@@ -570,7 +636,8 @@ def _resolve_schedule(static: _Static, ops: _Ops, params, carry0, xs, batch,
                              forward_segment=forward_segment,
                              segment_len=probe_len,
                              state0=carry0, n=n, backend=backend,
-                             store_state0=store_state0, mesh=cfg.mesh)
+                             store_state0=store_state0, mesh=cfg.mesh,
+                             param_stream_bytes=param_stream_bytes)
     else:
         def forward_step(state, k):
             return ops.fwd(params, state, index_xs(xs, k), batch)
@@ -695,6 +762,28 @@ def _fwd_callback(static: _Static, params, carry0, xs, batch):
                 if cur is None or cur.phase == "done" or cur.n != n or \
                         (old_fp is not None and old_fp != fingerprint):
                     recovered = None
+            stream_leaves = None
+            n_experts = 0
+            param_stream_bytes = 0
+            if cfg.offload_params is not None:
+                # host copies of the streamed leaves (frozen np views feed
+                # the Level-2 lane bit-exactly); the runner's xs keep 0-d
+                # placeholders at those flat positions so the treedef — and
+                # with it the jit cache identity — is preserved
+                leaf_ids = _expert_leaf_ids(xs)
+                if not leaf_ids:
+                    raise ValueError(
+                        "offload_params='moe_experts' found no per-expert "
+                        "parameter leaves in the chain inputs (expected "
+                        "stacked MoE weights w_gate/w_up/w_down under a "
+                        "'moe' subtree)")
+                flat_leaves = jax.tree_util.tree_leaves(xs)
+                stream_leaves = {i: np.asarray(flat_leaves[i])
+                                 for i in leaf_ids}
+                n_experts = int(next(iter(
+                    stream_leaves.values())).shape[1])
+                param_stream_bytes = sum(
+                    int(a[0].nbytes) for a in stream_leaves.values())
             if recovered is not None:
                 # the journal cursor pins the schedule: resuming under a
                 # different (I, s) than the crashed run would orphan its
@@ -706,10 +795,13 @@ def _fwd_callback(static: _Static, params, carry0, xs, batch):
             else:
                 tune = _resolve_schedule(static, ops, params, carry0, xs,
                                          batch, n, backend,
-                                         runner=runner_kind)
+                                         runner=runner_kind,
+                                         param_stream_bytes=
+                                         param_stream_bytes)
             engine = AsyncTransferEngine(backend)
             ex = CheckpointExecutor(fwd_op, None)
             runner = None
+            param_stream = None
             if cfg.engine == "compiled":
                 # one jitted advance/reverse call per segment (O(n/I) host
                 # dispatches); the runner also collects per-step input
@@ -719,6 +811,18 @@ def _fwd_callback(static: _Static, params, carry0, xs, batch):
                     # chunk's compute inside advance (advance_with_store)
                     runner = PallasSegmentRunner(ops.cops, params, xs,
                                                  batch, s_l1=tune.slots)
+                elif stream_leaves is not None:
+                    param_stream = ParamStream(engine, stream_leaves,
+                                               n_experts=n_experts)
+                    leaves, treedef = jax.tree_util.tree_flatten(xs)
+                    xs_runner = jax.tree_util.tree_unflatten(treedef, [
+                        np.zeros((), _dtype_of(leaf))
+                        if i in stream_leaves else leaf
+                        for i, leaf in enumerate(leaves)])
+                    runner = ParamStreamSegmentRunner(
+                        ops.cops, params, xs_runner, batch,
+                        s_l1=tune.slots, stream=param_stream,
+                        inner=static.inner)
                 else:
                     runner = CompiledSegmentRunner(ops.cops, params, xs,
                                                    batch, s_l1=tune.slots,
@@ -726,7 +830,7 @@ def _fwd_callback(static: _Static, params, carry0, xs, batch):
             x_n, run = ex.multistage_forward(
                 carry0, n, interval=tune.interval, s_l1=tune.slots,
                 engine=engine, runner=runner, resume_from=recovered,
-                inner=static.inner,
+                inner=static.inner, param_stream=param_stream,
                 run_meta={"fingerprint": fingerprint}
                 if fingerprint is not None else None)
         except BaseException:
@@ -1018,6 +1122,7 @@ def value_and_grad_offloaded(
     state_spec: Optional[Any] = None,
     step_memory_budget: Optional[int] = None,
     plan_2d: Optional[Tuple[int, int]] = None,
+    offload_params: Optional[str] = None,
 ) -> Callable[[Any, Any], Tuple[Any, Any]]:
     """Drop-in ``jax.value_and_grad`` with multistage-offloaded backprop.
 
@@ -1114,6 +1219,19 @@ def value_and_grad_offloaded(
     Gradients stay bit-identical to the 1D plan's (fp32): inner chunking
     only changes *when* interiors are recomputed, never what is computed.
 
+    ``offload_params="moe_experts"`` (compiled engine + runner only)
+    generalises the Level-2 lane from boundary states to *parameters*:
+    the chain's stacked per-(layer, expert) MoE weights
+    (``w_gate``/``w_up``/``w_down``) move to the Level-2 store up front
+    and stream back one blob per (layer, expert) with plan-aware prefetch
+    one segment ahead of both sweeps, so resident parameter memory drops
+    from ``O(n_layers * n_experts)`` to ``O(I * n_experts)``.  Boundary
+    states and expert blobs share one capacity budget under
+    ``storage="tiered"`` (one merged ``ResourceAccessPlan`` drives Belady
+    eviction for both).  Gradients are bit-identical to the non-streamed
+    path; prefetch traffic shows up as ``last_stats().param_prefetches``
+    / ``param_fetch_stalls`` / ``param_bytes_moved``.
+
     Example — a tiny chain, pinned schedule, gradients match autodiff:
 
     >>> import jax, jax.numpy as jnp, numpy as np
@@ -1155,7 +1273,8 @@ def value_and_grad_offloaded(
                         mesh=mesh, state_spec=state_spec,
                         step_memory_budget=step_memory_budget,
                         plan_2d=tuple(plan_2d) if plan_2d is not None
-                        else None)
+                        else None,
+                        offload_params=offload_params)
     vg = jax.value_and_grad(offloaded_loss(spec, cfg))
     vg.chain_spec = spec
     vg.offload_config = cfg

@@ -43,7 +43,8 @@ from jax import lax
 from repro.core.schedule import InnerPlan, SegmentSpec, chunk_length
 
 __all__ = ["CompiledChainOps", "CompiledSegmentRunner",
-           "PallasSegmentRunner", "chunk_length", "inner_chunked_body"]
+           "ParamStreamSegmentRunner", "PallasSegmentRunner", "chunk_length",
+           "inner_chunked_body"]
 
 tree_map = jax.tree_util.tree_map
 
@@ -264,6 +265,33 @@ class CompiledSegmentRunner:
             jnp.concatenate([self.dx_segments[b][i] for b in begins])
             for i in range(num_leaves)
         ]
+
+
+class ParamStreamSegmentRunner(CompiledSegmentRunner):
+    """Compiled segment runner whose streamed xs leaves come from Level 2.
+
+    ``stream`` is a :class:`~repro.core.executor.ParamStream`; ``xs`` holds
+    0-d placeholder leaves at the streamed flat positions (so the treedef —
+    which keys the compile cache — is unchanged).  ``_slice`` assembles the
+    streamed leaves' segment slices from prefetched expert blobs and slices
+    the resident leaves as usual, so the arrays entering
+    ``advance_segment``/``reverse_segment`` are numerically identical to the
+    non-streaming runner's — gradients stay bit-identical (the jit cache is
+    keyed by shapes/dtypes, which the reassembly preserves exactly).
+    """
+
+    def __init__(self, ops: CompiledChainOps, params, xs, batch, *,
+                 s_l1: int, stream, inner: "InnerPlan | None" = None):
+        super().__init__(ops, params, xs, batch, s_l1=s_l1, inner=inner)
+        self.stream = stream
+
+    def _slice(self, seg: SegmentSpec):
+        leaves, treedef = jax.tree_util.tree_flatten(self.xs)
+        streamed = self.stream.leaf_ids
+        out = [self.stream.gather(i, seg) if i in streamed
+               else leaf[seg.begin:seg.end]
+               for i, leaf in enumerate(leaves)]
+        return jax.tree_util.tree_unflatten(treedef, out)
 
 
 class PallasSegmentRunner(CompiledSegmentRunner):

@@ -101,6 +101,10 @@ class ExecutionStats:
     l2_shard_streams: int = 0    # sharded backend: per-device Level-2 streams
     l2_stream_bytes: tuple = ()  # sharded backend: bytes written per stream
     prefetch_depth: int = 1      # segments of prefetch lead in the reverse
+    # -- parameter streaming lane (offload_params=, e.g. MoE experts) ------
+    param_prefetches: int = 0    # prefetch batches issued (per segment/phase)
+    param_fetch_stalls: int = 0  # param waits that actually blocked compute
+    param_bytes_moved: int = 0   # bytes fetched through the param lane
     fused_segments: int = 0      # pallas runner: segments run as fused kernels
     fused_boundary_copies: int = 0  # pallas runner: DMA boundary copies
     #                                 overlapped with in-kernel compute
@@ -243,6 +247,131 @@ class InterpretedSegmentRunner:
         return adjoint
 
 
+class ParamStream:
+    """Streams large per-step parameter blobs (MoE expert weights) through
+    Level 2 alongside boundary states — the generic "offloadable resource"
+    realisation of the paper's overlap discipline, applied to parameters
+    (vDNN-style weight offload under the multistage schedule).
+
+    ``leaves_by_id`` maps a chain-input leaf id (its ``tree_flatten``
+    position) to a host array of shape ``(n, n_experts, ...)`` — one blob
+    per (step, expert).  Blobs live in the engine's backend under
+    :func:`~repro.core.schedule.expert_key` keys and share the backend's
+    capacity budget with boundary states through merged
+    :class:`~repro.core.schedule.ResourceAccessPlan` orders.
+
+    Determinism contract (what makes the perfmodel's fast-tier peak
+    *exact*): :meth:`populate` writes every blob synchronously on the
+    caller's thread in :meth:`population_order`; after that the only fast
+    tier writers are the engine's single FIFO store thread (boundary
+    states) — all streamed reads go through non-promoting ``peek`` — so
+    the backend's put sequence, and hence its Belady eviction trace and
+    ``fast_peak_bytes``, is replayable by
+    ``perfmodel.fast_peak_bytes_resources``.
+
+    ``expert_counts`` (optional ``(n, n_experts)`` routing statistics from
+    ``models.moe.routing_stats``) orders experts busiest-first within each
+    step, so the lightest-loaded experts spill first under eviction.
+    """
+
+    def __init__(self, engine: AsyncTransferEngine, leaves_by_id: Dict[int, Any],
+                 n_experts: int, expert_counts: Any = None, lead: int = 1):
+        self.engine = engine
+        self.leaves_by_id = {int(k): np.asarray(v)
+                             for k, v in leaves_by_id.items()}
+        if not self.leaves_by_id:
+            raise ValueError("ParamStream needs at least one streamed leaf")
+        self.leaf_ids = tuple(sorted(self.leaves_by_id))
+        self.n_experts = int(n_experts)
+        self.expert_counts = None if expert_counts is None \
+            else np.asarray(expert_counts)
+        self.lead = max(1, int(lead))
+        self.plan: Optional[SegmentPlan] = None
+        self.state_bytes = 0   # boundary-state size, recorded by the forward
+        self.blob_bytes = {li: int(arr[0, 0].nbytes)
+                           for li, arr in self.leaves_by_id.items()}
+        self.step_param_bytes = sum(
+            int(arr[0].nbytes) for arr in self.leaves_by_id.values())
+
+    # -- plan production ------------------------------------------------------
+    def bind(self, plan: SegmentPlan) -> None:
+        self.plan = plan
+
+    def access_plan(self, phase: str) -> "ms.ResourceAccessPlan":
+        """This stream's slice of the generic resource IR for one phase."""
+        assert self.plan is not None, "bind(plan) first"
+        return ms.expert_access_plan(self.plan, self.leaf_ids, self.n_experts,
+                                     self.expert_counts, phase=phase,
+                                     blob_bytes=self.blob_bytes)
+
+    def _expert_order(self, step: int) -> list:
+        order = list(range(self.n_experts))
+        if self.expert_counts is not None:
+            row = self.expert_counts[step]
+            order.sort(key=lambda e: (-int(row[e]), e))
+        return order
+
+    def segment_keys(self, seg: SegmentSpec, phase: str = "reverse") -> list:
+        """One segment's blob keys in the given phase's consumption order
+        (steps reversed for the reverse phase; experts busiest-first within
+        a step — identical ordering to :func:`expert_access_plan`)."""
+        steps = range(seg.begin, seg.end)
+        if phase == "reverse":
+            steps = reversed(list(steps))
+        out = []
+        for k in steps:
+            for e in self._expert_order(k):
+                for li in self.leaf_ids:
+                    out.append(ms.expert_key(li, k, e))
+        return out
+
+    def population_order(self) -> tuple:
+        """Canonical Level-2 write order of :meth:`populate` (each unique
+        key once, soonest forward use first).  The perfmodel's exact-peak
+        replay (``fast_peak_bytes_resources``) consumes the same order."""
+        return self.access_plan("forward").keys()
+
+    # -- Level-2 verbs --------------------------------------------------------
+    def populate(self) -> None:
+        """Synchronously write every blob to Level 2 (main thread, canonical
+        order) so the forward sweep streams them back instead of holding the
+        full expert stack live."""
+        backend = self.engine.backend
+        for key in self.population_order():
+            _, li, step, e = key
+            backend.put(key, self.leaves_by_id[li][step, e])
+
+    def prefetch_segment(self, seg: SegmentSpec,
+                         phase: str = "reverse") -> None:
+        self.engine.prefetch_params_async(self.segment_keys(seg, phase))
+
+    def gather(self, leaf_id: int, seg: SegmentSpec) -> np.ndarray:
+        """Assemble one leaf's ``(seg_len, n_experts, ...)`` slice from
+        streamed blobs (consuming the staged prefetches)."""
+        wait = self.engine.wait_param
+        rows = []
+        for step in range(seg.begin, seg.end):
+            rows.append(np.stack([
+                wait(ms.expert_key(leaf_id, step, e))
+                for e in range(self.n_experts)]))
+        return np.stack(rows)
+
+    def delete_segment(self, seg: SegmentSpec) -> None:
+        """Retire a reversed segment's blobs (their last use is done)."""
+        for key in self.segment_keys(seg, phase="reverse"):
+            self.engine.delete(key)
+
+    def purge(self) -> None:
+        """Best-effort removal of every streamed blob (run teardown)."""
+        if self.plan is None:
+            return
+        for key in self.population_order():
+            try:
+                self.engine.delete(key)
+            except Exception:
+                pass
+
+
 @dataclass
 class MultistageRun:
     """In-flight state of a split forward/reverse multistage execution.
@@ -269,6 +398,7 @@ class MultistageRun:
     own_engine: bool = True
     closed: bool = False
     resume: Optional[RecoveredRun] = None   # set when this run is a resume
+    param_stream: Optional[ParamStream] = None  # streamed-resource lane
 
     def close(self) -> None:
         """Release this run's Level-2 state (idempotent).
@@ -295,6 +425,8 @@ class MultistageRun:
                         self.engine.delete(seg.begin)
                     except Exception:
                         pass
+            if self.param_stream is not None:
+                self.param_stream.purge()
         finally:
             if self.own_engine:
                 try:
@@ -375,6 +507,7 @@ class CheckpointExecutor:
                            resume_from: Optional[RecoveredRun] = None,
                            run_meta: Optional[Dict[str, Any]] = None,
                            inner: Any = None,
+                           param_stream: Optional[ParamStream] = None,
                            ) -> "tuple[Any, MultistageRun]":
         """Phase 1 of the split multistage API: advance the chain to ``x_n``
         while the engine asynchronously streams every ``interval``-th state to
@@ -417,14 +550,37 @@ class CheckpointExecutor:
         jb = _journal_backend(engine)
         run = MultistageRun(n=n, interval=interval, s_l1=s_l1, engine=engine,
                             stats=stats, slots=slots, plan=plan,
-                            runner=runner, own_engine=own_engine)
+                            runner=runner, own_engine=own_engine,
+                            param_stream=param_stream)
         fwd_runner = runner if runner is not None else \
             InterpretedSegmentRunner(self.forward_op, self.backward_op)
         # Plan-aware Level 2: hand a capacity-bounded (tiered) backend the
         # plan's reverse access order so its eviction victim is always the
-        # boundary needed farthest in the future (Belady's rule).
+        # boundary needed farthest in the future (Belady's rule).  With a
+        # parameter stream the order is the merged resource IR instead:
+        # expert blobs rank by their forward consumption, boundary states
+        # (only read back in the reverse phase) shift past all of them.
         set_plan = getattr(engine.backend, "set_plan", None)
-        if set_plan is not None:
+        if param_stream is not None:
+            try:
+                param_stream.bind(plan)
+                param_stream.state_bytes = tree_bytes(state0)
+                if set_plan is not None:
+                    set_plan(ms.merge_access_plans(
+                        param_stream.access_plan("forward"),
+                        plan.resource_access_plan(param_stream.state_bytes)
+                            .shift(len(plan.segments))))
+                # Boundary prefetches must not perturb plan-driven fast-tier
+                # residency either: read via non-promoting peek.
+                engine.prefetch_via_peek = True
+                param_stream.populate()
+            except BaseException:
+                try:
+                    run.close()
+                except Exception:
+                    pass
+                raise
+        elif set_plan is not None:
             set_plan(plan)
         cursor0 = None
         if resume_from is not None:
@@ -503,7 +659,21 @@ class CheckpointExecutor:
             # writer-queue FIFO still orders the store before the segment's
             # cursor, so journal durability semantics are unchanged.
             aws = getattr(fwd_runner, "advance_with_store", None)
+            if param_stream is not None:
+                # Warm the param lane: the first `lead` segments' expert
+                # blobs start moving before any compute does.
+                for pseg in plan.segments[start_idx:start_idx
+                                          + param_stream.lead]:
+                    param_stream.prefetch_segment(pseg, phase="forward")
             for seg in plan.segments[start_idx:]:
+                if param_stream is not None:
+                    # Rolling lead: segment k+lead's blobs fetch behind
+                    # segment k's compute (the paper's overlap discipline,
+                    # applied to parameters).
+                    nxt = seg.sid + param_stream.lead
+                    if nxt < len(plan.segments):
+                        param_stream.prefetch_segment(plan.segments[nxt],
+                                                      phase="forward")
                 if seg.begin in durable:
                     current = fwd_runner.advance(current, seg, stats)
                 elif aws is not None:
@@ -563,9 +733,20 @@ class CheckpointExecutor:
         jb = _journal_backend(engine)
         rec = resume_from if resume_from is not None else run.resume
         t0 = time.perf_counter()
+        ps = run.param_stream
         try:
             adjoint = adjoint0
             engine.wait_stores()
+            if ps is not None:
+                # The forward's store sequence is fully drained (writer
+                # FIFO), so swap in the reverse phase's merged access order:
+                # boundary states and expert blobs interleave by reverse
+                # segment rank under one Belady order.
+                set_plan = getattr(engine.backend, "set_plan", None)
+                if set_plan is not None:
+                    set_plan(ms.merge_access_plans(
+                        run.plan.resource_access_plan(ps.state_bytes),
+                        ps.access_plan("reverse")))
             j_start = len(segs) - 1
             cursor = rec.cursor if rec is not None else None
             if cursor is not None and cursor.phase == "reverse":
@@ -598,13 +779,20 @@ class CheckpointExecutor:
             # `depth` segments of lead while walking backwards.
             for idx in range(j_start, max(j_start - depth, -1), -1):
                 engine.prefetch_async(segs[idx].begin)
+            if ps is not None:
+                for idx in range(j_start, max(j_start - ps.lead, -1), -1):
+                    ps.prefetch_segment(segs[idx], phase="reverse")
             for j in range(j_start, -1, -1):
                 seg = segs[j]
                 if j - depth >= 0:
                     engine.prefetch_async(segs[j - depth].begin)
+                if ps is not None and j - ps.lead >= 0:
+                    ps.prefetch_segment(segs[j - ps.lead], phase="reverse")
                 x_b = engine.wait_prefetch(seg.begin)
                 slots.note_extra(tree_bytes(x_b))
                 adjoint = runner.reverse(x_b, adjoint, seg, slots, stats)
+                if ps is not None:
+                    ps.delete_segment(seg)   # last use of these blobs
                 if jb is not None:
                     artifact = artifact_fn(seg) if artifact_fn is not None \
                         else None
@@ -642,6 +830,9 @@ class CheckpointExecutor:
             stats.l2_staged_peak_bytes = engine.staged_peak_bytes
             stats.store_stall_s = engine.store_stall_s
             stats.prefetch_stall_s = engine.prefetch_stall_s
+            stats.param_prefetches = engine.num_param_prefetches
+            stats.param_fetch_stalls = engine.param_fetch_stalls
+            stats.param_bytes_moved = engine.param_bytes_moved
         except BaseException:
             try:
                 run.close()

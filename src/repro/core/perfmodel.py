@@ -185,6 +185,115 @@ def fast_peak_bytes_model(n: int, interval: int, state_bytes: int,
 
 
 # ---------------------------------------------------------------------------
+# Streamed-resource (expert parameter) extension of the two-tier model
+# ---------------------------------------------------------------------------
+#
+# With ``offload_params`` the Level-2 link moves two resource classes: one
+# boundary state per segment (as above) plus every segment's expert-parameter
+# working set (``interval * step_param_bytes`` fetched behind the previous
+# segment's compute, forward AND reverse).  §3's never-stall rule gains the
+# param term: the link must clear ``T_T_state + I * t_p`` inside ``I * T_A``.
+# The fast tier is shared — ``fast_peak_bytes_resources`` replays the
+# backend's exact put sequence under the merged plan's Belady order, so the
+# modeled peak equals the measured ``fast_peak_bytes`` bit for bit.
+
+
+def expert_traffic_model(n: int, interval: int, step_param_bytes: float,
+                         state_bytes: float, capacity_bytes: float) -> dict:
+    """Level-2 traffic and residency of an expert-streaming run.
+
+    One forward+reverse pass populates every blob once (``n *
+    step_param_bytes``) and reads each twice (once per phase), on top of
+    the boundary-state traffic; residency-wise the streamed working set and
+    the ``ceil(n/I)`` boundaries compete for one ``capacity_bytes`` budget,
+    so ``spilled_bytes`` is what the write-behind pipeline must cycle
+    through the slow tier."""
+    segments = math.ceil(n / interval)
+    seg_param_bytes = interval * float(step_param_bytes)
+    total_param_bytes = n * float(step_param_bytes)
+    resident_demand = total_param_bytes + segments * float(state_bytes)
+    spilled = max(0.0, resident_demand - float(capacity_bytes))
+    return {
+        "segments": segments,
+        "seg_param_bytes": seg_param_bytes,
+        "total_param_bytes": total_param_bytes,
+        # populate once + forward reads + reverse reads
+        "moved_param_bytes": 3 * total_param_bytes,
+        "resident_demand_bytes": resident_demand,
+        "spilled_bytes": spilled,
+    }
+
+
+def choose_interval_with_params(t_a: float, t_t_state: float,
+                                t_p: float) -> int:
+    """§3's ``I = ceil(T_T/T_A)`` extended with per-step parameter traffic.
+
+    ``t_p`` is the transfer time of one step's expert working set
+    (``step_param_bytes / bandwidth``).  A segment of ``I`` steps gives the
+    link ``I * T_A`` to move one boundary state *and* the next segment's
+    params: ``I * T_A >= T_T_state + I * t_p``, i.e.
+    ``I = ceil(T_T_state / (T_A - t_p))``.  When params alone saturate the
+    link (``t_p >= T_A``) no interval avoids stalls — fall back to the
+    state-only rule (the stall then shows up in ``param_fetch_stalls``
+    rather than being hidden by an unboundedly large interval)."""
+    if t_a <= 0:
+        raise ValueError("t_a must be positive")
+    if t_p >= t_a:
+        return optimal_interval(t_t_state, t_a)
+    return max(1, math.ceil(t_t_state / (t_a - t_p)))
+
+
+def fast_peak_bytes_resources(puts, distances: dict,
+                              capacity_bytes: int) -> int:
+    """*Exact* replay of ``TieredStorage``'s fast tier over a heterogeneous
+    put sequence — the streamed-resource generalisation of
+    :func:`fast_peak_bytes_model`.
+
+    ``puts`` is the backend's put order as ``(key, nbytes)`` pairs (for an
+    ``offload_params`` run: the ``ParamStream.population_order`` blobs, then
+    one boundary state per segment — population is synchronous and boundary
+    stores drain through the single FIFO writer, so the order is
+    deterministic); ``distances`` is the merged forward access plan's
+    ``ResourceAccessPlan.distances()``.  The replay mirrors the backend
+    exactly: oversize puts bypass, a re-store drops the old copy first,
+    eviction pops the max-rank victim (unknown keys first, LRU; then
+    farthest next use) until the budget holds, and the peak is recorded
+    *after* eviction — so the returned value must equal the measured
+    ``fast_peak_bytes`` exactly, which the expert_stream bench asserts at
+    every sweep point."""
+    capacity = int(capacity_bytes)
+    fast: dict = {}
+    seq: dict = {}
+    next_seq = 0
+    fill = 0
+    peak = 0
+
+    def rank(k):
+        d = distances.get(k)
+        if d is None:
+            return (1, -seq.get(k, 0))
+        return (0, d)
+
+    for key, nb in puts:
+        nb = int(nb)
+        if nb > capacity:
+            continue                      # bypasses the fast tier
+        if key in fast:                   # re-store replaces the old copy
+            fill -= fast.pop(key)
+            seq.pop(key, None)
+        fast[key] = nb
+        fill += nb
+        seq[key] = next_seq
+        next_seq += 1
+        while fill > capacity and fast:
+            victim = max(fast, key=rank)
+            fill -= fast.pop(victim)
+            seq.pop(victim, None)
+        peak = max(peak, fill)
+    return peak
+
+
+# ---------------------------------------------------------------------------
 # Sharded (per-device Level-2 streams) model
 # ---------------------------------------------------------------------------
 #

@@ -261,6 +261,165 @@ class TierPlan:
         return len(self.resident)
 
 
+# ---------------------------------------------------------------------------
+# ResourceAccessPlan IR — generic offloadable-resource access traces
+# ---------------------------------------------------------------------------
+#
+# Historically the tiered backend consumed ``SegmentPlan.reverse_access_order``
+# directly, hard-coding Level 2 to boundary states.  The IR below generalises
+# that contract to *any* resource class with a predictable access schedule: an
+# access plan is an ordered trace of ``(resource_key, use_index)`` entries,
+# and any producer can emit one — ``SegmentPlan.resource_access_plan`` for
+# boundary states, :func:`expert_access_plan` for MoE expert parameter blobs
+# (per-expert next-use order derived from routing statistics).  Plans merged
+# with :func:`merge_access_plans` put heterogeneous resource classes under one
+# capacity budget with a single farthest-next-use (Belady) order.
+
+
+@dataclass(frozen=True)
+class ResourceAccess:
+    """One entry of a :class:`ResourceAccessPlan`: resource ``key`` is
+    consumed at trace position ``use_index`` (smaller = needed sooner).
+    ``size_bytes`` (0 = unknown) feeds heterogeneous-size residency
+    accounting (:meth:`ResourceAccessPlan.tier_residency`)."""
+
+    key: Any
+    use_index: int
+    size_bytes: int = 0
+
+
+@dataclass(frozen=True)
+class ResourceAccessPlan:
+    """Typed access trace over Level-2 resources — the generic IR behind
+    plan-aware eviction.
+
+    ``use_index`` is the rank of the consuming event (for executor-produced
+    plans: the rank of the consuming segment in its phase), so plans from
+    different producers interleave correctly under
+    :func:`merge_access_plans` (a stable merge: ties keep producer order).
+    A key may appear multiple times; eviction ranks use its *first* (i.e.
+    soonest) use.
+    """
+
+    accesses: Tuple[ResourceAccess, ...]
+
+    @property
+    def num_accesses(self) -> int:
+        return len(self.accesses)
+
+    def _first_uses(self) -> dict:
+        first: dict = {}
+        for pos, a in enumerate(self.accesses):
+            if a.key not in first:
+                first[a.key] = (a.use_index, pos)
+        return first
+
+    def keys(self) -> Tuple[Any, ...]:
+        """Unique keys, soonest first use first."""
+        first = self._first_uses()
+        return tuple(sorted(first, key=first.get))
+
+    def distances(self) -> dict:
+        """Belady distance map ``{key: rank}`` — 0 is needed first; the
+        eviction victim maximises this rank.  This is what a capacity-bounded
+        backend's ``set_plan`` consumes."""
+        return {k: d for d, k in enumerate(self.keys())}
+
+    def sizes(self) -> dict:
+        """``{key: size_bytes}`` from each key's first access entry."""
+        first = self._first_uses()
+        out: dict = {}
+        for a in self.accesses:
+            if a.key not in out and a.key in first:
+                out[a.key] = int(a.size_bytes)
+        return out
+
+    def shift(self, offset: int) -> "ResourceAccessPlan":
+        """The same trace displaced ``offset`` use ranks later — how a
+        producer whose consumption starts after another's is composed
+        (e.g. boundary states, only read in the reverse phase, shifted
+        past all forward expert uses)."""
+        return ResourceAccessPlan(accesses=tuple(
+            ResourceAccess(a.key, a.use_index + int(offset), a.size_bytes)
+            for a in self.accesses))
+
+    def tier_residency(self, capacity_bytes: int):
+        """Heterogeneous-size Belady residency: admit keys in ascending
+        next-use order while their bytes fit the budget.  Returns
+        ``(resident_keys, spilled_count, resident_bytes)`` — the generic
+        analogue of :meth:`SegmentPlan.tier_plan`'s uniform-state slot
+        accounting (zero-sized keys are admitted for free)."""
+        sizes = self.sizes()
+        resident, used, spilled = [], 0, 0
+        for k in self.keys():
+            nb = max(0, int(sizes.get(k, 0)))
+            if used + nb <= int(capacity_bytes):
+                resident.append(k)
+                used += nb
+            else:
+                spilled += 1
+        return tuple(resident), spilled, used
+
+
+def merge_access_plans(*plans: ResourceAccessPlan) -> ResourceAccessPlan:
+    """Stable merge by ``use_index``: one joint farthest-next-use order over
+    every resource class (ties resolve in producer-argument order)."""
+    acc = [a for p in plans for a in p.accesses]
+    acc.sort(key=lambda a: a.use_index)  # stable: ties keep producer order
+    return ResourceAccessPlan(accesses=tuple(acc))
+
+
+def expert_key(leaf_id: int, step: int, expert: int) -> tuple:
+    """Level-2 key of one expert's parameter blob for one chain step:
+    ``("xp", leaf_id, step, expert)``.  Deliberately non-``int``: the
+    executor's resume path classifies durable *boundary* keys by int-ness,
+    and ``MultistageRun.close`` purges expert keys separately."""
+    return ("xp", int(leaf_id), int(step), int(expert))
+
+
+def expert_access_plan(plan: "SegmentPlan", leaf_ids, n_experts: int,
+                       expert_counts=None, *, phase: str = "reverse",
+                       blob_bytes=0) -> ResourceAccessPlan:
+    """Producer 2 of the generic resource IR: MoE expert parameter blobs in
+    the order the given phase consumes them.
+
+    ``phase="forward"`` ranks accesses by segment ``sid`` (each segment's
+    compute reads its steps' experts); ``phase="reverse"`` by reverse rank
+    (and steps within a segment in descending order, matching the vjp's
+    consumption).  Within one step, experts are ordered by *descending
+    routed-token count* from ``expert_counts`` (an ``(n, n_experts)`` array
+    of routing statistics, e.g. ``models.moe.routing_stats``): the busiest
+    experts rank soonest, so under joint Belady eviction the lightest-loaded
+    experts spill first.  ``expert_counts=None`` falls back to uniform
+    (expert-index) order.  ``blob_bytes`` is an int or a ``{leaf_id: bytes}``
+    map."""
+    if phase not in ("forward", "reverse"):
+        raise ValueError(f"phase must be 'forward' or 'reverse', got {phase}")
+
+    def blob(li):
+        return int(blob_bytes[li]) if isinstance(blob_bytes, dict) \
+            else int(blob_bytes)
+
+    segs = plan.segments if phase == "forward" \
+        else tuple(reversed(plan.segments))
+    accesses = []
+    for rank, seg in enumerate(segs):
+        steps = range(seg.begin, seg.end)
+        if phase == "reverse":
+            steps = reversed(range(seg.begin, seg.end))
+        for k in steps:
+            order = list(range(n_experts))
+            if expert_counts is not None:
+                row = expert_counts[k]
+                order.sort(key=lambda e: (-int(row[e]), e))
+            for e in order:
+                for li in leaf_ids:
+                    accesses.append(ResourceAccess(
+                        key=expert_key(li, k, e), use_index=rank,
+                        size_bytes=blob(li)))
+    return ResourceAccessPlan(accesses=tuple(accesses))
+
+
 @dataclass(frozen=True)
 class RunCursor:
     """Serializable position of a multistage run inside its plan —
@@ -366,6 +525,17 @@ class SegmentPlan:
         plan-aware: the next-needed boundary is always the *largest*
         remaining begin, so the Belady victim is the smallest."""
         return tuple(seg.begin for seg in reversed(self.segments))
+
+    def resource_access_plan(self, state_bytes: int = 0) -> ResourceAccessPlan:
+        """Producer 1 of the generic resource IR
+        (:class:`ResourceAccessPlan`): this plan's boundary states in exact
+        reverse consumption order — :meth:`reverse_access_order` expressed
+        as a typed access trace, one use per reverse segment rank, so it
+        merges (``merge_access_plans``) with other resource classes' traces
+        into one joint eviction order."""
+        return ResourceAccessPlan(accesses=tuple(
+            ResourceAccess(key=b, use_index=r, size_bytes=int(state_bytes))
+            for r, b in enumerate(self.reverse_access_order())))
 
     def tier_plan(self, capacity_bytes: int, state_bytes: int,
                   t_t_slow: Optional[float] = None,

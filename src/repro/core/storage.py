@@ -22,13 +22,18 @@ bounded, measured precision cost.
 
 ``TieredStorage`` is the capacity-bounded realisation of the paper's "any
 size" claim: a fast tier (host RAM, ``capacity_bytes=``) that write-behind
-evicts cold boundary states to a slow tier (disk, optionally compressed).
-Eviction is plan-aware: ``set_plan`` hands it the ``SegmentPlan``'s exact
-reverse-order access sequence, so the victim is always the boundary whose
-next use is farthest away (Belady's rule — for the multistage schedule,
-the *smallest* segment begin).  The fast tier never exceeds its budget;
-states larger than the whole budget bypass it and go straight to the slow
-tier.
+evicts cold resources to a slow tier (disk, optionally compressed).
+Eviction is plan-aware: ``set_plan`` accepts either a ``SegmentPlan``
+(legacy — its exact reverse-order access sequence) or any
+``ResourceAccessPlan``-shaped object exposing ``distances()`` (the generic
+resource IR from ``repro.core.schedule``), so boundary states and other
+offloadable resources — e.g. MoE expert parameter blobs — share one
+capacity budget with the victim always the key whose next use is farthest
+away (Belady's rule).  Keys the current plan does not mention fall back to
+LRU/FIFO order and evict *before* any plan key; ``untracked_keys`` counts
+how many resident keys each ``set_plan`` call left in that fallback class.
+The fast tier never exceeds its budget; states larger than the whole
+budget bypass it and go straight to the slow tier.
 
 Stored pytrees are frozen to read-only numpy arrays: ``get`` can then hand
 back the canonical copy without a defensive deep-copy, and a caller that
@@ -438,6 +443,7 @@ class TieredStorage:
         self.slow_hits = 0
         self.bytes_written = 0     # total put payload (fast + direct-to-slow)
         self.bytes_read = 0
+        self.untracked_keys = 0    # resident keys the last set_plan() missed
         self._peak_total = 0
 
     def _throttle(self, nbytes: int) -> None:
@@ -446,12 +452,37 @@ class TieredStorage:
 
     # -- plan awareness -------------------------------------------------------
     def set_plan(self, plan: Any) -> None:
-        """Record the reverse-order access sequence of a ``SegmentPlan``:
-        ``distance[key]`` = how many reverse steps until ``key`` is needed
-        (0 = needed first).  The eviction victim maximises this distance."""
+        """Record the future access order of an offload plan:
+        ``distance[key]`` = how many accesses until ``key`` is needed
+        (0 = needed first).  The eviction victim maximises this distance.
+
+        Accepts two plan shapes (duck-typed — *migration note*: the
+        parameter used to be a ``SegmentPlan`` only):
+
+        * anything exposing ``distances() -> {key: rank}`` — the generic
+          ``ResourceAccessPlan`` IR (``repro.core.schedule``), which lets
+          boundary states and expert parameter blobs share one Belady
+          order (build joint orders with ``merge_access_plans``);
+        * a legacy ``SegmentPlan`` via ``reverse_access_order()``.
+
+        Resident keys (fast tier, pending writebacks, or slow tier) that
+        the new plan does *not* mention keep working but degrade to the
+        documented LRU/FIFO fallback — they rank above every plan key and
+        evict first, oldest insertion first (see :meth:`_evict_rank`).
+        Each call counts them into the ``untracked_keys`` stat so silently
+        demoted keys are observable instead of invisible."""
+        dist_fn = getattr(plan, "distances", None)
+        if dist_fn is not None:
+            dist = dict(dist_fn())
+        else:
+            dist = {key: d
+                    for d, key in enumerate(plan.reverse_access_order())}
         with self._lock:
-            self._distance = {
-                key: d for d, key in enumerate(plan.reverse_access_order())}
+            self._distance = dist
+            held = set(self._fast) | set(self._writing)
+        held |= set(self.slow.keys())
+        with self._lock:
+            self.untracked_keys += sum(1 for k in held if k not in dist)
 
     def plan_prefetch_distance(self, plan: Any) -> int:
         """How many segments ahead of need the reverse sweep should promote
@@ -459,6 +490,14 @@ class TieredStorage:
         ``SegmentPlan.tier_plan`` — this method only supplies the observed
         boundary-state size; when nothing is resident yet (or every state
         bypassed the fast tier), it assumes spill."""
+        if not hasattr(plan, "boundaries"):
+            # Generic ResourceAccessPlan IR: no segment structure to hand to
+            # tier_plan, so derive depth from its own residency accounting —
+            # everything resident means no spill (distance 1), else look two
+            # accesses ahead.
+            resident, spilled, _ = plan.tier_residency(self.capacity_bytes)
+            n_keys = len(plan.keys())
+            return 1 if spilled == 0 else min(max(n_keys, 1), 2)
         m = len(plan.boundaries())
         with self._lock:
             sizes = [self._sizes.get(k) for k in plan.boundaries()]
@@ -621,6 +660,33 @@ class TieredStorage:
                                            self.fast_live_bytes)
             self._note_total_peak_locked()
         self._write_behind(to_drain)
+        return host
+
+    def peek(self, key: Any) -> Any:
+        """Read ``key`` *without* promotion: fast-tier hits come back by
+        reference like :meth:`get`, but a slow-tier hit is returned directly
+        — it is never copied into the fast tier, so ``peek`` cannot evict
+        anything and leaves ``fast_live_bytes`` / ``fast_peak_bytes``
+        untouched.  This is the read path for streamed resources whose
+        residency is decided at ``put`` time by the plan's Belady order
+        (promote-on-read would let the *reader* mutate the fast tier and
+        break the exact replay the perfmodel's peak simulator relies on).
+        Hit/byte counters are still maintained."""
+        with self._lock:
+            host = self._fast.get(key)
+            if host is None:
+                host = self._writing.get(key)
+            if host is not None:
+                nb = tree_bytes(host)
+                self.fast_hits += 1
+                self.bytes_read += nb
+        if host is not None:
+            self._throttle(nb)
+            return host
+        host = _freeze_in_place(self.slow.get(key))
+        with self._lock:
+            self.slow_hits += 1
+            self.bytes_read += tree_bytes(host)
         return host
 
     def delete(self, key: Any) -> None:
@@ -1392,6 +1458,21 @@ class AsyncTransferEngine:
         self.num_prefetches = 0
         self.staged_bytes = 0       # host RAM held by staged prefetches
         self.staged_peak_bytes = 0  # its high-water mark across the run
+        # Parameter prefetch lane (streamed resources, e.g. MoE expert
+        # blobs): separate staging so a burst of small param fetches can
+        # never invalidate / race the boundary-state prefetch protocol.
+        # All lane reads go through ``peek`` when the backend offers it, so
+        # fetching a spilled blob never promotes it into the fast tier.
+        self._param_staged: Dict[Any, Any] = {}
+        self._param_events: Dict[Any, threading.Event] = {}
+        self.num_param_prefetches = 0   # prefetch batches issued (per segment)
+        self.param_fetch_stalls = 0     # wait_param calls that had to wait
+        self.param_bytes_moved = 0      # bytes fetched through the lane
+        self.param_stall_s = 0.0
+        # When set, boundary prefetches also read via ``peek`` — the
+        # executor enables this in param-streaming mode so reads cannot
+        # perturb the fast tier's plan-driven residency.
+        self.prefetch_via_peek = False
         self._pending_cursors = 0   # queued cursors (for commit coalescing)
         self._writer = threading.Thread(target=self._writer_loop, daemon=True)
         self._writer.start()
@@ -1487,6 +1568,8 @@ class AsyncTransferEngine:
             dropped = self._prefetched.pop(key, None)
             if dropped is not None:
                 self.staged_bytes -= tree_bytes(dropped)
+            self._param_events.pop(key, None)
+            self._param_staged.pop(key, None)
         self._store_q.put(("delete", key))
 
     def _raise_pending(self) -> None:
@@ -1545,6 +1628,31 @@ class AsyncTransferEngine:
                     "outstanding)") from e
             raise
 
+    def _backend_peek(self, key: Any) -> Any:
+        """Like :meth:`_backend_get` but non-promoting: prefers the
+        backend's ``peek`` (``TieredStorage``) so the read cannot mutate
+        fast-tier residency; plain backends fall back to ``get``, which for
+        ram/disk has no promotion side effect anyway."""
+        if self.faults is not None:
+            self.faults.on_get(key)   # may raise InjectedFault
+        fetch = getattr(self.backend, "peek", None) or self.backend.get
+        try:
+            return fetch(key)
+        except StorageFault:
+            raise
+        except Exception as e:
+            if not self._writer.is_alive() and not self._stop.is_set():
+                raise WriterCrashError(
+                    f"Level-2 writer thread died before {key!r} was "
+                    f"readable ({self._store_q.unfinished_tasks} store(s) "
+                    "outstanding)") from e
+            raise
+
+    def _fetch(self, key: Any) -> Any:
+        if self.prefetch_via_peek:
+            return self._backend_peek(key)
+        return self._backend_get(key)
+
     def prefetch_async(self, key: Any) -> None:
         with self._lock:
             if key in self._prefetched or key in self._prefetch_events:
@@ -1559,7 +1667,7 @@ class AsyncTransferEngine:
             # (or delete + re-store + new prefetch) in the meantime detaches
             # this job, so its value can never be observed stale.
             try:
-                val = self._backend_get(key)
+                val = self._fetch(key)
                 with self._lock:
                     if self._prefetch_events.get(key) is ev:
                         self._prefetched[key] = val
@@ -1583,7 +1691,7 @@ class AsyncTransferEngine:
             # may be missing and a bare KeyError would hide the real cause.
             self._raise_pending()
             t0 = time.perf_counter()
-            val = self._backend_get(key)
+            val = self._fetch(key)
             self.prefetch_stall_s += time.perf_counter() - t0
             self._raise_pending()
             return val
@@ -1602,20 +1710,105 @@ class AsyncTransferEngine:
             # the staged value was invalidated (delete raced this wait):
             # fall back to a demand fetch of the current backend state
             t0 = time.perf_counter()
-            val = self._backend_get(key)
+            val = self._fetch(key)
             self.prefetch_stall_s += time.perf_counter() - t0
+            self._raise_pending()
+        return val
+
+    # -- parameter lane -------------------------------------------------------
+    def prefetch_params_async(self, keys: Iterable[Any]) -> None:
+        """Fetch a batch of resource blobs (one segment's expert params)
+        behind the current segment's compute.  One worker thread drains the
+        whole batch in order, staging each blob under its own key — a
+        ``wait_param`` for the first key can therefore succeed while later
+        keys are still in flight.  Keys already staged or in flight are
+        skipped (idempotent re-issue)."""
+        with self._lock:
+            todo = []
+            for k in keys:
+                if k in self._param_staged or k in self._param_events:
+                    continue
+                ev = threading.Event()
+                self._param_events[k] = ev
+                todo.append((k, ev))
+            if todo:
+                self.num_param_prefetches += 1
+        if not todo:
+            return
+
+        def _job() -> None:
+            for k, ev in todo:
+                try:
+                    val = self._backend_peek(k)
+                    with self._lock:
+                        if self._param_events.get(k) is ev:
+                            self._param_staged[k] = val
+                            self.param_bytes_moved += tree_bytes(val)
+                except Exception as e:
+                    with self._lock:
+                        if self._param_events.get(k) is ev:
+                            self._errors.append(e)
+                finally:
+                    ev.set()
+
+        threading.Thread(target=_job, daemon=True).start()
+
+    def wait_param(self, key: Any) -> Any:
+        """Consume one staged resource blob.  A blob still in flight waits
+        on its event; a blob never prefetched (or invalidated by a delete)
+        demand-peeks the backend — both count as ``param_fetch_stalls``."""
+        _MISSING = object()
+        with self._lock:
+            ev = self._param_events.get(key)
+            val = self._param_staged.pop(key, _MISSING)
+            if val is not _MISSING:
+                self._param_events.pop(key, None)
+        if val is not _MISSING:
+            return val
+        if ev is None:   # never prefetched: demand peek, full stall
+            self._raise_pending()
+            with self._lock:
+                self.param_fetch_stalls += 1
+            t0 = time.perf_counter()
+            val = self._backend_peek(key)
+            self.param_stall_s += time.perf_counter() - t0
+            with self._lock:
+                self.param_bytes_moved += tree_bytes(val)
+            self._raise_pending()
+            return val
+        stalled = not ev.is_set()
+        t0 = time.perf_counter()
+        ev.wait()
+        self.param_stall_s += time.perf_counter() - t0
+        self._raise_pending()
+        with self._lock:
+            if stalled:
+                self.param_fetch_stalls += 1
+            if self._param_events.get(key) is ev:
+                self._param_events.pop(key)
+            val = self._param_staged.pop(key, _MISSING)
+        if val is _MISSING:
+            # invalidated between set and pop (delete raced this wait)
+            t0 = time.perf_counter()
+            val = self._backend_peek(key)
+            self.param_stall_s += time.perf_counter() - t0
+            with self._lock:
+                self.param_bytes_moved += tree_bytes(val)
             self._raise_pending()
         return val
 
     def delete(self, key: Any) -> None:
         """Drop ``key`` from Level 2 *and* invalidate any staged or
         in-flight prefetch of it — a later re-store + prefetch must observe
-        the new value, never the stale staging entry."""
+        the new value, never the stale staging entry.  Both staging lanes
+        (boundary and parameter) are invalidated."""
         with self._lock:
             self._prefetch_events.pop(key, None)   # detaches in-flight jobs
             dropped = self._prefetched.pop(key, None)
             if dropped is not None:
                 self.staged_bytes -= tree_bytes(dropped)
+            self._param_events.pop(key, None)
+            self._param_staged.pop(key, None)
         self.backend.delete(key)
 
     def close(self) -> None:
@@ -1639,12 +1832,15 @@ class AsyncTransferEngine:
         self._store_q.put(("stop",))
         self._writer.join(timeout=2.0)
         with self._lock:
-            events = list(self._prefetch_events.values())
+            events = (list(self._prefetch_events.values())
+                      + list(self._param_events.values()))
         for ev in events:
             ev.wait(timeout=2.0)
         with self._lock:
             self._prefetched.clear()
             self._prefetch_events.clear()
+            self._param_staged.clear()
+            self._param_events.clear()
             self.staged_bytes = 0
         self._raise_pending()
 

@@ -101,6 +101,16 @@ def main(argv=None):
                          "(requires --strategy multistage_async with "
                          "--engine compiled); an infeasible budget fails "
                          "fast naming the smallest feasible one")
+    ap.add_argument("--offload-params", default=None, dest="offload_params",
+                    choices=("moe_experts",),
+                    help="stream these parameters through the Level-2 store "
+                         "alongside boundary states: 'moe_experts' moves "
+                         "the stacked per-(layer, expert) FFN weights off "
+                         "the fast tier and prefetches each segment's blobs "
+                         "one segment ahead (requires --strategy "
+                         "multistage_async with --engine compiled; "
+                         "incompatible with --journal-dir and "
+                         "--sharded-offload)")
     ap.add_argument("--journal-dir", default=None, metavar="DIR",
                     help="write-ahead journal for the offloaded backward "
                          "pass: Level-2 boundary stores become "
@@ -181,10 +191,27 @@ def main(argv=None):
                                   or args.storage is not None
                                   or args.l2_capacity is not None
                                   or args.journal_dir is not None
-                                  or args.step_memory_budget is not None):
+                                  or args.step_memory_budget is not None
+                                  or args.offload_params is not None):
         ap.error("--engine/--interval/--slots/--storage/--l2-capacity/"
-                 "--journal-dir/--step-memory-budget configure an offloaded "
+                 "--journal-dir/--step-memory-budget/--offload-params "
+                 "configure an offloaded "
                  "strategy; pass --strategy as well")
+    if args.offload_params is not None:
+        if args.engine in ("scan", "interpreted"):
+            ap.error("--offload-params streams parameter blobs through the "
+                     "compiled engine's segment runner; drop --engine or "
+                     "pass --engine compiled")
+        if args.journal_dir is not None:
+            ap.error("--offload-params keeps transient parameter blobs in "
+                     "Level-2, which the write-ahead journal cannot "
+                     "replay; drop --journal-dir")
+        if args.sharded_offload:
+            ap.error("--offload-params drives a single Level-2 parameter "
+                     "lane; drop --sharded-offload")
+        if args.storage == "compressed":
+            ap.error("--offload-params reads blobs back uncompressed; use "
+                     "--storage ram/disk/tiered")
     if args.step_memory_budget is not None \
             and args.engine in ("scan", "interpreted"):
         ap.error("--step-memory-budget selects 2D (time x layer) plans, "
@@ -212,6 +239,8 @@ def main(argv=None):
         offload_opts["l2_capacity_bytes"] = args.l2_capacity
     if args.step_memory_budget is not None:
         offload_opts["step_memory_budget"] = args.step_memory_budget
+    if args.offload_params is not None:
+        offload_opts["offload_params"] = args.offload_params
     if args.journal_dir is not None:
         offload_opts["journal_dir"] = args.journal_dir
         # standing resume mode: every gradient call first consults the

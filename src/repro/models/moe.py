@@ -20,6 +20,8 @@ from __future__ import annotations
 import math
 from typing import Any, Optional, Tuple
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
@@ -111,11 +113,14 @@ def _expert_ffn(p, expert_in: jnp.ndarray, act: str,
 
 def moe_einsum(p: Params, x: jnp.ndarray, *, n_experts: int, top_k: int,
                capacity_factor: float = 1.25, act: str = "silu",
-               dt: DTypes = DEFAULT_DTYPES) -> Tuple[jnp.ndarray, jnp.ndarray]:
+               dt: DTypes = DEFAULT_DTYPES, with_stats: bool = False):
     """GShard one-hot dispatch, *grouped*: each batch row is one expert group
     with its own capacity (the standard GSPMD-shardable formulation — the
     group axis shards over data, the expert axis over model).
-    x: (B, S, d).  Returns (y, aux_loss)."""
+    x: (B, S, d).  Returns (y, aux_loss), or (y, aux_loss, stats) with
+    ``with_stats=True`` — ``stats`` holds per-expert routed/kept counts and
+    the ``dropped_tokens`` overflow that :func:`_capacity` would otherwise
+    drop silently (see :func:`routing_stats`)."""
     G, S, d = x.shape
     xg = x
     weights, idx, aux = _route(p, xg, n_experts, top_k)
@@ -124,11 +129,16 @@ def moe_einsum(p: Params, x: jnp.ndarray, *, n_experts: int, top_k: int,
     dispatch = jnp.zeros((G, S, n_experts, C), dtype=dt.compute)
     combine = jnp.zeros((G, S, n_experts, C), dtype=jnp.float32)
     prior = jnp.zeros((G, n_experts), jnp.int32)
+    routed_e = jnp.zeros((n_experts,), jnp.int32)
+    kept_e = jnp.zeros((n_experts,), jnp.int32)
     for i in range(top_k):
         mask_i = jax.nn.one_hot(idx[..., i], n_experts, dtype=jnp.int32)
         pos_i = jnp.cumsum(mask_i, axis=1) - 1 + prior[:, None, :]
         prior = prior + jnp.sum(mask_i, axis=1)
         keep = (pos_i < C) & (mask_i > 0)
+        if with_stats:
+            routed_e = routed_e + jnp.sum(mask_i, axis=(0, 1))
+            kept_e = kept_e + jnp.sum(keep.astype(jnp.int32), axis=(0, 1))
         oh_pos = jax.nn.one_hot(jnp.where(keep, pos_i, C), C + 1,
                                 dtype=dt.compute)[..., :C]  # (G,S,E,C)
         d_i = oh_pos * keep.astype(dt.compute)[..., None]
@@ -142,18 +152,26 @@ def moe_einsum(p: Params, x: jnp.ndarray, *, n_experts: int, top_k: int,
     y = y.astype(x.dtype)
     if "shared" in p:
         y = y + mlp(p["shared"], xg, act=act, dt=dt)
+    if with_stats:
+        stats = {"expert_counts": kept_e, "routed_counts": routed_e,
+                 "dropped_tokens": jnp.sum(routed_e - kept_e),
+                 "capacity": C}
+        return y, aux, stats
     return y, aux
 
 
 def moe_sorted(p: Params, x: jnp.ndarray, *, n_experts: int, top_k: int,
                capacity_factor: float = 1.25, act: str = "silu",
-               dt: DTypes = DEFAULT_DTYPES) -> Tuple[jnp.ndarray, jnp.ndarray]:
+               dt: DTypes = DEFAULT_DTYPES, with_stats: bool = False):
     """Sort-based dispatch: same grouping/capacity semantics as
     ``moe_einsum`` (up to drop order) without the O(S*E*C) one-hot dispatch
     tensors.  Dispatch AND combine are pure gathers: the combine uses the
     inverse sort permutation to look up each token's k expert-output slots
     (a scatter-add here replicates under GSPMD and floods the mesh with
-    all-reduces — measured in EXPERIMENTS §Perf, llama4 round 1)."""
+    all-reduces — measured in EXPERIMENTS §Perf, llama4 round 1).
+    ``with_stats=True`` appends the same routed/kept/``dropped_tokens``
+    stats dict as :func:`moe_einsum` (drop *order* differs between the two
+    impls, but the per-expert counts are identical)."""
     G, S, d = x.shape
     weights, idx, aux = _route(p, x, n_experts, top_k)
     C = _capacity(S, n_experts, top_k, capacity_factor)
@@ -177,9 +195,13 @@ def moe_sorted(p: Params, x: jnp.ndarray, *, n_experts: int, top_k: int,
         pos = inv
         slot_bucket = jnp.where(keep[pos], se[pos] * C + rank[pos],
                                 n_experts * C).astype(jnp.int32)  # (S*k,)
-        return bucket_tok, slot_bucket
+        # kept per expert: routed count clamped at capacity (sorted ranks
+        # are contiguous per expert, so exactly min(count, C) slots keep)
+        kept = jnp.minimum(counts, C)
+        return bucket_tok, slot_bucket, counts, kept
 
-    bucket_tok, slot_bucket = jax.vmap(one_group)(x, idx)  # (G,E,C),(G,S*k)
+    bucket_tok, slot_bucket, routed_g, kept_g = \
+        jax.vmap(one_group)(x, idx)                  # (G,E,C),(G,S*k),(G,E)x2
     x_pad = jnp.concatenate(
         [x.astype(dt.compute), jnp.zeros((G, 1, d), dt.compute)], axis=1)
     expert_in = jnp.take_along_axis(
@@ -197,13 +219,59 @@ def moe_sorted(p: Params, x: jnp.ndarray, *, n_experts: int, top_k: int,
                    weights).astype(x.dtype)
     if "shared" in p:
         y = y + mlp(p["shared"], x, act=act, dt=dt)
+    if with_stats:
+        routed_e = jnp.sum(routed_g, axis=0).astype(jnp.int32)
+        kept_e = jnp.sum(kept_g, axis=0).astype(jnp.int32)
+        stats = {"expert_counts": kept_e, "routed_counts": routed_e,
+                 "dropped_tokens": jnp.sum(routed_e - kept_e),
+                 "capacity": C}
+        return y, aux, stats
     return y, aux
 
 
 def moe_apply(p: Params, x: jnp.ndarray, *, n_experts: int, top_k: int,
               capacity_factor: float = 1.25, act: str = "silu",
-              impl: str = "einsum",
-              dt: DTypes = DEFAULT_DTYPES) -> Tuple[jnp.ndarray, jnp.ndarray]:
+              impl: str = "einsum", dt: DTypes = DEFAULT_DTYPES,
+              with_stats: bool = False):
+    """Dispatch to the selected MoE impl.  Returns ``(y, aux_loss)``, or
+    ``(y, aux_loss, stats)`` with ``with_stats=True`` — the opt-in keeps the
+    two-tuple contract every existing caller (``models.transformer._ffn``)
+    relies on, while making the capacity overflow observable: ``stats``
+    carries ``dropped_tokens`` (tokens silently zeroed by :func:`_capacity`)
+    plus per-expert ``expert_counts``/``routed_counts``."""
     fn = {"einsum": moe_einsum, "sorted": moe_sorted}[impl]
     return fn(p, x, n_experts=n_experts, top_k=top_k,
-              capacity_factor=capacity_factor, act=act, dt=dt)
+              capacity_factor=capacity_factor, act=act, dt=dt,
+              with_stats=with_stats)
+
+
+def routing_stats(p: Params, x, *, n_experts: int, top_k: int,
+                  capacity_factor: float = 1.25) -> dict:
+    """Host-side routing statistics of one MoE layer application — the
+    load-accurate export the plan-aware expert streamer consumes
+    (:func:`repro.core.schedule.expert_access_plan` orders each step's
+    experts busiest-first from these counts).
+
+    Returns plain-numpy ``{"expert_counts", "routed_counts",
+    "dropped_tokens", "capacity"}``; ``expert_counts`` are post-capacity
+    *kept* loads, so dropped overflow tokens never inflate an expert's
+    apparent heat (the satellite fix to ``_capacity``'s silent drop)."""
+    x = jnp.asarray(x)
+    G, S, _ = x.shape
+    _, idx, _ = _route(p, x, n_experts, top_k)
+    C = _capacity(S, n_experts, top_k, capacity_factor)
+    prior = jnp.zeros((G, n_experts), jnp.int32)
+    routed_e = jnp.zeros((n_experts,), jnp.int32)
+    kept_e = jnp.zeros((n_experts,), jnp.int32)
+    for i in range(top_k):
+        mask_i = jax.nn.one_hot(idx[..., i], n_experts, dtype=jnp.int32)
+        pos_i = jnp.cumsum(mask_i, axis=1) - 1 + prior[:, None, :]
+        prior = prior + jnp.sum(mask_i, axis=1)
+        keep = (pos_i < C) & (mask_i > 0)
+        routed_e = routed_e + jnp.sum(mask_i, axis=(0, 1))
+        kept_e = kept_e + jnp.sum(keep.astype(jnp.int32), axis=(0, 1))
+    kept = np.asarray(kept_e)
+    routed = np.asarray(routed_e)
+    return {"expert_counts": kept, "routed_counts": routed,
+            "dropped_tokens": int(routed.sum() - kept.sum()),
+            "capacity": int(C)}

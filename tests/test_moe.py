@@ -84,3 +84,50 @@ def test_grads_finite_property(b, s, e, k):
             impl(p_, x, n_experts=e, top_k=k, dt=DT)[0] ** 2))(p)
         assert all(bool(jnp.all(jnp.isfinite(l)))
                    for l in jax.tree_util.tree_leaves(g))
+
+
+def test_capacity_stats_are_load_accurate():
+    """with_stats=True surfaces what _capacity silently drops: routed
+    counts sum to G*S*k, kept == routed - dropped, and the two dispatch
+    implementations agree on every count."""
+    E, k = 4, 1
+    G, S = 1, 64
+    p = init_moe(KEY, 16, 32, E)
+    x = jax.random.normal(jax.random.fold_in(KEY, 7), (G, S, 16))
+    y1, _, s1 = moe_einsum(p, x, n_experts=E, top_k=k, capacity_factor=0.25,
+                           dt=DT, with_stats=True)
+    y2, _, s2 = moe_sorted(p, x, n_experts=E, top_k=k, capacity_factor=0.25,
+                           dt=DT, with_stats=True)
+    routed1 = np.asarray(s1["routed_counts"])
+    kept1 = np.asarray(s1["expert_counts"])
+    assert int(routed1.sum()) == G * S * k
+    assert int(s1["dropped_tokens"]) == int(routed1.sum() - kept1.sum())
+    assert int(s1["dropped_tokens"]) > 0          # the tight capacity bit
+    assert (kept1 <= int(s1["capacity"])).all()
+    np.testing.assert_array_equal(routed1, np.asarray(s2["routed_counts"]))
+    np.testing.assert_array_equal(kept1, np.asarray(s2["expert_counts"]))
+    # the stats opt-in must not change the computed output
+    y_plain, _ = moe_einsum(p, x, n_experts=E, top_k=k, capacity_factor=0.25,
+                            dt=DT)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y_plain))
+    np.testing.assert_array_equal(np.asarray(y2), np.asarray(y2))
+
+
+def test_routing_stats_host_helper_matches_dispatch():
+    """routing_stats (the plan producer's input) replicates the einsum
+    keep-accounting exactly, as plain numpy."""
+    from repro.models.moe import routing_stats
+
+    E, k = 4, 2
+    p = init_moe(KEY, 16, 32, E)
+    x = jax.random.normal(jax.random.fold_in(KEY, 9), (2, 32, 16))
+    rs = routing_stats(p, x, n_experts=E, top_k=k, capacity_factor=0.5)
+    _, _, s = moe_einsum(p, x, n_experts=E, top_k=k, capacity_factor=0.5,
+                         dt=DT, with_stats=True)
+    np.testing.assert_array_equal(rs["expert_counts"],
+                                  np.asarray(s["expert_counts"]))
+    np.testing.assert_array_equal(rs["routed_counts"],
+                                  np.asarray(s["routed_counts"]))
+    assert rs["dropped_tokens"] == int(s["dropped_tokens"])
+    assert rs["capacity"] == int(s["capacity"])
+    assert isinstance(rs["expert_counts"], np.ndarray)

@@ -1,0 +1,167 @@
+"""Parameter streaming (``offload_params="moe_experts"``): expert blobs
+move through the Level-2 lane with plan-aware prefetch, gradients stay
+bit-identical to the non-streamed path, boundary states and expert blobs
+share one tiered capacity budget, and the fast-tier peak is exactly
+replayable from the merged resource-access plan."""
+import jax
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api.frontend import _expert_leaf_ids
+from repro.configs import SMOKE_SHAPE, get_config
+from repro.configs.shapes import make_batch
+from repro.core import perfmodel as pm
+from repro.core import schedule as ms
+from repro.core.executor import ParamStream
+from repro.core.storage import RAMStorage, register_backend, tree_bytes
+from repro.models import get_model
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def moe_setup():
+    cfg = get_config("phi3.5-moe-42b", smoke=True).replace(n_layers=4)
+    m = get_model(cfg)
+    params = m.init(jax.random.fold_in(KEY, 8))
+    batch = make_batch(cfg, SMOKE_SHAPE)
+    vg = api.value_and_grad_offloaded(m.train_loss, interval=2)
+    ref_v, ref_g = vg(params, batch)
+    return m, params, batch, np.asarray(ref_v), ref_g
+
+
+def _assert_bitwise_equal(g, ref_g):
+    la, lb = jax.tree_util.tree_leaves(g), jax.tree_util.tree_leaves(ref_g)
+    assert len(la) == len(lb)
+    for a, b in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_streamed_grads_bit_identical(moe_setup):
+    m, params, batch, ref_v, ref_g = moe_setup
+    vg = api.value_and_grad_offloaded(m.train_loss, interval=2,
+                                      offload_params="moe_experts")
+    v, g = vg(params, batch)
+    np.testing.assert_array_equal(np.asarray(v), ref_v)
+    _assert_bitwise_equal(g, ref_g)
+    st = api.last_stats()
+    assert st.param_prefetches > 0
+    assert st.param_bytes_moved > 0
+    assert st.param_fetch_stalls == 0      # lead=1 hides every fetch
+
+
+def test_streamed_tiered_shares_capacity_and_replays_peak(moe_setup):
+    """Boundary states and expert blobs under one tiered budget: the
+    measured fast-tier peak equals the perfmodel replay of the merged
+    ResourceAccessPlan at every capacity, and gradients never change."""
+    m, params, batch, ref_v, ref_g = moe_setup
+    spec = m.train_loss.chain_spec
+    carry0, xs = spec.prelude(params, batch)
+    state_bytes = tree_bytes(jax.tree_util.tree_map(np.asarray, carry0))
+    leaf_ids = _expert_leaf_ids(xs)
+    assert leaf_ids                        # the MoE chain must expose blobs
+    flat = jax.tree_util.tree_leaves(xs)
+    leaves = {i: np.asarray(flat[i]) for i in leaf_ids}
+    n_experts = next(iter(leaves.values())).shape[1]
+
+    for cap in (1 << 22, 1 << 19, 1 << 17):
+        vg = api.value_and_grad_offloaded(
+            m.train_loss, interval=2, storage="tiered",
+            l2_capacity_bytes=cap, offload_params="moe_experts")
+        v, g = vg(params, batch)
+        np.testing.assert_array_equal(np.asarray(v), ref_v)
+        _assert_bitwise_equal(g, ref_g)
+        st = api.last_stats()
+        assert st.l2_fast_peak_bytes <= cap
+        ps = ParamStream(None, leaves, n_experts=n_experts)
+        ps.bind(api.last_plan())
+        puts = [(k, ps.blob_bytes[k[1]]) for k in ps.population_order()]
+        puts += [(seg.begin, state_bytes)
+                 for seg in api.last_plan().segments]
+        dist = ms.merge_access_plans(
+            ps.access_plan("forward"),
+            api.last_plan().resource_access_plan(state_bytes)
+            .shift(len(api.last_plan().segments))).distances()
+        assert st.l2_fast_peak_bytes == \
+            pm.fast_peak_bytes_resources(puts, dist, cap)
+
+
+def test_expert_blobs_purged_after_run(moe_setup):
+    """The transient expert blobs must not outlive the run: after the
+    gradient returns, no ("xp", ...) key is left in Level-2."""
+    m, params, batch, ref_v, ref_g = moe_setup
+    instances = []
+
+    def factory():
+        b = RAMStorage()
+        instances.append(b)
+        return b
+
+    register_backend("param-stream-probe", factory)
+    vg = api.value_and_grad_offloaded(m.train_loss, interval=2,
+                                      storage="param-stream-probe",
+                                      offload_params="moe_experts")
+    v, g = vg(params, batch)
+    _assert_bitwise_equal(g, ref_g)
+    assert instances
+    leftover = [k for k in instances[-1]._data
+                if isinstance(k, tuple) and k and k[0] == "xp"]
+    assert leftover == []
+
+
+def test_routing_counts_reorder_plan_not_membership():
+    """Routing statistics only reorder the intra-step eviction priority;
+    the set of streamed keys per segment is unchanged (every expert is
+    still fetched — bit-exactness does not ride on the counts)."""
+    leaves = {3: np.zeros((4, 2, 8, 16), np.float32)}
+    plan = ms.segment_plan(n=4, interval=2, s_l1=2)
+    counts = np.array([[0, 9]] * 4)        # expert 1 busiest every step
+    ps_uniform = ParamStream(None, leaves, n_experts=2)
+    ps_counts = ParamStream(None, leaves, n_experts=2, expert_counts=counts)
+    ps_uniform.bind(plan)
+    ps_counts.bind(plan)
+    seg = plan.segments[0]
+    ku = ps_uniform.segment_keys(seg)
+    kc = ps_counts.segment_keys(seg)
+    assert sorted(ku) == sorted(kc)        # same membership
+    assert ku != kc                        # different priority order
+    assert kc[0] == ms.expert_key(3, seg.end - 1, 1)   # busiest first
+    # and the access-plan producer agrees with the runtime key order
+    # (the reverse plan opens with the last segment, reversed sweep)
+    last = plan.segments[-1]
+    kl = ps_counts.segment_keys(last)
+    ap = ps_counts.access_plan("reverse")
+    assert [a.key for a in ap.accesses[:len(kl)]] == list(kl)
+
+
+def test_offload_params_validation():
+    bad = [
+        dict(offload_params="fft_twiddles"),
+        dict(offload_params="moe_experts", strategy="revolve"),
+        dict(offload_params="moe_experts", engine="interpreted"),
+        dict(offload_params="moe_experts", engine="scan"),
+        dict(offload_params="moe_experts", runner="pallas"),
+        dict(offload_params="moe_experts", storage="compressed"),
+        dict(offload_params="moe_experts", journal_dir="/tmp/x"),
+        dict(offload_params="moe_experts", step_memory_budget=1 << 20),
+        dict(offload_params="moe_experts", plan_2d=(2, 1)),
+    ]
+    for kw in bad:
+        with pytest.raises(ValueError):
+            api.OffloadConfig(**kw)
+    # the valid combination constructs fine
+    api.OffloadConfig(offload_params="moe_experts")
+
+
+def test_offload_params_needs_expert_leaves():
+    """A chain with no per-expert leaves fails fast with a clear error
+    instead of silently streaming nothing."""
+    cfg = get_config("lstm-paper", smoke=True)
+    m = get_model(cfg)
+    params = m.init(KEY)
+    batch = make_batch(cfg, SMOKE_SHAPE)
+    vg = api.value_and_grad_offloaded(m.train_loss, interval=2,
+                                      offload_params="moe_experts")
+    with pytest.raises(Exception, match="no per-expert"):
+        vg(params, batch)

@@ -898,3 +898,99 @@ def test_journal_end_run_compacts_to_marker_epoch(tmp_path):
     assert rec.cursor is not None and rec.cursor.phase == "done"
     assert rec.meta == {"n": 8}
     js2.close()
+
+
+# ---------------------------------------------------------------------------
+# generic resource plans: untracked keys, heterogeneous sizes, peek
+# ---------------------------------------------------------------------------
+
+
+def test_set_plan_counts_untracked_keys():
+    """Keys held outside the registered plan are not silently invisible:
+    set_plan counts them (untracked_keys) and they fall back to LRU/FIFO
+    eviction order instead of Belady."""
+    ts = TieredStorage(capacity_bytes=10 * _NB)
+    for k in ("stray-a", "stray-b", 0, 1):
+        ts.put(k, _state(0))
+    plan = ms.ResourceAccessPlan(tuple(
+        ms.ResourceAccess(key=k, use_index=i, size_bytes=_NB)
+        for i, k in enumerate([1, 0])))
+    ts.set_plan(plan)
+    assert ts.untracked_keys == 2          # the two strays
+    ts.set_plan(plan)
+    assert ts.untracked_keys == 4          # cumulative across re-plans
+
+
+def test_untracked_keys_evicted_before_plan_keys():
+    """LRU fallback: under pressure the strays go first (oldest first),
+    and among plan keys the farthest next use goes first."""
+    ts = TieredStorage(capacity_bytes=2 * _NB)
+    plan = ms.ResourceAccessPlan(tuple(
+        ms.ResourceAccess(key=k, use_index=i, size_bytes=_NB)
+        for i, k in enumerate(["hot", "warm"])))
+    ts.set_plan(plan)
+    ts.put("stray", _state(0))             # not in the plan
+    ts.put("hot", _state(1))
+    ts.put("warm", _state(2))              # evicts the stray, not a plan key
+    assert sorted(ts._fast) == ["hot", "warm"]
+    assert "stray" in ts.slow
+
+
+def test_belady_eviction_heterogeneous_key_sizes():
+    """Belady under mixed sizes: small boundary states and a large expert
+    blob share one budget; eviction still picks the farthest next use and
+    the fast tier never exceeds capacity even when one victim is not
+    enough to admit the incoming large blob."""
+    blob = {"w": np.zeros((4, 4, 4), np.float32)}   # 4x a boundary state
+    blob_nb = tree_bytes(blob)
+    assert blob_nb == 4 * _NB
+    # access order: blob first, then boundaries nearest-first
+    merged = ms.merge_access_plans(
+        ms.ResourceAccessPlan((
+            ms.ResourceAccess(key=("xp", 0, 0, 0), use_index=0,
+                              size_bytes=blob_nb),)),
+        ms.ResourceAccessPlan(tuple(
+            ms.ResourceAccess(key=k, use_index=1 + i, size_bytes=_NB)
+            for i, k in enumerate([0, 1, 2]))))
+    ts = TieredStorage(capacity_bytes=5 * _NB)
+    ts.set_plan(merged)
+    for k in (0, 1, 2):
+        ts.put(k, _state(k))
+    ts.put(("xp", 0, 0, 0), blob)          # needs 4*_NB: evicts 2 then 1
+    assert ts.fast_live_bytes <= 5 * _NB
+    assert ts.fast_peak_bytes <= 5 * _NB
+    assert ("xp", 0, 0, 0) in ts._fast     # nearest use stays resident
+    assert 0 in ts._fast                   # next-nearest boundary survives
+    assert sorted(k for k in (1, 2) if k in ts.slow) == [1, 2]
+    assert ts.evictions == 2
+    # replay model agrees exactly with the measured peak
+    from repro.core import perfmodel as pm
+
+    puts = [(0, _NB), (1, _NB), (2, _NB), (("xp", 0, 0, 0), blob_nb)]
+    assert pm.fast_peak_bytes_resources(
+        puts, merged.distances(), 5 * _NB) == ts.fast_peak_bytes
+
+
+def test_tiered_peek_does_not_promote():
+    """peek() is the parameter lane's read: a slow-tier hit comes back
+    frozen but is NOT promoted into the fast tier, so reads can never
+    perturb the plan-driven residency (what makes the fast-tier peak
+    exactly replayable)."""
+    plan = ms.segment_plan(n=4, interval=1, s_l1=1)
+    ts = TieredStorage(capacity_bytes=2 * _NB)
+    ts.set_plan(plan)
+    for k in range(4):
+        ts.put(k, _state(k))
+    assert sorted(ts._fast) == [2, 3]
+    got = ts.peek(0)                       # spilled: served from slow
+    np.testing.assert_array_equal(got["a"], _state(0)["a"])
+    assert ts.promotions == 0
+    assert 0 not in ts._fast
+    assert ts.slow_hits == 1
+    got = ts.peek(3)                       # resident: served from fast
+    np.testing.assert_array_equal(got["a"], _state(3)["a"])
+    assert ts.fast_hits == 1
+    with pytest.raises(KeyError):          # missing raises, like get()
+        ts.peek("missing")
+    with pytest.raises(ValueError):        # frozen like get()
+        ts.peek(0)["a"][0, 0] = 99.0
