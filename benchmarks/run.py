@@ -8,7 +8,11 @@ payload (recompute factor, stall seconds, wall time and host-dispatch counts
 per strategy, plus the compiled-vs-interpreted engine comparison) is written
 to ``BENCH_overhead.json`` at the repo root — CI uploads it on main as the
 perf-trajectory artifact.  The kernel benchmark's fused-vs-compiled
-head-to-head payload is merged into the same file under ``"kernels"``.
+head-to-head payload is merged into the same file under ``"kernels"``, and
+the multi-tenant serving trace (latency percentiles, preemption count,
+admission-contract audit) under ``"serve"``.
+
+``--only`` takes comma-separated substrings (``--only fig5,serve``).
 
 Sections are imported lazily, one at a time: a module that fails to import
 is reported as SKIPPED with its traceback instead of aborting the whole
@@ -31,6 +35,7 @@ ALL = [
     ("fig5_measured_overhead", "benchmarks.bench_overhead"),
     ("sec3_perf_model", "benchmarks.bench_perfmodel"),
     ("kernel_rooflines", "benchmarks.bench_kernels"),
+    ("serve_scheduler", "benchmarks.bench_serve"),
 ]
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -59,8 +64,9 @@ def run(only=None, smoke=False, out_path=OVERHEAD_JSON, sections=None):
     skipped = []
     payloads = {}
     selected = 0
+    patterns = [p for p in (only or "").split(",") if p]
     for name, module_path in (ALL if sections is None else sections):
-        if only and only not in name:
+        if patterns and not any(p in name for p in patterns):
             continue
         selected += 1
         print(f"\n== {name} ==")
@@ -82,11 +88,16 @@ def run(only=None, smoke=False, out_path=OVERHEAD_JSON, sections=None):
             traceback.print_exc()
             failures.append((name, repr(e)))
     overhead = payloads.get("fig5_measured_overhead")
-    if overhead is not None:
-        doc = {"smoke": smoke, "payload": overhead}
+    serve = payloads.get("serve_scheduler")
+    if overhead is not None or serve is not None:
+        doc = {"smoke": smoke}
+        if overhead is not None:
+            doc["payload"] = overhead
         kernels = payloads.get("kernel_rooflines")
         if kernels is not None:
             doc["kernels"] = kernels
+        if serve is not None:
+            doc["serve"] = serve
         with open(out_path, "w") as f:
             json.dump(doc, f, indent=2, sort_keys=True)
         print(f"\nwrote {out_path}")

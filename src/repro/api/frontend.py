@@ -64,7 +64,8 @@ from repro.core.compiled_ops import (CompiledChainOps, CompiledSegmentRunner,
 from repro.core.executor import (CheckpointExecutor, ExecutionStats,
                                  ParamStream)
 from repro.core.multistage_scan import multistage_scan
-from repro.core.storage import AsyncTransferEngine, make_backend
+from repro.core.storage import (AsyncTransferEngine, JournaledStorage,
+                                make_backend)
 
 STRATEGIES = ("multistage_async", "revolve", "conventional")
 ENGINES = ("compiled", "interpreted", "scan")
@@ -87,6 +88,13 @@ class OffloadConfig:
     journal_repair: bool = False      # truncate a CRC-damaged journal on open
     autotune: bool = True
     tuner_id: int = 0                 # key into the tuner registry
+    backend_id: int = 0               # key into the shared-backend registry
+    #                                   (0 = build a private backend from
+    #                                   ``storage``; nonzero = the caller
+    #                                   passed backend= — a live Level-2
+    #                                   store shared across transforms, e.g.
+    #                                   a NamespacedStorage view of one
+    #                                   capacity-bounded TieredStorage)
     engine: str = "compiled"          # "compiled" (per-segment XLA calls) |
     #                                   "interpreted" (per-step Python ops) |
     #                                   "scan" (trace-native, one XLA call)
@@ -134,6 +142,11 @@ class OffloadConfig:
                 "l2_capacity_bytes only applies to storage='tiered' "
                 f"(got storage={self.storage!r}); the unbounded backends "
                 "have no budget to enforce")
+        if self.backend_id and self.mesh is not None:
+            raise ValueError(
+                "backend= hands the transform one already-built Level-2 "
+                "store; sharded per-device streams (mesh=) must be built "
+                "from a storage kind instead")
         if self.resume and self.journal_dir is None:
             raise ValueError(
                 "resume=True needs journal_dir= (there is nothing to "
@@ -277,6 +290,24 @@ def _register_tuner(tuner: Optional[at.AutoTuner]) -> int:
     return tid
 
 
+# Same weak-registry pattern for caller-supplied Level-2 backends: the
+# OffloadConfig must stay a hashable frozen dataclass, so the live backend
+# object is parked here and the config carries only its id.  The transform
+# keeps a strong reference (``vg.backend``), so the entry lives exactly as
+# long as some caller can still invoke the transform.
+_SHARED_BACKENDS: "weakref.WeakValueDictionary[int, Any]" = \
+    weakref.WeakValueDictionary()
+_SHARED_BACKEND_IDS = itertools.count(1)
+
+
+def _register_shared_backend(backend: Optional[Any]) -> int:
+    if backend is None:
+        return 0
+    bid = next(_SHARED_BACKEND_IDS)
+    _SHARED_BACKENDS[bid] = backend
+    return bid
+
+
 @dataclasses.dataclass
 class _RunRecord:
     strategy: str
@@ -358,6 +389,20 @@ def _make_backend(cfg: OffloadConfig):
     backends added via ``register_backend`` work here unmodified).  Returns
     (backend, tmpdir) — tmpdir is set when we created a temp Level-2
     directory that must be removed when the run is disposed."""
+    if cfg.backend_id:
+        backend = _SHARED_BACKENDS.get(cfg.backend_id)
+        if backend is None:
+            raise ValueError(
+                "the backend= object this transform was built over is no "
+                "longer alive; hold a reference to the transform (or the "
+                "backend) for as long as it is called")
+        if cfg.journal_dir is not None:
+            # Journal composes OUTSIDE the shared store: the WAL records the
+            # run's raw (un-namespaced) keys, so a resume replays into
+            # whatever namespace the new backend view carries.
+            backend = JournaledStorage(backend, cfg.journal_dir,
+                                       repair=cfg.journal_repair)
+        return backend, None
     tmpdir = None
     kwargs = {}
     if cfg.storage == "disk" or cfg.storage == "tiered" or (
@@ -1110,6 +1155,7 @@ def value_and_grad_offloaded(
     storage: str = "ram",
     storage_dir: Optional[str] = None,
     l2_capacity_bytes: Optional[int] = None,
+    backend: Optional[Any] = None,
     journal_dir: Optional[str] = None,
     resume: bool = False,
     journal_repair: bool = False,
@@ -1152,6 +1198,16 @@ def value_and_grad_offloaded(
     *both* tiers, choosing ``I`` from
     the capacity-aware effective transfer time (a budget that forces
     spills yields a larger interval so the slow tier keeps up).
+
+    ``backend=`` bypasses the storage kinds entirely and hands the
+    transform a live, already-built Level-2 store — the multi-tenant
+    serving path passes a ``NamespacedStorage`` view of ONE shared
+    capacity-bounded ``TieredStorage`` here, so concurrent runs obey a
+    common fast-tier budget and per-tenant quotas
+    (``TieredStorage.set_quota``).  Mutually exclusive with
+    ``storage``/``storage_dir``/``l2_capacity_bytes``; ``journal_dir``
+    still composes on top (the WAL records the run's own keys, outside the
+    shared namespace).  The shared store is never closed by run disposal.
 
     ``journal_dir`` makes the offloaded run *crash-consistent*: every
     Level-2 store/delete is write-ahead-logged (CRC + fsync) together
@@ -1251,6 +1307,19 @@ def value_and_grad_offloaded(
     >>> bool(np.allclose(grads["w"], ref_grads["w"]))
     True
     """
+    if backend is not None:
+        # ``backend=`` hands the transform a live, already-built Level-2
+        # store (typically a NamespacedStorage view of one shared
+        # capacity-bounded TieredStorage, so concurrent runs obey a common
+        # budget and per-tenant quotas).  It replaces the storage kind
+        # entirely; a journal_dir still composes on top.
+        if storage != "ram" or storage_dir is not None or \
+                l2_capacity_bytes is not None:
+            raise ValueError(
+                "pass either backend= (an already-built Level-2 store) or "
+                "the storage=/storage_dir=/l2_capacity_bytes= kind knobs, "
+                "not both")
+        storage = "shared"
     spec = _as_chain_spec(loss_fn)
     if spec is None:
         if not fallback:
@@ -1269,6 +1338,7 @@ def value_and_grad_offloaded(
                         journal_dir=journal_dir, resume=resume,
                         journal_repair=journal_repair,
                         autotune=autotune, tuner_id=_register_tuner(tuner),
+                        backend_id=_register_shared_backend(backend),
                         engine=engine, runner=runner,
                         mesh=mesh, state_spec=state_spec,
                         step_memory_budget=step_memory_budget,
@@ -1278,8 +1348,9 @@ def value_and_grad_offloaded(
     vg = jax.value_and_grad(offloaded_loss(spec, cfg))
     vg.chain_spec = spec
     vg.offload_config = cfg
-    # keep the weak registry entry alive for as long as the transform is
+    # keep the weak registry entries alive for as long as the transform is
     vg.tuner = tuner
+    vg.backend = backend
     return vg
 
 

@@ -99,6 +99,14 @@ class FaultPlan:
     fail_get_at: Optional[int] = None
     truncate_journal_at_store: Optional[int] = None
     flip_byte_at_store: Optional[int] = None
+    # Event-driven preemption: while the event is set, the writer thread
+    # dies at its next store (same observable outcome as
+    # ``kill_writer_at_store``, but triggered asynchronously by a
+    # scheduler instead of at a precomputed count).  The serving layer uses
+    # this to preempt a running offloaded train step at a clean journal
+    # boundary: the run raises WriterCrashError, the journal keeps every
+    # fsynced segment, and ``resume_from=`` replays bit-identically.
+    preempt_on: Optional[threading.Event] = None
 
     def __post_init__(self):
         for name in ("kill_writer_at_store", "fail_get_at",
@@ -140,6 +148,11 @@ class FaultInjector:
             self._fire("kill_writer", k)
             raise WriterKilled(
                 f"injected writer death at store {k} (key {key!r})")
+        if self.plan.preempt_on is not None and self.plan.preempt_on.is_set():
+            self._fire("preempt", k)
+            raise WriterKilled(
+                f"preemption requested; writer dying at store {k} "
+                f"(key {key!r})")
 
     def on_get(self, key) -> None:
         k = self._count("gets")
@@ -191,3 +204,23 @@ def inject(plan: FaultPlan) -> Iterator[FaultInjector]:
         yield injector
     finally:
         _ACTIVE = prev
+
+
+def is_storage_fault(err: BaseException) -> bool:
+    """True if ``err`` is (or transitively wraps) a typed StorageFault.
+
+    Host exceptions crossing ``jax.io_callback`` come back as
+    ``XlaRuntimeError`` with the original type name embedded in the
+    message, so this matches both the ``__cause__``/``__context__`` chain
+    and the text — the predicate retry/preemption handlers use to decide
+    whether a failed step is resumable."""
+    seen = set()
+    e: Optional[BaseException] = err
+    while e is not None and id(e) not in seen:
+        seen.add(id(e))
+        if isinstance(e, StorageFault):
+            return True
+        e = e.__cause__ or e.__context__
+    return any(name in str(err) for name in
+               ("StorageFault", "WriterCrashError", "ChecksumError",
+                "TornRecordError", "InjectedFault"))

@@ -184,6 +184,26 @@ def fast_peak_bytes_model(n: int, interval: int, state_bytes: int,
     return min(segments, k) * int(state_bytes)
 
 
+def admitted_fast_peak_model(n: int, interval: int, state_bytes: int,
+                             capacity_bytes: int, *,
+                             extra_states: int = 0) -> int:
+    """Admission-control upper bound on a run's fast-tier footprint.
+
+    :func:`fast_peak_bytes_model` counts segment boundaries only; a
+    *journaled* run additionally stores the final carry under
+    ``FINAL_STATE_KEY``, so a scheduler admitting a preemptible train job
+    must budget ``extra_states=1`` or the measured peak can exceed the
+    prediction by one state and falsify the admission contract.  Decode
+    sessions use ``extra_states=0`` with ``n == interval`` (their cache is
+    one resident "state").
+    """
+    if extra_states < 0:
+        raise ValueError(f"extra_states must be >= 0, got {extra_states}")
+    segments = math.ceil(n / interval) + extra_states
+    k = fast_tier_slots(capacity_bytes, state_bytes)
+    return min(segments, k) * int(state_bytes)
+
+
 # ---------------------------------------------------------------------------
 # Streamed-resource (expert parameter) extension of the two-tier model
 # ---------------------------------------------------------------------------

@@ -434,6 +434,19 @@ class TieredStorage:
         self._seq: Dict[Any, int] = {}      # insertion order (FIFO fallback)
         self._next_seq = 0
         self._distance: Dict[Any, int] = {}  # plan key -> reverse-use distance
+        # Multi-tenant fast-tier quotas.  Keys of the form
+        # ``(namespace, inner_key)`` whose namespace was registered via
+        # :meth:`register_namespace` are charged to that namespace's tenant;
+        # a tenant over its quota evicts ITS OWN coldest residents (never
+        # another tenant's), so one tenant's burst cannot push a
+        # well-behaved neighbour's boundaries to the slow tier.
+        self._quota: Dict[Any, int] = {}        # tenant -> fast byte quota
+        self._ns_tenant: Dict[Any, Any] = {}    # namespace -> tenant
+        self._ns_cap: Dict[Any, int] = {}       # namespace -> fast byte cap
+        self.tenant_fast_bytes: Dict[Any, int] = {}
+        self.tenant_fast_peak: Dict[Any, int] = {}
+        self.ns_fast_bytes: Dict[Any, int] = {}
+        self.ns_fast_peak: Dict[Any, int] = {}
         # -- instrumentation ---------------------------------------------------
         self.fast_live_bytes = 0
         self.fast_peak_bytes = 0   # high-water fast tier: must obey capacity
@@ -507,6 +520,139 @@ class TieredStorage:
         return plan.tier_plan(self.capacity_bytes,
                               state).prefetch_distance
 
+    # -- multi-tenant quotas --------------------------------------------------
+    def set_quota(self, tenant: Any, max_fast_bytes: int) -> None:
+        """Cap ``tenant``'s fast-tier residency at ``max_fast_bytes``.
+
+        The quota bounds *fast-tier* bytes only (the point of the two-tier
+        design: the slow tier absorbs any amount); a single state larger
+        than the quota bypasses the fast tier entirely, exactly like the
+        global-capacity bypass, so ``tenant_fast_bytes[t] <= quota[t]``
+        holds at every instant."""
+        if max_fast_bytes <= 0:
+            raise ValueError(
+                f"need max_fast_bytes > 0, got {max_fast_bytes}")
+        with self._lock:
+            self._quota[tenant] = int(max_fast_bytes)
+            self.tenant_fast_bytes.setdefault(tenant, 0)
+            self.tenant_fast_peak.setdefault(tenant, 0)
+
+    def quota_of(self, tenant: Any) -> Optional[int]:
+        with self._lock:
+            return self._quota.get(tenant)
+
+    def register_namespace(self, namespace: Any, tenant: Any,
+                           max_fast_bytes: Optional[int] = None) -> None:
+        """Charge keys of the form ``(namespace, *)`` to ``tenant``'s quota
+        (namespaces are how :class:`NamespacedStorage` keeps concurrent
+        runs' integer keys from colliding on the shared tier).
+
+        ``max_fast_bytes`` additionally caps THIS namespace's fast-tier
+        residency — the serving scheduler registers every admitted request
+        with its perfmodel-predicted peak here, which is what makes the
+        admission contract (*measured* per-request fast peak never exceeds
+        the *predicted* one) structural rather than aspirational: a run
+        with spare tenant quota still cannot hold more fast bytes than its
+        plan was sized for."""
+        with self._lock:
+            if tenant not in self._quota:
+                raise KeyError(f"unknown tenant {tenant!r}: set_quota first")
+            self._ns_tenant[namespace] = tenant
+            if max_fast_bytes is not None:
+                if max_fast_bytes <= 0:
+                    raise ValueError(
+                        f"need max_fast_bytes > 0, got {max_fast_bytes}")
+                self._ns_cap[namespace] = int(max_fast_bytes)
+            self.ns_fast_bytes.setdefault(namespace, 0)
+            self.ns_fast_peak.setdefault(namespace, 0)
+
+    def _owner_locked(self, key: Any):
+        """(namespace, tenant) charged for ``key`` — (None, None) for
+        untenanted keys (single-tenant use is unchanged)."""
+        if isinstance(key, tuple) and len(key) >= 2:
+            tenant = self._ns_tenant.get(key[0])
+            if tenant is not None:
+                return key[0], tenant
+        return None, None
+
+    def _account_fast_add_locked(self, key: Any, nb: int) -> None:
+        ns, t = self._owner_locked(key)
+        if t is None:
+            return
+        self.tenant_fast_bytes[t] += nb
+        self.ns_fast_bytes[ns] += nb
+
+    def _note_fast_peaks_locked(self) -> None:
+        # Peaks observe the post-eviction steady state, exactly like the
+        # global capacity invariant: a put that is transiently over quota
+        # inside the lock (insert, then _pick_victims_locked spills) is not
+        # a peak the outside world can ever read — so the admission
+        # contract ``measured peak <= predicted peak`` stays honest.
+        self.fast_peak_bytes = max(self.fast_peak_bytes,
+                                   self.fast_live_bytes)
+        for t, b in self.tenant_fast_bytes.items():
+            self.tenant_fast_peak[t] = max(self.tenant_fast_peak[t], b)
+        for ns, b in self.ns_fast_bytes.items():
+            self.ns_fast_peak[ns] = max(self.ns_fast_peak[ns], b)
+
+    def _account_fast_drop_locked(self, key: Any, nb: int) -> None:
+        ns, t = self._owner_locked(key)
+        if t is None:
+            return
+        self.tenant_fast_bytes[t] -= nb
+        self.ns_fast_bytes[ns] -= nb
+
+    def update_plan(self, namespace: Any, distances: Dict[Any, int]) -> None:
+        """Merge one namespace's Belady distances into the shared eviction
+        order, replacing only that namespace's previous entries.  With
+        concurrent runs a bare :meth:`set_plan` would demote every *other*
+        run's keys to the evict-first fallback; per-namespace merge keeps
+        each run plan-aware.  (Distances from different plans are ranks in
+        their own access sequences — comparing them across namespaces is a
+        heuristic, but each namespace's *internal* victim order stays
+        exactly Belady's.)"""
+        def _ours(k):
+            return isinstance(k, tuple) and len(k) >= 2 and k[0] == namespace
+        with self._lock:
+            self._distance = {k: v for k, v in self._distance.items()
+                              if not _ours(k)}
+            self._distance.update(distances)
+
+    def drop_namespace(self, namespace: Any) -> int:
+        """Delete every key in ``namespace`` from BOTH tiers (preemption:
+        the journal above this backend retains the payloads, so a resumed
+        run re-hydrates from the WAL — this only releases quota/capacity).
+        Returns the number of keys dropped."""
+        dropped = 0
+        for k in list(self.keys()):
+            if isinstance(k, tuple) and len(k) >= 2 and k[0] == namespace:
+                self.delete(k)
+                dropped += 1
+        with self._lock:
+            self._distance = {
+                k: v for k, v in self._distance.items()
+                if not (isinstance(k, tuple) and len(k) >= 2
+                        and k[0] == namespace)}
+        return dropped
+
+    def demote_namespace(self, namespace: Any) -> int:
+        """Synchronously push every fast-resident key of ``namespace`` down
+        to the slow tier (decode preemption: a parked session must stop
+        occupying its tenant's fast-tier quota while it waits).  Payloads
+        stay readable — this releases quota, not data.  Returns the number
+        of keys demoted."""
+        with self._lock:
+            mine = [k for k in self._fast
+                    if isinstance(k, tuple) and len(k) >= 2
+                    and k[0] == namespace]
+            to_drain = []
+            for k in mine:
+                d = self._evict_one_locked(k)
+                if d is not None:
+                    to_drain.append(d)
+        self._write_behind(to_drain)
+        return len(mine)
+
     def _evict_rank(self, key: Any):
         """Sort key for victim selection: largest wins.  Plan keys rank by
         reverse-use distance; unknown keys (not in any future access
@@ -515,6 +661,23 @@ class TieredStorage:
         if d is None:
             return (1, -self._seq.get(key, 0))
         return (0, d)
+
+    def _evict_one_locked(self, victim: Any) -> Optional[Any]:
+        """Move one fast resident to the write-behind staging map.  Returns
+        the key if this thread must start its drain loop, else None."""
+        tree = self._fast.pop(victim)
+        nb = self._sizes.pop(victim)
+        self.fast_live_bytes -= nb
+        self._account_fast_drop_locked(victim, nb)
+        self._seq.pop(victim, None)
+        if victim in self._clean:     # slow copy already valid: drop
+            self._clean.discard(victim)
+            return None
+        self._writing[victim] = tree
+        if victim not in self._wb_active:
+            self._wb_active.add(victim)
+            return victim
+        return None
 
     def _pick_victims_locked(self) -> list:
         """Pop residents (coldest first) until the budget holds.  Victims
@@ -525,17 +688,33 @@ class TieredStorage:
         to_drain = []
         while self.fast_live_bytes > self.capacity_bytes and self._fast:
             victim = max(self._fast, key=self._evict_rank)
-            tree = self._fast.pop(victim)
-            nb = self._sizes.pop(victim)
-            self.fast_live_bytes -= nb
-            self._seq.pop(victim, None)
-            if victim in self._clean:     # slow copy already valid: drop
-                self._clean.discard(victim)
-                continue
-            self._writing[victim] = tree
-            if victim not in self._wb_active:
-                self._wb_active.add(victim)
-                to_drain.append(victim)
+            d = self._evict_one_locked(victim)
+            if d is not None:
+                to_drain.append(d)
+        # Per-tenant quotas: an over-quota tenant spills its own coldest
+        # residents; other tenants' fast entries are untouchable.
+        for tenant, quota in self._quota.items():
+            while self.tenant_fast_bytes.get(tenant, 0) > quota:
+                mine = [k for k in self._fast
+                        if self._owner_locked(k)[1] == tenant]
+                if not mine:
+                    break
+                victim = max(mine, key=self._evict_rank)
+                d = self._evict_one_locked(victim)
+                if d is not None:
+                    to_drain.append(d)
+        # Per-namespace caps (the admission contract): a request over its
+        # own predicted fast peak spills its own coldest residents.
+        for ns, cap in self._ns_cap.items():
+            while self.ns_fast_bytes.get(ns, 0) > cap:
+                mine = [k for k in self._fast
+                        if self._owner_locked(k)[0] == ns]
+                if not mine:
+                    break
+                victim = max(mine, key=self._evict_rank)
+                d = self._evict_one_locked(victim)
+                if d is not None:
+                    to_drain.append(d)
         return to_drain
 
     def _write_behind(self, keys: list) -> None:
@@ -584,9 +763,15 @@ class TieredStorage:
         host = _freeze(tree)
         nb = tree_bytes(host)
         self._throttle(nb)
-        if nb > self.capacity_bytes:
-            # One state alone overflows the budget: bypass the fast tier
-            # (the capacity invariant holds unconditionally).
+        with self._lock:
+            ns, tenant = self._owner_locked(key)
+            quota = self._quota.get(tenant) if tenant is not None else None
+            ns_cap = self._ns_cap.get(ns) if ns is not None else None
+        if nb > self.capacity_bytes or (quota is not None and nb > quota) \
+                or (ns_cap is not None and nb > ns_cap):
+            # One state alone overflows the budget (global capacity, its
+            # tenant's quota, or its namespace's admission cap): bypass the
+            # fast tier (the capacity invariant holds unconditionally).
             with self._lock:
                 self.bytes_written += nb
                 self._drop_fast_locked(key)
@@ -609,11 +794,11 @@ class TieredStorage:
             self._fast[key] = host
             self._sizes[key] = nb
             self.fast_live_bytes += nb
+            self._account_fast_add_locked(key, nb)
             self._seq[key] = self._next_seq
             self._next_seq += 1
             to_drain = self._pick_victims_locked()
-            self.fast_peak_bytes = max(self.fast_peak_bytes,
-                                       self.fast_live_bytes)
+            self._note_fast_peaks_locked()
             self._note_total_peak_locked()
         self._write_behind(to_drain)
 
@@ -621,7 +806,9 @@ class TieredStorage:
         """Remove any fast-resident copy of ``key`` (re-store/overwrite)."""
         if key in self._fast:
             self._fast.pop(key)
-            self.fast_live_bytes -= self._sizes.pop(key)
+            nb = self._sizes.pop(key)
+            self.fast_live_bytes -= nb
+            self._account_fast_drop_locked(key, nb)
             self._seq.pop(key, None)
         self._clean.discard(key)
 
@@ -647,17 +834,23 @@ class TieredStorage:
             self.slow_hits += 1
             self.bytes_read += nb
             to_drain = []
-            if nb <= self.capacity_bytes and key not in self._fast:
+            ns, tenant = self._owner_locked(key)
+            quota = self._quota.get(tenant) if tenant is not None else None
+            ns_cap = self._ns_cap.get(ns) if ns is not None else None
+            if nb <= self.capacity_bytes and \
+                    (quota is None or nb <= quota) and \
+                    (ns_cap is None or nb <= ns_cap) and \
+                    key not in self._fast:
                 self.promotions += 1
                 self._fast[key] = host
                 self._sizes[key] = nb
                 self.fast_live_bytes += nb
+                self._account_fast_add_locked(key, nb)
                 self._seq[key] = self._next_seq
                 self._next_seq += 1
                 self._clean.add(key)   # slow copy stays valid
                 to_drain = self._pick_victims_locked()
-                self.fast_peak_bytes = max(self.fast_peak_bytes,
-                                           self.fast_live_bytes)
+                self._note_fast_peaks_locked()
             self._note_total_peak_locked()
         self._write_behind(to_drain)
         return host
@@ -727,6 +920,159 @@ class TieredStorage:
         with self._lock:
             return max(getattr(self, "_peak_total", 0),
                        self.fast_peak_bytes, self.slow.peak_bytes)
+
+
+class _NamespacedPlan:
+    """Key-translating view of an offload plan: every key the plan names is
+    rewritten to ``(namespace, key)`` so the shared tier's Belady order can
+    hold several runs' plans at once.  Attribute *presence* mirrors the
+    wrapped plan (properties raise ``AttributeError`` when the underlying
+    verb is missing) — :meth:`TieredStorage.set_plan` and
+    :meth:`TieredStorage.plan_prefetch_distance` duck-type on exactly
+    that."""
+
+    def __init__(self, plan: Any, namespace: Any):
+        self._plan = plan
+        self._ns = namespace
+
+    def _t(self, key: Any):
+        return (self._ns, key)
+
+    @property
+    def distances(self):
+        f = getattr(self._plan, "distances", None)
+        if f is None:
+            raise AttributeError("distances")
+        return lambda: {self._t(k): v for k, v in dict(f()).items()}
+
+    @property
+    def reverse_access_order(self):
+        f = getattr(self._plan, "reverse_access_order", None)
+        if f is None:
+            raise AttributeError("reverse_access_order")
+        return lambda: [self._t(k) for k in f()]
+
+    @property
+    def boundaries(self):
+        f = getattr(self._plan, "boundaries", None)
+        if f is None:
+            raise AttributeError("boundaries")
+        return lambda: [self._t(k) for k in f()]
+
+    def __getattr__(self, name: str):
+        return getattr(self.__dict__["_plan"], name)
+
+
+class NamespacedStorage:
+    """Key-prefixing view of a shared backend: every key becomes
+    ``(namespace, key)`` on the inner store.
+
+    This is what lets N concurrent offloaded runs share ONE capacity-bounded
+    :class:`TieredStorage`: the executor's boundary keys are bare segment
+    ints (``seg.begin``) plus ``FINAL_STATE_KEY``, identical across runs —
+    namespacing keeps them from colliding, and the namespace doubles as the
+    tier's per-tenant quota charging unit (:meth:`TieredStorage.
+    register_namespace`).
+
+    Every key-taking verb is translated EXPLICITLY (``__getattr__``
+    delegation would silently bypass translation); ``set_plan`` merges into
+    the shared Belady order via :meth:`TieredStorage.update_plan` when the
+    inner store supports it.  :meth:`close` is deliberately a no-op — run
+    disposal must never close the shared tier under its neighbours.
+    """
+
+    def __init__(self, inner: Any, namespace: Any):
+        self.inner = inner
+        self.namespace = namespace
+
+    def _k(self, key: Any):
+        return (self.namespace, key)
+
+    # -- backend protocol -----------------------------------------------------
+    def put(self, key: Any, tree: Any) -> None:
+        self.inner.put(self._k(key), tree)
+
+    def get(self, key: Any) -> Any:
+        return self.inner.get(self._k(key))
+
+    def peek(self, key: Any) -> Any:
+        f = getattr(self.inner, "peek", None)
+        if f is None:
+            return self.inner.get(self._k(key))
+        return f(self._k(key))
+
+    def delete(self, key: Any) -> None:
+        self.inner.delete(self._k(key))
+
+    def __contains__(self, key: Any) -> bool:
+        return self._k(key) in self.inner
+
+    def keys(self) -> Iterable[Any]:
+        return [k[1] for k in self.inner.keys()
+                if isinstance(k, tuple) and len(k) == 2
+                and k[0] == self.namespace]
+
+    # -- plan awareness -------------------------------------------------------
+    def set_plan(self, plan: Any) -> None:
+        wrapped = _NamespacedPlan(plan, self.namespace)
+        update = getattr(self.inner, "update_plan", None)
+        if update is not None:
+            update(self.namespace, wrapped.distances()
+                   if hasattr(wrapped, "distances")
+                   else {k: d for d, k in
+                         enumerate(wrapped.reverse_access_order())})
+            return
+        self.inner.set_plan(wrapped)
+
+    def plan_prefetch_distance(self, plan: Any) -> int:
+        f = getattr(self.inner, "plan_prefetch_distance", None)
+        if f is None:
+            return 1
+        return f(_NamespacedPlan(plan, self.namespace))
+
+    def drop(self) -> int:
+        """Release this namespace's keys from both tiers of the shared
+        store (preemption / session teardown)."""
+        f = getattr(self.inner, "drop_namespace", None)
+        if f is not None:
+            return f(self.namespace)
+        n = 0
+        for k in list(self.keys()):
+            self.delete(k)
+            n += 1
+        return n
+
+    def demote(self) -> int:
+        """Push this namespace's fast-resident keys down to the slow tier
+        (they stay readable; only the quota charge moves)."""
+        f = getattr(self.inner, "demote_namespace", None)
+        if f is not None:
+            return f(self.namespace)
+        return 0
+
+    def close(self) -> None:
+        """No-op: the shared inner store outlives any one run."""
+
+    # -- instrumentation: this namespace's slice of the shared tier -----------
+    @property
+    def fast_live_bytes(self) -> int:
+        ns = getattr(self.inner, "ns_fast_bytes", None)
+        if ns is not None and self.namespace in ns:
+            return ns[self.namespace]
+        return getattr(self.inner, "fast_live_bytes", 0)
+
+    @property
+    def fast_peak_bytes(self) -> int:
+        ns = getattr(self.inner, "ns_fast_peak", None)
+        if ns is not None and self.namespace in ns:
+            return ns[self.namespace]
+        return getattr(self.inner, "fast_peak_bytes", 0)
+
+    def __getattr__(self, name: str):
+        inner = self.__dict__.get("inner")
+        if inner is None:
+            raise AttributeError(name)
+        return getattr(inner, name)
 
 
 class JournaledStorage:

@@ -1,9 +1,17 @@
-"""Serving launcher: batched prefill + decode loop.
+"""Serving launcher: continuous-batching decode over ``repro.serve``.
 
-Runs a real (reduced-config on CPU, full on TPU) model through the serving
-path: prefill the prompt batch, then autoregressive decode with donated
-caches, reporting tokens/s.  The KV cache layout and shardings are the same
-objects the dry-run lowers at production scale.
+A thin CLI around :class:`repro.serve.DecodeSession` — each prompt is
+prefilled at its TRUE length and joined into the running batch through the
+model-declared cache spec (``ModelAPI.cache_spec``), so every cache leaf
+with a sequence axis is padded to the horizon (not just the attention KV
+tensors) and every slot decodes at its own ``(B,)`` position.  Mixed
+prompt lengths are first-class: ``--prompt-lens 5,8,12`` serves a ragged
+batch whose per-slot tokens match what each prompt would produce alone.
+
+``--preemptible`` builds the decode step WITHOUT cache donation so the
+session can be parked into a storage tier and resumed (the multi-tenant
+scheduler's preemption path); the default keeps donation for the in-place
+cache update.
 
 Example::
 
@@ -16,14 +24,11 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.configs.base import ShapeSpec
-from repro.configs.shapes import make_batch
 from repro.models import get_model
-from repro.train import make_serve_steps
+from repro.serve import DecodeSession
 
 
 def main(argv=None):
@@ -32,8 +37,14 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--prompt-lens", type=str, default=None,
+                    help="comma-separated per-slot prompt lengths "
+                    "(mixed-length batch; overrides --batch/--prompt-len)")
     ap.add_argument("--decode-steps", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--preemptible", action="store_true",
+                    help="disable cache donation so the session can be "
+                    "parked/resumed (scheduler preemption)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -42,51 +53,43 @@ def main(argv=None):
         raise SystemExit(f"{cfg.name} has no serving path")
     params = api.init(jax.random.PRNGKey(0))
 
-    max_len = args.prompt_len + args.decode_steps
-    pf_shape = ShapeSpec("serve", args.prompt_len, args.batch, "prefill")
-    batch = make_batch(cfg, pf_shape)
+    if args.prompt_lens:
+        plens = [int(x) for x in args.prompt_lens.split(",")]
+    else:
+        plens = [args.prompt_len] * args.batch
+    batch = len(plens)
+    max_len = max(plens) + args.decode_steps
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, size=(n,)) for n in plens]
 
-    prefill_fn, decode_fn = make_serve_steps(api)
-    prefill_fn = jax.jit(prefill_fn)
-    decode_fn = jax.jit(decode_fn, donate_argnums=(1,))
-
+    session = DecodeSession(api, params, batch=batch, max_len=max_len,
+                            decode_steps=args.decode_steps,
+                            preemptible=args.preemptible,
+                            temperature=args.temperature)
     t0 = time.time()
-    logits, cache = prefill_fn(params, batch)
-    # grow the cache to max_len (prefill returns prompt-length caches)
-    def grow(x):
-        if x.ndim == 5:  # (L, B, S, G, D) kv
-            pad = max_len - x.shape[2]
-            return jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
-        return x
-    cache = jax.tree_util.tree_map(grow, cache)
+    for p in prompts:
+        session.add_request(p)
+    jax.block_until_ready(session.cache)
     t_prefill = time.time() - t0
 
-    key = jax.random.PRNGKey(1)
-    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-    generated = [np.asarray(tok)]
     t0 = time.time()
-    for i in range(args.decode_steps):
-        step_batch = {"tokens": tok,
-                      "pos": jnp.asarray(args.prompt_len + i, jnp.int32)}
-        logits, cache = decode_fn(params, cache, step_batch)
-        if args.temperature > 0:
-            key, sub = jax.random.split(key)
-            tok = jax.random.categorical(
-                sub, logits / args.temperature, axis=-1).astype(jnp.int32)[:, None]
-        else:
-            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-        generated.append(np.asarray(tok))
-    jax.block_until_ready(logits)
+    n_rounds = 0
+    while not session.done():
+        session.step()
+        n_rounds += 1
+    jax.block_until_ready(session.tok)
     t_decode = time.time() - t0
 
-    toks = np.concatenate(generated, axis=1)
-    n_new = args.batch * args.decode_steps
-    print(f"[serve] arch={cfg.name} batch={args.batch} "
-          f"prompt={args.prompt_len} decode={args.decode_steps}")
+    toks = np.asarray(session.generated)
+    n_prompt = sum(plens)
+    n_new = batch * args.decode_steps
+    print(f"[serve] arch={cfg.name} batch={batch} "
+          f"prompt_lens={plens} decode={args.decode_steps} "
+          f"preemptible={args.preemptible}")
     print(f"  prefill: {t_prefill*1e3:.1f} ms "
-          f"({args.batch*args.prompt_len/t_prefill:.0f} tok/s)")
+          f"({n_prompt/t_prefill:.0f} tok/s)")
     print(f"  decode:  {t_decode*1e3:.1f} ms total, "
-          f"{t_decode/args.decode_steps*1e3:.2f} ms/step, "
+          f"{t_decode/max(n_rounds, 1)*1e3:.2f} ms/step, "
           f"{n_new/t_decode:.0f} tok/s")
     print(f"  sample token ids: {toks[0][:16].tolist()}")
     return toks

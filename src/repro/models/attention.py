@@ -279,20 +279,20 @@ def decode_attention(p: Params, x: jnp.ndarray, cache_k: jnp.ndarray,
                      scale: Optional[float] = None,
                      dt: DTypes = DEFAULT_DTYPES):
     """One decode step.  x: (B, 1, d); cache_k/v: (B, S_max, G, D);
-    pos: scalar int32 — current length (same for the whole batch).
+    pos: int32 scalar or (B,) vector — per-request current lengths, so batch
+    slots holding different-length sequences (continuous batching) each
+    write/rope/mask at their own position.
     Returns (y, new_cache_k, new_cache_v)."""
     B = x.shape[0]
     q = dense(p["wq"], x, dt).reshape(B, 1, n_heads, head_dim)
     k = dense(p["wk"], x, dt).reshape(B, 1, n_kv_heads, head_dim)
     v = dense(p["wv"], x, dt).reshape(B, 1, n_kv_heads, head_dim)
+    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
     if rope_theta is not None:
-        posb = jnp.full((B,), pos, jnp.int32)
         q = apply_rope_at(q, posb, head_dim, rope_theta)
         k = apply_rope_at(k, posb, head_dim, rope_theta)
-    ck = lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
-                                  (0, pos, 0, 0))
-    cv = lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
-                                  (0, pos, 0, 0))
+    ck = cache_k.at[jnp.arange(B), posb].set(k[:, 0].astype(cache_k.dtype))
+    cv = cache_v.at[jnp.arange(B), posb].set(v[:, 0].astype(cache_v.dtype))
     S = ck.shape[1]
     G, Hg = n_kv_heads, n_heads // n_kv_heads
     sc = (head_dim ** -0.5) if scale is None else scale
@@ -302,10 +302,10 @@ def decode_attention(p: Params, x: jnp.ndarray, cache_k: jnp.ndarray,
     if softcap is not None:
         s = softcap * jnp.tanh(s / softcap)
     k_pos = jnp.arange(S)
-    valid = k_pos <= pos
+    valid = k_pos[None, :] <= posb[:, None]  # (B, S)
     if window is not None:
-        valid &= k_pos > pos - window
-    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+        valid &= k_pos[None, :] > posb[:, None] - window
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
     pattn = jax.nn.softmax(s, axis=-1).astype(cv.dtype)
     o = jnp.einsum("bghst,bgtd->bghsd", pattn, cv.transpose(0, 2, 1, 3))
     o = o.reshape(B, n_heads, 1, head_dim).transpose(0, 2, 1, 3)

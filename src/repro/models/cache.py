@@ -1,0 +1,151 @@
+"""Model-declared decode-cache layout.
+
+Every model family lays its decode cache out differently: transformer KV
+leaves are ``(n_periods, B, S_max, G, D)``, Mamba-2 conv state is
+``(n_periods, B, conv_k - 1, conv_dim)`` with *no* sequence axis at all, and
+the encoder-decoder keeps static cross-KV leaves that must never be padded.
+Sniffing ``ndim`` to find "the sequence axis" is therefore wrong the moment a
+non-attention leaf shows up — the seed serving launcher padded the Mamba SSM
+state's *head* axis out to ``max_len`` and silently corrupted decode.
+
+The fix is declarative: each family exposes a *cache spec* — a pytree with
+the same structure as its cache whose leaves are :class:`CacheAxes`, naming
+the batch axis and (optionally) the sequence axis of the matching cache
+leaf.  Everything the serving layer needs (growing a prompt-length cache to
+``max_len``, slicing batch slots in and out for continuous batching, byte
+accounting for admission control) is derived from the spec here, with no
+per-family code in the serving path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Cache = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheAxes:
+    """Axis roles for one cache leaf.
+
+    ``batch``: index of the batch axis (every leaf has one).
+    ``seq``: index of the sequence axis, or ``None`` for leaves whose shape
+    is independent of generated length (SSM/conv state, static cross-KV).
+    """
+    batch: int
+    seq: Optional[int] = None
+
+
+def _zip_spec(cache: Cache, spec: Cache):
+    """Pairs (leaf, axes) — validates the spec structurally matches."""
+    leaves, treedef = jax.tree_util.tree_flatten(cache)
+    axes_leaves = treedef.flatten_up_to(spec)
+    for x, ax in zip(leaves, axes_leaves):
+        if not isinstance(ax, CacheAxes):
+            raise TypeError(f"cache spec leaf {ax!r} is not CacheAxes")
+        if ax.batch >= x.ndim or (ax.seq is not None and ax.seq >= x.ndim):
+            raise ValueError(f"axes {ax} out of range for leaf shape "
+                             f"{x.shape}")
+    return leaves, axes_leaves, treedef
+
+
+def grow_cache(cache: Cache, spec: Cache, new_len: int) -> Cache:
+    """Zero-pad every sequence-carrying leaf out to ``new_len``.
+
+    Leaves without a sequence axis pass through untouched — this is the
+    correct generalisation of the seed launcher's ndim-sniffing pad.
+    """
+    leaves, axes_leaves, treedef = _zip_spec(cache, spec)
+
+    def g(x, ax):
+        if ax.seq is None:
+            return x
+        pad = new_len - x.shape[ax.seq]
+        if pad < 0:
+            raise ValueError(
+                f"cannot shrink cache seq axis {x.shape[ax.seq]} -> "
+                f"{new_len}")
+        if pad == 0:
+            return x
+        widths = [(0, 0)] * x.ndim
+        widths[ax.seq] = (0, pad)
+        return jnp.pad(x, widths)
+
+    return treedef.unflatten([g(x, ax) for x, ax in zip(leaves, axes_leaves)])
+
+
+def cache_batch_size(cache: Cache, spec: Cache) -> int:
+    """Batch size shared by every leaf (validated)."""
+    leaves, axes_leaves, _ = _zip_spec(cache, spec)
+    sizes = {x.shape[ax.batch] for x, ax in zip(leaves, axes_leaves)}
+    if len(sizes) != 1:
+        raise ValueError(f"inconsistent batch sizes across leaves: {sizes}")
+    return sizes.pop()
+
+
+def cache_seq_len(cache: Cache, spec: Cache) -> Optional[int]:
+    """Max-length of the sequence-carrying leaves (None if there are none)."""
+    leaves, axes_leaves, _ = _zip_spec(cache, spec)
+    lens = {x.shape[ax.seq] for x, ax in zip(leaves, axes_leaves)
+            if ax.seq is not None}
+    if not lens:
+        return None
+    if len(lens) != 1:
+        raise ValueError(f"inconsistent seq lengths across leaves: {lens}")
+    return lens.pop()
+
+
+def read_slots(cache: Cache, spec: Cache,
+               indices: Sequence[int]) -> Cache:
+    """Extract batch slots ``indices`` from every leaf (batch axis kept)."""
+    idx = jnp.asarray(list(indices), jnp.int32)
+    leaves, axes_leaves, treedef = _zip_spec(cache, spec)
+    return treedef.unflatten([jnp.take(x, idx, axis=ax.batch)
+                              for x, ax in zip(leaves, axes_leaves)])
+
+
+def write_slot(cache: Cache, spec: Cache, slot_cache: Cache,
+               index: int) -> Cache:
+    """Insert a batch-1 ``slot_cache`` into batch slot ``index``.
+
+    This is the continuous-batching join: a freshly prefilled request's cache
+    (grown to the session's max_len first — see :func:`grow_cache`) is
+    written into a free slot of the running batch without touching the other
+    slots.
+    """
+    leaves, axes_leaves, treedef = _zip_spec(cache, spec)
+    _, src_axes, _ = _zip_spec(slot_cache, spec)
+    src_leaves = jax.tree_util.tree_leaves(slot_cache)
+
+    def w(dst, src, ax):
+        if src.shape[ax.batch] != 1:
+            raise ValueError(f"slot cache batch axis must be 1, got "
+                             f"{src.shape[ax.batch]}")
+        sl = [slice(None)] * dst.ndim
+        sl[ax.batch] = index
+        return dst.at[tuple(sl)].set(jnp.squeeze(src, axis=ax.batch)
+                                     .astype(dst.dtype))
+
+    return treedef.unflatten([w(d, s, ax) for d, s, ax in
+                              zip(leaves, src_leaves, axes_leaves)])
+
+
+def cache_nbytes(cache: Cache) -> int:
+    """Total bytes of a cache pytree (arrays or ShapeDtypeStructs)."""
+    total = 0
+    for x in jax.tree_util.tree_leaves(cache):
+        size = 1
+        for d in x.shape:
+            size *= d
+        total += size * jnp.dtype(x.dtype).itemsize
+    return total
+
+
+def decode_cache_bytes(api, batch: int, max_len: int) -> int:
+    """Byte footprint of ``api.init_cache(batch, max_len)`` WITHOUT
+    allocating it — admission control calls this before saying yes."""
+    shapes = jax.eval_shape(lambda: api.init_cache(batch, max_len))
+    return cache_nbytes(shapes)

@@ -137,6 +137,18 @@ def train_loss(params: Params, batch: Dict[str, jnp.ndarray],
                            chunk=cfg.ce_chunk)
 
 
+def cache_spec(cfg: ArchConfig) -> Params:
+    """Axis roles for :func:`init_cache` leaves (see ``models.cache``).
+
+    Self-attention KV grows with decode length; the cross-attention KV is
+    computed once from the encoder and is static — no sequence axis.
+    """
+    from repro.models.cache import CacheAxes
+    return {"k": CacheAxes(batch=1, seq=2), "v": CacheAxes(batch=1, seq=2),
+            "xk": CacheAxes(batch=1, seq=None),
+            "xv": CacheAxes(batch=1, seq=None)}
+
+
 def init_cache(cfg: ArchConfig, batch: int, max_len: int,
                s_enc: int) -> Params:
     L = cfg.n_layers

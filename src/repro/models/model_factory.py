@@ -34,6 +34,10 @@ class ModelAPI:
     # ChainSpec decomposition of train_loss for repro.api's offloaded
     # autodiff (None when the family has no uniform chain structure yet).
     train_chain: Any = None
+    # Pytree matching init_cache's structure with models.cache.CacheAxes
+    # leaves — declares which cache leaves carry a sequence axis and where,
+    # so the serving layer can grow/slot caches without ndim sniffing.
+    cache_spec: Any = None
 
 
 def _attach_chain(loss_fn: Callable, chain_spec) -> Callable:
@@ -58,6 +62,7 @@ def get_model(cfg: ArchConfig) -> ModelAPI:
             init_cache=lambda batch, max_len: transformer.init_cache(
                 cfg, batch, max_len),
             train_chain=chain,
+            cache_spec=transformer.cache_spec(cfg),
         )
     if cfg.family == "vlm":
         return ModelAPI(
@@ -69,6 +74,7 @@ def get_model(cfg: ArchConfig) -> ModelAPI:
                 p, c, b["tokens"], b["pos"], cfg),
             init_cache=lambda batch, max_len: transformer.init_cache(
                 cfg, batch, max_len),
+            cache_spec=transformer.cache_spec(cfg),
         )
     if cfg.family == "encdec":
         return ModelAPI(
@@ -81,6 +87,7 @@ def get_model(cfg: ArchConfig) -> ModelAPI:
                 p, c, b["tokens"], b["pos"], cfg),
             init_cache=lambda batch, max_len: encdec.init_cache(
                 cfg, batch, max_len, s_enc=1500),
+            cache_spec=encdec.cache_spec(cfg),
         )
     if cfg.family == "lstm":
         def _loss(p, b):

@@ -259,6 +259,25 @@ def train_chain(cfg: ArchConfig):
 # ---------------------------------------------------------------------------
 
 
+def cache_spec(cfg: ArchConfig) -> Params:
+    """Axis roles for every :func:`init_cache` leaf (see ``models.cache``).
+
+    Leading axis of every leaf is ``n_periods`` (the scan axis), so batch is
+    axis 1.  Only attention KV carries a sequence axis (axis 2); Mamba-2
+    conv/SSM state is length-independent and must never be padded.
+    """
+    from repro.models.cache import CacheAxes
+    spec: Dict[str, Any] = {}
+    for j, kind in enumerate(cfg.layer_pattern):
+        if kind.startswith("attn"):
+            spec[f"pos{j}"] = {"k": CacheAxes(batch=1, seq=2),
+                               "v": CacheAxes(batch=1, seq=2)}
+        else:
+            spec[f"pos{j}"] = {"conv": CacheAxes(batch=1, seq=None),
+                               "ssm": CacheAxes(batch=1, seq=None)}
+    return spec
+
+
 def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Params:
     """Zero caches for decode.  Leading axis of every leaf: n_periods."""
     cache: Dict[str, Any] = {}
@@ -310,7 +329,8 @@ def _apply_layer_decode(p, x, kind, cfg: ArchConfig, cache_j, pos, dt):
 
 def decode(params: Params, cache: Params, tokens: jnp.ndarray,
            pos: jnp.ndarray, cfg: ArchConfig):
-    """One decode step.  tokens: (B, 1); pos: scalar int32 (current length).
+    """One decode step.  tokens: (B, 1); pos: int32 scalar or (B,) vector of
+    per-request current lengths (mixed-length continuous batching).
     Returns (logits (B, V) fp32, new_cache)."""
     dt = _dtypes(cfg)
     h = embed(params["embed"], tokens, dt)

@@ -1,0 +1,23 @@
+"""Multi-tenant continuous-batching serving over shared Level-2 tiers.
+
+The paper's constant-overhead guarantee makes the two-tier perfmodel
+*predictive*: admission control can compute a job's fast-tier footprint and
+effective overhead before the job runs.  This package turns that into a
+scheduler: concurrent long-sequence jobs — offloaded fine-tune steps
+(``value_and_grad_offloaded``) and decode sessions alike — share ONE
+capacity-bounded :class:`~repro.core.storage.TieredStorage` under per-tenant
+byte quotas, with plan-aware admission, journal-backed preemption and
+bit-identical resume.
+"""
+from repro.serve.admission import (AdmissionDecision, AdmissionRejected,
+                                   LinkTimes, ServeRequest, admission_check,
+                                   chain_dims, decode_request, train_request)
+from repro.serve.scheduler import FakeClock, ServeScheduler
+from repro.serve.session import (DecodeSession, TrainJob, decode_park_bytes)
+
+__all__ = [
+    "AdmissionDecision", "AdmissionRejected", "LinkTimes", "ServeRequest",
+    "admission_check", "chain_dims", "decode_request", "train_request",
+    "FakeClock", "ServeScheduler",
+    "DecodeSession", "TrainJob", "decode_park_bytes",
+]

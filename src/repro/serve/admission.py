@@ -1,0 +1,231 @@
+"""Plan-aware admission control for the serving scheduler.
+
+The admission predicate is the paper's perfmodel run *before* the job:
+:func:`~repro.core.perfmodel.choose_tiered_interval` picks the checkpoint
+interval a train job would run at against the tenant's current fast-tier
+headroom, :func:`~repro.core.perfmodel.admitted_fast_peak_model` bounds the
+fast-tier bytes it will pin (including the journal's extra final state), and
+:func:`~repro.core.perfmodel.t_async_tiered` predicts its wall time.  A
+request that cannot keep even one boundary on the fast tier, would push its
+tenant past quota, or blows its latency budget is rejected — with the
+model's numbers in the error, so the caller knows *by how much*.
+
+Everything here is a pure function of the request and a byte/time snapshot:
+no storage, no clock, no jax arrays — which is what makes the scheduler unit
+tests run on a fake clock in milliseconds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Tuple
+
+from repro.core import perfmodel
+
+KIND_TRAIN = "train"
+KIND_DECODE = "decode"
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkTimes:
+    """Per-request link/compute times feeding the §3 model (seconds).
+
+    ``t_a``/``t_b``: per-step forward/backward compute (for decode requests
+    ``t_a`` is the per-token decode step and ``t_b`` is unused);
+    ``t_t_fast``/``t_t_slow``: per-boundary-state transfer time of the fast
+    and slow tier.  Producers: the autotuner's measured probe on this
+    hardware, or :func:`~repro.core.perfmodel.times_from_roofline`.
+    """
+
+    t_a: float
+    t_b: float = 0.0
+    t_t_fast: float = 0.0
+    t_t_slow: float = 0.0
+
+    def __post_init__(self):
+        if self.t_a <= 0:
+            raise ValueError(f"need t_a > 0, got {self.t_a}")
+        for name in ("t_b", "t_t_fast", "t_t_slow"):
+            if getattr(self, name) < 0:
+                raise ValueError(f"{name} must be >= 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeRequest:
+    """One admission-control unit: a fine-tune gradient step or a decode
+    session.  ``fast_bytes_needed``/``state_bytes`` are what the perfmodel
+    sizes the fast tier from; producers use :func:`chain_dims` /
+    :func:`repro.models.cache.decode_cache_bytes` so the numbers come from
+    ``jax.eval_shape``, not guesses."""
+
+    rid: str
+    tenant: str
+    kind: str                        # KIND_TRAIN | KIND_DECODE
+    priority: int = 0                # higher preempts lower
+    latency_budget_s: Optional[float] = None
+    times: Optional[LinkTimes] = None
+    # train: n chain steps, bytes of one boundary state
+    n: int = 0
+    state_bytes: int = 0
+    # decode: batch slots, generation horizon, parked-session footprint
+    batch: int = 0
+    max_len: int = 0
+    decode_steps: int = 0
+    park_bytes: int = 0
+
+    def __post_init__(self):
+        if self.kind not in (KIND_TRAIN, KIND_DECODE):
+            raise ValueError(f"unknown request kind {self.kind!r}")
+        if self.kind == KIND_TRAIN and (self.n <= 0 or self.state_bytes <= 0):
+            raise ValueError(
+                f"train request {self.rid!r} needs n > 0 and state_bytes > 0"
+                f" (got n={self.n}, state_bytes={self.state_bytes})")
+        if self.kind == KIND_DECODE and self.park_bytes <= 0:
+            raise ValueError(
+                f"decode request {self.rid!r} needs park_bytes > 0")
+
+
+def train_request(rid: str, tenant: str, *, n: int, state_bytes: int,
+                  times: LinkTimes, priority: int = 0,
+                  latency_budget_s: Optional[float] = None) -> ServeRequest:
+    return ServeRequest(rid=rid, tenant=tenant, kind=KIND_TRAIN,
+                        priority=priority, latency_budget_s=latency_budget_s,
+                        times=times, n=n, state_bytes=int(state_bytes))
+
+
+def decode_request(rid: str, tenant: str, *, batch: int, max_len: int,
+                   decode_steps: int, park_bytes: int,
+                   times: Optional[LinkTimes] = None, priority: int = 0,
+                   latency_budget_s: Optional[float] = None) -> ServeRequest:
+    return ServeRequest(rid=rid, tenant=tenant, kind=KIND_DECODE,
+                        priority=priority, latency_budget_s=latency_budget_s,
+                        times=times, batch=batch, max_len=max_len,
+                        decode_steps=decode_steps,
+                        park_bytes=int(park_bytes))
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionDecision:
+    """What the perfmodel said at admission time.  ``predicted_fast_peak``
+    is the contract the benchmark audits: the request's *measured* per-
+    namespace fast-tier peak must come in at or under it."""
+
+    rid: str
+    admitted: bool
+    reason: str
+    interval: int = 0
+    predicted_fast_peak: int = 0
+    predicted_seconds: float = 0.0
+    headroom_bytes: int = 0
+
+
+class AdmissionRejected(RuntimeError):
+    """Admission refused — the message carries the model's numbers."""
+
+    def __init__(self, decision: AdmissionDecision):
+        self.decision = decision
+        super().__init__(
+            f"request {decision.rid!r} rejected: {decision.reason} "
+            f"(predicted_fast_peak={decision.predicted_fast_peak}B, "
+            f"headroom={decision.headroom_bytes}B, "
+            f"predicted_seconds={decision.predicted_seconds:.3g})")
+
+
+def admission_check(req: ServeRequest, *, capacity_bytes: int,
+                    quota_bytes: int, tenant_fast_bytes: int
+                    ) -> AdmissionDecision:
+    """The admission predicate: run the perfmodel against the tenant's
+    *current* headroom and decide.
+
+    ``capacity_bytes``: the shared tier's global fast budget;
+    ``quota_bytes``: the tenant's quota; ``tenant_fast_bytes``: the
+    tenant's fast-tier bytes right now.  Headroom is the min of what the
+    quota and the global budget still allow — admission is conservative:
+    it sizes the plan as if the request only ever gets the headroom it
+    sees now (more may become free later; less cannot be taken from
+    other tenants, the quota eviction rule guarantees it).
+    """
+    headroom = min(int(capacity_bytes),
+                   int(quota_bytes) - int(tenant_fast_bytes))
+    if req.kind == KIND_DECODE:
+        return _check_decode(req, headroom)
+    return _check_train(req, headroom)
+
+
+def _reject(req: ServeRequest, reason: str, *, headroom: int,
+            peak: int = 0, seconds: float = 0.0,
+            interval: int = 0) -> AdmissionDecision:
+    return AdmissionDecision(rid=req.rid, admitted=False, reason=reason,
+                             interval=interval, predicted_fast_peak=peak,
+                             predicted_seconds=seconds,
+                             headroom_bytes=headroom)
+
+
+def _check_decode(req: ServeRequest, headroom: int) -> AdmissionDecision:
+    need = req.park_bytes
+    if need > headroom:
+        return _reject(
+            req, f"parked session footprint {need}B exceeds tenant fast-"
+            f"tier headroom {headroom}B", headroom=headroom, peak=need)
+    seconds = 0.0
+    if req.times is not None:
+        seconds = req.decode_steps * req.times.t_a
+        if req.latency_budget_s is not None and \
+                seconds > req.latency_budget_s:
+            return _reject(
+                req, f"predicted decode time {seconds:.3g}s exceeds "
+                f"latency budget {req.latency_budget_s:.3g}s",
+                headroom=headroom, peak=need, seconds=seconds)
+    return AdmissionDecision(rid=req.rid, admitted=True, reason="fits",
+                             interval=1, predicted_fast_peak=need,
+                             predicted_seconds=seconds,
+                             headroom_bytes=headroom)
+
+
+def _check_train(req: ServeRequest, headroom: int) -> AdmissionDecision:
+    t = req.times
+    if t is None:
+        raise ValueError(f"train request {req.rid!r} needs times=")
+    if headroom < req.state_bytes:
+        # not even one boundary state can live on the fast tier: every
+        # store would bypass to the slow tier and the never-stall pipeline
+        # has nothing to overlap — queue/reject rather than thrash
+        return _reject(
+            req, f"one boundary state ({req.state_bytes}B) exceeds tenant "
+            f"fast-tier headroom {headroom}B", headroom=headroom,
+            peak=req.state_bytes)
+    interval = perfmodel.choose_tiered_interval(
+        req.n, req.state_bytes, headroom, t.t_a, t.t_t_fast, t.t_t_slow)
+    slots = max(1, math.ceil(math.sqrt(max(interval, 1))))
+    # journaled runs pin one extra state (FINAL_STATE_KEY) beyond the
+    # ceil(n/I) segment boundaries — extra_states=1 keeps the admission
+    # bound honest for preemptible jobs
+    peak = perfmodel.admitted_fast_peak_model(
+        req.n, interval, req.state_bytes, headroom, extra_states=1)
+    seconds = perfmodel.t_async_tiered(
+        req.n, interval, slots, t.t_a, t.t_b, t.t_t_fast, t.t_t_slow,
+        req.state_bytes, headroom)
+    if req.latency_budget_s is not None and seconds > req.latency_budget_s:
+        return _reject(
+            req, f"predicted step time {seconds:.3g}s at interval "
+            f"{interval} exceeds latency budget "
+            f"{req.latency_budget_s:.3g}s", headroom=headroom, peak=peak,
+            seconds=seconds, interval=interval)
+    return AdmissionDecision(rid=req.rid, admitted=True, reason="fits",
+                             interval=interval, predicted_fast_peak=peak,
+                             predicted_seconds=seconds,
+                             headroom_bytes=headroom)
+
+
+def chain_dims(chain: Any, params: Any, batch: Any) -> Tuple[int, int]:
+    """(n_steps, boundary_state_bytes) of a chain via ``jax.eval_shape`` —
+    no arrays are materialised, so admission can size a job it has not
+    admitted yet."""
+    import jax
+
+    from repro.api.chain import chain_length
+    from repro.models.cache import cache_nbytes
+
+    spec = getattr(chain, "chain_spec", chain)
+    carry, xs = jax.eval_shape(spec.prelude, params, batch)
+    return chain_length(xs), cache_nbytes(carry)

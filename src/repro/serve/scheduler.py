@@ -1,0 +1,381 @@
+"""Continuous-batching scheduler over one shared capacity-bounded tier.
+
+:class:`ServeScheduler` multiplexes concurrent requests — offloaded
+fine-tune steps and decode sessions — onto ONE
+:class:`~repro.core.storage.TieredStorage` under per-tenant byte quotas.
+Every request passes the plan-aware admission predicate
+(:func:`~repro.serve.admission.admission_check`) BEFORE it touches the
+tier; requests that can never fit raise
+:class:`~repro.serve.admission.AdmissionRejected` with the perfmodel's
+numbers, requests that merely lack headroom *right now* queue.  Load
+spikes (a queued higher-priority request that cannot admit) preempt the
+lowest-priority running job: train jobs die at their next Level-2 store
+through the fault machinery and resume bit-identically from their
+journal; decode sessions park their slot-pool state into the tier and
+unpark later.
+
+The scheduler is single-threaded and cooperatively stepped — every
+:meth:`ServeScheduler.step` runs one admission pass, one preemption pass
+and one work round.  All timing goes through an injectable ``clock``
+callable, so the unit tests drive it with :class:`FakeClock` in
+milliseconds of wall time.
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Any, Dict, List, Optional
+
+from repro.core.storage import NamespacedStorage
+from repro.serve import admission as adm
+from repro.serve import session as sess
+
+
+class FakeClock:
+    """Deterministic monotonic clock for tests: call it for the time,
+    :meth:`advance` it to move time forward."""
+
+    def __init__(self, start: float = 0.0):
+        self.now = float(start)
+
+    def __call__(self) -> float:
+        return self.now
+
+    def advance(self, dt: float) -> None:
+        if dt < 0:
+            raise ValueError("time only moves forward")
+        self.now += float(dt)
+
+
+class _Entry:
+    """Internal per-request record: the request, its latest admission
+    decision, and (once admitted) its namespace view + live handle."""
+
+    def __init__(self, req: adm.ServeRequest, seq: int, submitted_at: float,
+                 build):
+        self.req = req
+        self.seq = seq
+        self.submitted_at = submitted_at
+        self.build = build            # (entry, view) -> handle, on admission
+        self.decision: Optional[adm.AdmissionDecision] = None
+        self.reserved = 0             # fast-tier bytes reserved while running
+        self.namespace: Optional[str] = None
+        self.view: Optional[NamespacedStorage] = None
+        self.handle: Any = None
+        self.admitted_at: Optional[float] = None
+        self.finished_at: Optional[float] = None
+        self.preemptions = 0
+
+    @property
+    def rid(self) -> str:
+        return self.req.rid
+
+    def sort_key(self):
+        # admission order: highest priority first, then FIFO
+        return (-self.req.priority, self.seq)
+
+
+class ServeScheduler:
+    """Multi-tenant serving loop over a shared ``TieredStorage``.
+
+    Parameters
+    ----------
+    tier:
+        The shared capacity-bounded store every admitted request lives in
+        (quotas via :meth:`add_tenant`).
+    clock:
+        Monotonic time source; defaults to ``time.monotonic``.  Tests pass
+        :class:`FakeClock`.
+    journal_root:
+        Directory receiving one write-ahead journal per train job
+        (``<journal_root>/<rid>``) — required before the first
+        :meth:`submit_train`.
+    """
+
+    def __init__(self, tier, *, clock=time.monotonic,
+                 journal_root: Optional[str] = None):
+        self.tier = tier
+        self.clock = clock
+        self.journal_root = journal_root
+        self._seq = 0
+        # Admission charges RESERVATIONS, not measured bytes: an admitted
+        # job's predicted_fast_peak is debited from its tenant's quota the
+        # moment it is admitted and credited back when it completes or is
+        # preempted.  Measured bytes lag the plan (a job admitted this
+        # round has not touched the tier yet), so charging them would
+        # over-admit and then thrash.
+        self.reserved: Dict[str, int] = {}
+        self.waiting: List[_Entry] = []    # queued + preempted, re-admitted
+        self.running: List[_Entry] = []
+        self.completed: List[Dict[str, Any]] = []
+        self.rejected: List[adm.AdmissionDecision] = []
+
+    # -- tenants --------------------------------------------------------------
+    def add_tenant(self, tenant: str, quota_bytes: int) -> None:
+        self.tier.set_quota(tenant, quota_bytes)
+
+    # -- submission -----------------------------------------------------------
+    def submit_train(self, rid: str, tenant: str, chain, params, batch, *,
+                     times: adm.LinkTimes, priority: int = 0,
+                     latency_budget_s: Optional[float] = None,
+                     engine: str = "compiled") -> adm.AdmissionDecision:
+        """Submit one offloaded fine-tune gradient step.  Sizes the chain
+        with ``jax.eval_shape``, runs the admission predicate, and either
+        starts the job, queues it, or raises :class:`AdmissionRejected`."""
+        if self.journal_root is None:
+            raise ValueError("scheduler needs journal_root= for train jobs")
+        n, state_bytes = adm.chain_dims(chain, params, batch)
+        req = adm.train_request(rid, tenant, n=n, state_bytes=state_bytes,
+                                times=times, priority=priority,
+                                latency_budget_s=latency_budget_s)
+
+        def build(entry: _Entry, view: NamespacedStorage) -> sess.TrainJob:
+            interval = entry.decision.interval
+            slots = max(1, math.ceil(math.sqrt(max(interval, 1))))
+            return sess.TrainJob(
+                chain, params, batch, backend=view,
+                journal_dir=f"{self.journal_root}/{entry.rid}",
+                interval=interval, slots=slots, engine=engine)
+
+        return self._submit(req, build)
+
+    def submit_decode(self, rid: str, tenant: str, api, params, *,
+                      prompts, max_len: int, decode_steps: int,
+                      times: Optional[adm.LinkTimes] = None,
+                      priority: int = 0,
+                      latency_budget_s: Optional[float] = None
+                      ) -> adm.AdmissionDecision:
+        """Submit one decode session (``len(prompts)`` slots).  The parked
+        footprint — what preemption would pin on the tier — is sized with
+        ``jax.eval_shape`` and charged against the tenant quota up front."""
+        batch = len(prompts)
+        park = sess.decode_park_bytes(api, batch, max_len)
+        req = adm.decode_request(rid, tenant, batch=batch, max_len=max_len,
+                                 decode_steps=decode_steps, park_bytes=park,
+                                 times=times, priority=priority,
+                                 latency_budget_s=latency_budget_s)
+
+        def build(entry: _Entry, view: NamespacedStorage
+                  ) -> sess.DecodeSession:
+            s = sess.DecodeSession(api, params, batch=batch,
+                                   max_len=max_len,
+                                   decode_steps=decode_steps, backend=view,
+                                   preemptible=True)
+            for p in prompts:
+                s.add_request(p)
+            return s
+
+        return self._submit(req, build)
+
+    def _submit(self, req: adm.ServeRequest, build) -> adm.AdmissionDecision:
+        if any(e.rid == req.rid for e in self.waiting + self.running):
+            raise ValueError(f"duplicate request id {req.rid!r}")
+        # a request the perfmodel rejects even against an EMPTY quota can
+        # never run here — fail fast with the numbers instead of queueing
+        # it forever
+        best_case = adm.admission_check(
+            req, capacity_bytes=self.tier.capacity_bytes,
+            quota_bytes=self._quota(req.tenant), tenant_fast_bytes=0)
+        if not best_case.admitted:
+            self.rejected.append(best_case)
+            raise adm.AdmissionRejected(best_case)
+        entry = _Entry(req, self._seq, self.clock(), build)
+        self._seq += 1
+        decision = self._try_admit(entry)
+        if decision is None:
+            self.waiting.append(entry)
+            return adm.AdmissionDecision(
+                rid=req.rid, admitted=False, reason="queued: no headroom",
+                headroom_bytes=self._headroom(req.tenant))
+        return decision
+
+    # -- admission ------------------------------------------------------------
+    def _quota(self, tenant: str) -> int:
+        q = self.tier.quota_of(tenant)
+        if q is None:
+            raise KeyError(f"unknown tenant {tenant!r}; add_tenant first")
+        return q
+
+    def _used(self, tenant: str, *, excluding: Optional[_Entry] = None
+              ) -> int:
+        """Fast-tier bytes charged to ``tenant`` for admission purposes:
+        running jobs' reservations, plus any measured residency NOT covered
+        by a running job's namespace (e.g. a parked session's payload that
+        has not demoted yet)."""
+        covered = sum(self.tier.ns_fast_bytes.get(e.namespace, 0)
+                      for e in self.running if e.req.tenant == tenant)
+        residual = max(0, self.tier.tenant_fast_bytes.get(tenant, 0)
+                       - covered)
+        if excluding is not None and excluding.namespace is not None:
+            # a re-admitted entry's own residual (its parked payload) must
+            # not count against itself
+            residual = max(0, residual - self.tier.ns_fast_bytes.get(
+                excluding.namespace, 0))
+        return self.reserved.get(tenant, 0) + residual
+
+    def _headroom(self, tenant: str) -> int:
+        return min(self.tier.capacity_bytes,
+                   self._quota(tenant) - self._used(tenant))
+
+    def _reserve(self, entry: _Entry, amount: int) -> None:
+        entry.reserved = int(amount)
+        t = entry.req.tenant
+        self.reserved[t] = self.reserved.get(t, 0) + entry.reserved
+
+    def _release(self, entry: _Entry) -> None:
+        if entry.reserved:
+            self.reserved[entry.req.tenant] -= entry.reserved
+            entry.reserved = 0
+
+    def _try_admit(self, entry: _Entry) -> Optional[adm.AdmissionDecision]:
+        """Run the predicate against the tenant's reserved+residual usage;
+        on admission, reserve the predicted peak, bind a namespace view and
+        build/unpark the handle."""
+        req = entry.req
+        used = self._used(req.tenant, excluding=entry)
+        if entry.decision is not None:
+            # re-admission of a preempted job: a resumed train step must
+            # replay at its journaled interval, so the ORIGINAL decision
+            # stands — just re-check that its footprint still fits
+            headroom = min(self.tier.capacity_bytes,
+                           self._quota(req.tenant) - used)
+            if headroom < entry.decision.predicted_fast_peak:
+                return None
+            decision = entry.decision
+        else:
+            decision = adm.admission_check(
+                req, capacity_bytes=self.tier.capacity_bytes,
+                quota_bytes=self._quota(req.tenant), tenant_fast_bytes=used)
+            if not decision.admitted:
+                return None
+        entry.decision = decision
+        entry.admitted_at = self.clock()
+        self._reserve(entry, decision.predicted_fast_peak)
+        if entry.namespace is None:
+            entry.namespace = f"{req.kind}_{req.rid}"
+            # cap the namespace at its predicted peak: the admission
+            # contract (measured <= predicted) becomes a tier invariant
+            self.tier.register_namespace(
+                entry.namespace, req.tenant,
+                max_fast_bytes=decision.predicted_fast_peak)
+            entry.view = NamespacedStorage(self.tier, entry.namespace)
+        if entry.handle is None:
+            entry.handle = entry.build(entry, entry.view)
+        elif isinstance(entry.handle, sess.DecodeSession) and \
+                entry.handle.state == sess.PREEMPTED:
+            entry.handle.unpark()
+        self.running.append(entry)
+        return decision
+
+    # -- preemption -----------------------------------------------------------
+    def _preempt_for(self, starved: _Entry) -> bool:
+        """Pick the lowest-priority same-tenant running job strictly below
+        the starved request's priority and preempt it.  (Quota headroom is
+        per-tenant, so only a same-tenant victim can unblock admission —
+        preempting a neighbour would thrash for nothing.)  Train jobs get
+        their writer killed at the next Level-2 store, surfaced by the run
+        pass as a ``StorageFault``; decode sessions park their slot-pool
+        state into the tier and demote it to the slow tier so it stops
+        charging the quota."""
+        victims = [e for e in self.running
+                   if e.req.tenant == starved.req.tenant
+                   and e.req.priority < starved.req.priority
+                   and not (isinstance(e.handle, sess.TrainJob)
+                            and e.handle.preempt_event.is_set())]
+        if not victims:
+            return False
+        victim = min(victims, key=lambda e: (e.req.priority, -e.seq))
+        victim.preemptions += 1
+        if isinstance(victim.handle, sess.TrainJob):
+            victim.handle.request_preempt()
+        else:
+            victim.handle.park()
+            victim.view.demote()
+            self._release(victim)
+        return True
+
+    # -- the loop -------------------------------------------------------------
+    def step(self) -> Dict[str, List[str]]:
+        """One scheduler round: admit, preempt, work.  Returns the rids
+        that were admitted / preempted / completed this round."""
+        report = {"admitted": [], "preempted": [], "completed": []}
+
+        # 1. admission pass (highest priority first, then FIFO)
+        still_waiting: List[_Entry] = []
+        for entry in sorted(self.waiting, key=_Entry.sort_key):
+            d = self._try_admit(entry)
+            if d is None:
+                still_waiting.append(entry)
+            else:
+                report["admitted"].append(entry.rid)
+        self.waiting = still_waiting
+
+        # 2. preemption pass: a starved higher-priority request triggers
+        # eviction of the cheapest lower-priority running job
+        for entry in sorted(self.waiting, key=_Entry.sort_key):
+            self._preempt_for(entry)
+
+        # 3. work round
+        still_running: List[_Entry] = []
+        for entry in self.running:
+            if isinstance(entry.handle, sess.TrainJob):
+                ok = entry.handle.run_step()
+                if ok:
+                    self._complete(entry, report)
+                else:
+                    self._release(entry)
+                    report["preempted"].append(entry.rid)
+                    self.waiting.append(entry)
+            else:
+                s: sess.DecodeSession = entry.handle
+                if s.state == sess.PREEMPTED:
+                    report["preempted"].append(entry.rid)
+                    self.waiting.append(entry)
+                    continue
+                s.step()
+                if s.done():
+                    self._complete(entry, report)
+                else:
+                    still_running.append(entry)
+        self.running = still_running
+        return report
+
+    def _complete(self, entry: _Entry, report) -> None:
+        entry.finished_at = self.clock()
+        self._release(entry)
+        ns = entry.namespace
+        measured_peak = self.tier.ns_fast_peak.get(ns, 0)
+        record = {
+            "rid": entry.rid,
+            "tenant": entry.req.tenant,
+            "kind": entry.req.kind,
+            "priority": entry.req.priority,
+            "latency_s": entry.finished_at - entry.submitted_at,
+            "preemptions": entry.preemptions,
+            "interval": entry.decision.interval,
+            "predicted_fast_peak": entry.decision.predicted_fast_peak,
+            "measured_fast_peak": measured_peak,
+        }
+        if isinstance(entry.handle, sess.TrainJob):
+            record["result"] = entry.handle.result
+        else:
+            record["generated"] = list(entry.handle.generated)
+            entry.handle.release()
+        # release the namespace's tier bytes (train results already live in
+        # the caller's hands; the journal keeps its own durable copy)
+        if entry.view is not None:
+            entry.view.drop()
+        self.completed.append(record)
+        report["completed"].append(entry.rid)
+
+    # -- introspection --------------------------------------------------------
+    def run_until_idle(self, max_steps: int = 1000) -> List[Dict[str, Any]]:
+        """Step until every submitted request completed (or ``max_steps``)."""
+        for _ in range(max_steps):
+            if not self.waiting and not self.running:
+                return self.completed
+            self.step()
+        raise RuntimeError(
+            f"scheduler not idle after {max_steps} steps "
+            f"(waiting={[e.rid for e in self.waiting]}, "
+            f"running={[e.rid for e in self.running]})")

@@ -1,0 +1,270 @@
+"""Session handles: one admitted request's runtime state.
+
+:class:`DecodeSession` is a continuous-batching slot pool — per-request
+prefill joins a running batch through the model-declared cache spec
+(``models.cache.write_slot``), every slot decodes at its OWN position (the
+``(B,)`` ``pos`` vector), and the whole session can be *parked* into the
+shared tier and resumed bit-identically (preemption for decode).
+
+:class:`TrainJob` wraps one offloaded fine-tune gradient step over the
+shared tier: ``value_and_grad_offloaded(..., backend=<namespace view>,
+journal_dir=...)`` with the admission decision's interval pinned (no
+autotune probes against the shared store).  Preemption reuses the fault
+machinery end to end: a preempt request kills the Level-2 writer at its
+next store, the run surfaces a typed ``StorageFault``, the namespace's
+tier bytes are released, and ``resume_offloaded`` replays from the journal
+— gradients bit-identical to the never-preempted run.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import faults
+from repro.models.cache import (cache_nbytes, grow_cache, write_slot)
+
+_SESSION_KEY = "session"
+
+# Session lifecycle states (shared by DecodeSession and TrainJob).
+QUEUED = "queued"
+RUNNING = "running"
+PREEMPTED = "preempted"
+DONE = "done"
+
+
+def _park_payload_struct(api, batch: int, max_len: int):
+    cache = jax.eval_shape(lambda: api.init_cache(batch, max_len))
+    return {
+        "cache": cache,
+        "pos": jax.ShapeDtypeStruct((batch,), jnp.int32),
+        "tok": jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+        "active": jax.ShapeDtypeStruct((batch,), jnp.bool_),
+        "key": jax.ShapeDtypeStruct((2,), jnp.uint32),
+    }
+
+
+def decode_park_bytes(api, batch: int, max_len: int) -> int:
+    """Exact byte footprint of a parked decode session (cache + per-slot
+    cursors) WITHOUT allocating it — this is the number admission charges
+    against the tenant quota, and the measured park put can never exceed
+    it."""
+    return cache_nbytes(_park_payload_struct(api, batch, max_len))
+
+
+class DecodeSession:
+    """A continuous-batching decode group: ``batch`` slots, each holding an
+    independent request at its own position.
+
+    ``preemptible=True`` builds the decode step WITHOUT cache donation —
+    the scheduler's retry/park path must be able to re-use the last good
+    cache after a faulted step (donating it would leave "Array has been
+    deleted" behind, the serving twin of the launch/train.py bug PR 5
+    fixed).  Non-preemptible sessions keep donation for the in-place KV
+    update's memory halving.
+    """
+
+    def __init__(self, api, params, *, batch: int, max_len: int,
+                 decode_steps: int, backend: Any = None,
+                 preemptible: bool = False, temperature: float = 0.0,
+                 seed: int = 0):
+        from repro.train import make_serve_steps
+
+        if api.prefill is None:
+            raise ValueError(f"{api.cfg.name} has no serving path")
+        if api.cache_spec is None:
+            raise ValueError(
+                f"{api.cfg.name} declares no cache spec; the slot pool "
+                "cannot grow/join caches without one")
+        self.api = api
+        self.params = params
+        self.batch = int(batch)
+        self.max_len = int(max_len)
+        self.decode_steps = int(decode_steps)
+        self.backend = backend
+        self.preemptible = bool(preemptible)
+        self.temperature = float(temperature)
+        self._key = jax.random.PRNGKey(seed)
+        self.prefill_fn, self.decode_fn = make_serve_steps(
+            api, donate_cache=not preemptible)
+        self.cache = api.init_cache(self.batch, self.max_len)
+        self.pos = jnp.zeros((self.batch,), jnp.int32)
+        self.tok = jnp.zeros((self.batch, 1), jnp.int32)
+        self.active = np.zeros((self.batch,), bool)
+        self.steps_done = np.zeros((self.batch,), np.int64)
+        self.generated: List[List[int]] = [[] for _ in range(self.batch)]
+        self.state = RUNNING
+
+    # -- slot pool ------------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [i for i in range(self.batch) if not self.active[i]]
+
+    def add_request(self, prompt: Any) -> int:
+        """Prefill one prompt (1-D int tokens) and join it into a free slot
+        of the running batch.  Returns the slot index."""
+        slots = self.free_slots()
+        if not slots:
+            raise RuntimeError("no free slot (batch is full)")
+        slot = slots[0]
+        prompt = jnp.asarray(prompt, jnp.int32).reshape(1, -1)
+        plen = prompt.shape[1]
+        if plen >= self.max_len:
+            raise ValueError(
+                f"prompt length {plen} leaves no room under max_len="
+                f"{self.max_len}")
+        logits, cache1 = self.prefill_fn(self.params, {"tokens": prompt})
+        cache1 = grow_cache(cache1, self.api.cache_spec, self.max_len)
+        self.cache = write_slot(self.cache, self.api.cache_spec, cache1,
+                                slot)
+        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        self.tok = self.tok.at[slot].set(first[0])
+        self.pos = self.pos.at[slot].set(plen)
+        self.active[slot] = True
+        self.steps_done[slot] = 0
+        self.generated[slot] = [int(first[0, 0])]
+        return slot
+
+    # -- decode ---------------------------------------------------------------
+    def step(self) -> Dict[int, int]:
+        """One decode round across all active slots (mixed positions via the
+        ``(B,)`` pos vector).  Returns {slot: new_token} for slots still
+        active; slots that hit their horizon retire and free up."""
+        if self.state != RUNNING:
+            raise RuntimeError(f"session is {self.state}, not running")
+        if not self.active.any():
+            return {}
+        logits, self.cache = self.decode_fn(
+            self.params, self.cache, {"tokens": self.tok, "pos": self.pos})
+        if self.temperature > 0:
+            self._key, sub = jax.random.split(self._key)
+            nxt = jax.random.categorical(
+                sub, logits / self.temperature,
+                axis=-1).astype(jnp.int32)[:, None]
+        else:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        out: Dict[int, int] = {}
+        active = jnp.asarray(self.active)
+        # inactive slots keep their token/position (their lane computes but
+        # writes only to their own frozen pos — harmless by construction)
+        self.tok = jnp.where(active[:, None], nxt, self.tok)
+        self.pos = self.pos + active.astype(jnp.int32)
+        for i in range(self.batch):
+            if not self.active[i]:
+                continue
+            t = int(nxt[i, 0])
+            self.generated[i].append(t)
+            self.steps_done[i] += 1
+            out[i] = t
+            if self.steps_done[i] >= self.decode_steps or \
+                    int(self.pos[i]) >= self.max_len:
+                self.active[i] = False
+        return out
+
+    def done(self) -> bool:
+        return not self.active.any()
+
+    # -- preemption (park/unpark through the shared tier) ---------------------
+    def park(self) -> int:
+        """Checkpoint the session into the shared tier and drop the device
+        state.  Returns the parked payload's byte size (audited against the
+        admission prediction)."""
+        if self.backend is None:
+            raise RuntimeError("session has no backend to park into")
+        if not self.preemptible:
+            raise RuntimeError(
+                "session was built non-preemptible (donated caches cannot "
+                "be parked after a faulted step)")
+        payload = {"cache": self.cache, "pos": self.pos, "tok": self.tok,
+                   "active": jnp.asarray(self.active), "key": self._key}
+        nb = cache_nbytes(jax.eval_shape(lambda: payload))
+        self.backend.put(_SESSION_KEY, payload)
+        self.cache = None
+        self.pos = None
+        self.tok = None
+        self.state = PREEMPTED
+        return nb
+
+    def unpark(self) -> None:
+        if self.state != PREEMPTED:
+            raise RuntimeError(f"session is {self.state}, not preempted")
+        payload = self.backend.get(_SESSION_KEY)
+        self.cache = jax.tree_util.tree_map(jnp.asarray, payload["cache"])
+        self.pos = jnp.asarray(payload["pos"])
+        self.tok = jnp.asarray(payload["tok"])
+        self.active = np.asarray(payload["active"]).copy()
+        self._key = jnp.asarray(payload["key"])
+        self.backend.delete(_SESSION_KEY)
+        self.state = RUNNING
+
+    def release(self) -> None:
+        """Drop this session's keys from the shared tier (teardown)."""
+        drop = getattr(self.backend, "drop", None)
+        if drop is not None:
+            drop()
+        self.state = DONE
+
+
+class TrainJob:
+    """One preemptible offloaded fine-tune gradient step over the shared
+    tier.  The admission decision's interval is pinned, so the transform
+    never runs autotune probes against the shared store."""
+
+    def __init__(self, chain, params, batch, *, backend: Any,
+                 journal_dir: str, interval: int,
+                 slots: Optional[int] = None, engine: str = "compiled"):
+        self.chain = chain
+        self.params = params
+        self.batch = batch
+        self.backend = backend
+        self.journal_dir = journal_dir
+        self.opts = dict(backend=backend, journal_dir=journal_dir,
+                         interval=int(interval), slots=slots,
+                         engine=engine, autotune=False)
+        self.preempt_event = threading.Event()
+        self.state = QUEUED
+        self.result = None           # (loss, grads) when DONE
+        self.preemptions = 0
+
+    def request_preempt(self) -> None:
+        """Arm preemption: the Level-2 writer dies at its next boundary
+        store, which surfaces as a typed StorageFault from the running (or
+        next) step — exactly the crash class the journal absorbs."""
+        self.preempt_event.set()
+
+    def run_step(self) -> bool:
+        """Run (or resume) the gradient step.  Returns True when the step
+        completed; False when it was preempted (state == PREEMPTED, tier
+        bytes released, journal intact for resume)."""
+        from repro.api import resume_offloaded, value_and_grad_offloaded
+
+        self.state = RUNNING
+        plan = faults.FaultPlan(preempt_on=self.preempt_event)
+        try:
+            with faults.inject(plan):
+                if self.preemptions:
+                    loss, grads = resume_offloaded(
+                        self.chain, self.params, self.batch,
+                        **self.opts)
+                else:
+                    vg = value_and_grad_offloaded(self.chain, **self.opts)
+                    loss, grads = vg(self.params, self.batch)
+        except Exception as err:
+            if not faults.is_storage_fault(err):
+                raise
+            # Preempted (writer death at a boundary store, surfaced as a
+            # typed StorageFault — possibly wrapped by io_callback).  The
+            # journal keeps every durable segment; release the namespace's
+            # tier bytes so the capacity goes to whoever preempted us.
+            self.preemptions += 1
+            self.preempt_event.clear()
+            drop = getattr(self.backend, "drop", None)
+            if drop is not None:
+                drop()
+            self.state = PREEMPTED
+            return False
+        self.result = (loss, grads)
+        self.state = DONE
+        return True

@@ -177,8 +177,21 @@ def make_train_step(api: ModelAPI, optimizer: Optimizer, *,
     return step_fn
 
 
-def make_serve_steps(api: ModelAPI):
-    """(prefill_fn, decode_fn); decode donates the cache buffers."""
+def make_serve_steps(api: ModelAPI, *, jit: bool = True,
+                     donate_cache: bool = True):
+    """(prefill_fn, decode_fn) for the serving path.
+
+    ``batch["pos"]`` may be an int32 scalar *or* a ``(B,)`` vector of
+    per-request positions — the vector form is what continuous batching
+    needs once slots hold different-length sequences.
+
+    ``donate_cache=True`` donates the cache argument to the decode jit (the
+    KV update is in-place, halving cache HBM).  It MUST be off whenever a
+    retry/preemption boundary is active: a faulted step would leave the
+    donated input cache deleted ("Array has been deleted") with no valid
+    cache to retry from.  The returned ``decode_fn`` carries a
+    ``donates_cache`` attribute so schedulers can assert the wiring.
+    """
 
     def prefill_fn(params, batch):
         return api.prefill(params, batch)
@@ -186,4 +199,9 @@ def make_serve_steps(api: ModelAPI):
     def decode_fn(params, cache, batch):
         return api.decode(params, cache, batch)
 
+    if jit:
+        prefill_fn = jax.jit(prefill_fn)
+        decode_fn = jax.jit(
+            decode_fn, donate_argnums=(1,) if donate_cache else ())
+    decode_fn.donates_cache = jit and donate_cache
     return prefill_fn, decode_fn

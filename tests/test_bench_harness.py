@@ -95,6 +95,34 @@ def test_kernel_payload_merged_into_overhead_json(tmp_path, monkeypatch):
     assert doc["kernels"]["fused_vs_compiled"]["grad_bitwise_match"] is True
 
 
+def test_serve_payload_written_without_fig5(tmp_path, monkeypatch):
+    # the bench-smoke CI job runs `--only fig5,serve`; a serve-only run
+    # must still produce the artifact with the "serve" section
+    serve = _write_module(tmp_path, monkeypatch, "bench_fake_serve", """
+        def main(smoke=False):
+            return {"preemptions": 1, "p99_s": 0.1}
+    """)
+    out_path = tmp_path / "BENCH_overhead.json"
+    code = bench_run.run(smoke=True, out_path=str(out_path),
+                         sections=[("serve_scheduler", serve)])
+    assert code == 0
+    doc = json.loads(out_path.read_text())
+    assert doc["serve"]["preemptions"] == 1
+    assert "payload" not in doc
+
+
+def test_only_filter_accepts_comma_list(fake_modules, tmp_path, capsys):
+    good, broken, _ = fake_modules
+    code = bench_run.run(only="good,also-good",
+                         sections=[("good", good), ("also-good", good),
+                                   ("broken", broken)],
+                         out_path=str(tmp_path / "out.json"))
+    out = capsys.readouterr().out
+    assert code == 0
+    assert out.count("-- ok in") == 2
+    assert "broken" not in out
+
+
 def test_real_registry_importable_and_lazy():
     # the shipped registry holds (name, module_path) string pairs — the
     # eager-import regression would turn these back into module objects

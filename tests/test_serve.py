@@ -1,0 +1,535 @@
+"""Multi-tenant serving: admission control, quotas, preemption, and the
+three serving-path regressions.
+
+Fast tests (tier-1): pure admission predicates on a fake clock, tenant
+quota + per-namespace cap enforcement on ``TieredStorage``, scheduler
+queue/preempt/resume flow over a toy chain.
+
+Slow tests: real-model regressions — cache growth through the declared
+``cache_spec`` (the old ``ndim == 5`` sniffing corrupts SSM caches),
+mixed-length batch parity through the ``(B,)`` pos vector, decode-session
+park/resume, and the end-to-end smoke asserting the admission contract
+(measured fast-tier peak <= predicted) and bit-identical preempted
+gradients.
+"""
+import tempfile
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from _helpers import tree_equal
+
+from repro import api as rapi
+from repro.api.chain import ChainSpec
+from repro.core.storage import NamespacedStorage, RAMStorage, TieredStorage
+from repro.serve import (AdmissionRejected, DecodeSession, FakeClock,
+                         LinkTimes, ServeScheduler, admission_check,
+                         decode_park_bytes, decode_request, train_request)
+
+KEY = jax.random.PRNGKey(0)
+TIMES = LinkTimes(t_a=1e-3, t_b=2e-3, t_t_fast=1e-4, t_t_slow=1e-3)
+
+
+def toy_chain(T, B, D, name="toy"):
+    return ChainSpec(
+        prelude=lambda p, b: (jnp.zeros((B, D)), b["xs"]),
+        body=lambda p, c, x, b: jnp.tanh(c @ p["W"] + x),
+        readout=lambda p, c, b: jnp.sum(c ** 2),
+        name=name)
+
+
+def toy_problem(T=12, B=2, D=8, seed=0):
+    key = jax.random.PRNGKey(seed)
+    params = {"W": jax.random.normal(key, (D, D)) * 0.3}
+    batch = {"xs": jax.random.normal(jax.random.fold_in(key, 1),
+                                     (T, B, D)) * 0.1}
+    return params, batch
+
+
+# ---------------------------------------------------------------------------
+# admission predicate (pure functions, no storage, no jax arrays)
+# ---------------------------------------------------------------------------
+
+def test_admission_train_fits():
+    req = train_request("r1", "t", n=64, state_bytes=100, times=TIMES)
+    d = admission_check(req, capacity_bytes=10_000, quota_bytes=1_000,
+                        tenant_fast_bytes=0)
+    assert d.admitted and d.interval >= 1
+    assert 0 < d.predicted_fast_peak <= 1_000
+    assert d.predicted_seconds > 0
+
+
+def test_admission_train_rejects_below_one_state():
+    """A tenant whose remaining quota cannot hold even ONE boundary state
+    is rejected with the model's numbers, not admitted to thrash."""
+    req = train_request("r1", "t", n=64, state_bytes=500, times=TIMES)
+    d = admission_check(req, capacity_bytes=10_000, quota_bytes=1_000,
+                        tenant_fast_bytes=700)   # headroom 300 < 500
+    assert not d.admitted
+    assert "headroom" in d.reason
+    err = AdmissionRejected(d)
+    assert "headroom=300B" in str(err)
+
+
+def test_admission_latency_budget():
+    req = train_request("r1", "t", n=10_000, state_bytes=100, times=TIMES,
+                        latency_budget_s=1e-6)
+    d = admission_check(req, capacity_bytes=10_000, quota_bytes=10_000,
+                        tenant_fast_bytes=0)
+    assert not d.admitted
+    assert "latency budget" in d.reason
+    assert d.predicted_seconds > 1e-6
+
+
+def test_admission_decode_park_footprint():
+    req = decode_request("d1", "t", batch=2, max_len=64, decode_steps=8,
+                         park_bytes=5_000)
+    d = admission_check(req, capacity_bytes=10_000, quota_bytes=4_000,
+                        tenant_fast_bytes=0)
+    assert not d.admitted and "parked session" in d.reason
+    d2 = admission_check(req, capacity_bytes=10_000, quota_bytes=6_000,
+                         tenant_fast_bytes=0)
+    assert d2.admitted and d2.predicted_fast_peak == 5_000
+
+
+def test_fake_clock():
+    clk = FakeClock(10.0)
+    assert clk() == 10.0
+    clk.advance(2.5)
+    assert clk() == 12.5
+    with pytest.raises(ValueError):
+        clk.advance(-1)
+
+
+# ---------------------------------------------------------------------------
+# tenant quotas + per-namespace caps on the shared tier
+# ---------------------------------------------------------------------------
+
+def _state(nbytes):
+    return {"x": np.zeros(nbytes // 4, np.float32)}
+
+
+def test_quota_evicts_own_keys_only():
+    """An over-quota tenant spills ITS OWN coldest keys; the neighbour's
+    fast residents are untouched."""
+    tier = TieredStorage(capacity_bytes=100_000)
+    tier.set_quota("a", 1_000)
+    tier.set_quota("b", 1_000)
+    tier.register_namespace("run_a", "a")
+    tier.register_namespace("run_b", "b")
+    va = NamespacedStorage(tier, "run_a")
+    vb = NamespacedStorage(tier, "run_b")
+    for i in range(2):
+        vb.put(i, _state(400))
+    for i in range(4):              # 1600B > tenant a's 1000B quota
+        va.put(i, _state(400))
+    assert tier.tenant_fast_bytes["a"] <= 1_000
+    assert tier.tenant_fast_bytes["b"] == 800      # untouched
+    assert tier.tenant_fast_peak["a"] <= 1_000
+    # spilled keys remain readable (slow tier)
+    for i in range(4):
+        assert np.asarray(va.get(i)["x"]).nbytes == 400
+
+
+def test_namespace_cap_bounds_measured_peak():
+    """The admission contract is structural: a namespace registered with
+    max_fast_bytes can never measure a fast peak above it, even with
+    spare tenant quota."""
+    tier = TieredStorage(capacity_bytes=100_000)
+    tier.set_quota("a", 10_000)
+    tier.register_namespace("job", "a", max_fast_bytes=900)
+    v = NamespacedStorage(tier, "job")
+    for i in range(8):
+        v.put(i, _state(400))
+    assert tier.ns_fast_peak["job"] <= 900
+    assert v.fast_peak_bytes <= 900
+    for i in range(8):
+        assert np.asarray(v.get(i)["x"]).nbytes == 400
+    assert tier.ns_fast_peak["job"] <= 900   # promotion respects the cap
+
+
+def test_namespace_cap_bypass_oversized_state():
+    tier = TieredStorage(capacity_bytes=100_000)
+    tier.set_quota("a", 10_000)
+    tier.register_namespace("job", "a", max_fast_bytes=100)
+    v = NamespacedStorage(tier, "job")
+    v.put(0, _state(400))            # 400 > 100: straight to the slow tier
+    assert tier.ns_fast_peak["job"] == 0
+    assert np.asarray(v.get(0)["x"]).nbytes == 400
+
+
+def test_demote_namespace_releases_quota():
+    tier = TieredStorage(capacity_bytes=100_000)
+    tier.set_quota("a", 10_000)
+    tier.register_namespace("sess", "a")
+    v = NamespacedStorage(tier, "sess")
+    v.put("parked", _state(4_000))
+    assert tier.tenant_fast_bytes["a"] == 4_000
+    assert v.demote() == 1
+    assert tier.tenant_fast_bytes["a"] == 0
+    assert np.asarray(v.get("parked")["x"]).nbytes == 4_000   # readable
+
+
+def test_namespaced_close_is_noop():
+    tier = TieredStorage(capacity_bytes=1_000)
+    tier.set_quota("a", 1_000)
+    tier.register_namespace("r", "a")
+    v = NamespacedStorage(tier, "r")
+    v.put(0, _state(100))
+    v.close()
+    assert 0 in v                    # shared tier still alive
+
+
+def test_register_namespace_unknown_tenant():
+    tier = TieredStorage(capacity_bytes=1_000)
+    with pytest.raises(KeyError):
+        tier.register_namespace("r", "nobody")
+
+
+# ---------------------------------------------------------------------------
+# scheduler: queue / preempt / resume over a toy chain (fast)
+# ---------------------------------------------------------------------------
+
+def _toy_sched(quota_states=8, T=12, B=2, D=8):
+    state_bytes = B * D * 4
+    tier = TieredStorage(capacity_bytes=state_bytes * 64)
+    clk = FakeClock()
+    sched = ServeScheduler(tier, clock=clk,
+                           journal_root=tempfile.mkdtemp())
+    sched.add_tenant("acme", quota_bytes=state_bytes * quota_states)
+    return sched, tier, clk, state_bytes
+
+
+def _drain(sched, clk, max_steps=50):
+    steps = 0
+    while sched.waiting or sched.running:
+        sched.step()
+        clk.advance(0.01)
+        steps += 1
+        assert steps < max_steps, "scheduler failed to converge"
+    return {r["rid"]: r for r in sched.completed}
+
+
+def test_scheduler_rejects_impossible_request():
+    """state_bytes larger than the quota can NEVER fit: hard reject with
+    the model's numbers, not an eternal queue."""
+    sched, tier, clk, state_bytes = _toy_sched(quota_states=8)
+    T, B, D = 12, 2, 128             # state = 1024B > quota impossible? no:
+    # quota is 8 * 64 = 512B, this chain's state is 2*128*4 = 1024B
+    params, batch = toy_problem(T, B, D)
+    with pytest.raises(AdmissionRejected) as ei:
+        sched.submit_train("big", "acme", toy_chain(T, B, D, "big"),
+                           params, batch, times=TIMES)
+    assert "headroom" in str(ei.value)
+    assert not sched.waiting and not sched.running
+
+
+def test_scheduler_queues_then_runs():
+    """A second job that exceeds the tenant's remaining headroom queues
+    (equal priority: no preemption) and runs after the first completes."""
+    sched, tier, clk, state_bytes = _toy_sched(quota_states=8)
+    params, batch = toy_problem()
+    chain = toy_chain(12, 2, 8, "q1")
+    d1 = sched.submit_train("one", "acme", chain, params, batch,
+                            times=TIMES)
+    assert d1.admitted
+    d2 = sched.submit_train("two", "acme", chain, params, batch,
+                            times=TIMES)
+    assert not d2.admitted and "queued" in d2.reason
+    done = _drain(sched, clk)
+    assert set(done) == {"one", "two"}
+    assert done["one"]["preemptions"] == 0
+    assert done["two"]["preemptions"] == 0
+    # equal priority: FIFO — "one" finished no later than "two"
+    assert done["one"]["latency_s"] <= done["two"]["latency_s"]
+
+
+def test_scheduler_preempts_low_priority_train():
+    """A starved higher-priority request preempts the running low-priority
+    job through the journal; both gradients come out bit-identical to the
+    fault-free transform."""
+    sched, tier, clk, state_bytes = _toy_sched(quota_states=8)
+    params, batch = toy_problem()
+    chain = toy_chain(12, 2, 8, "pre1")
+    sched.submit_train("lo", "acme", chain, params, batch, times=TIMES,
+                       priority=0)
+    d = sched.submit_train("hi", "acme", chain, params, batch, times=TIMES,
+                           priority=5)
+    assert not d.admitted            # quota reserved by "lo"
+    done = _drain(sched, clk)
+    assert done["lo"]["preemptions"] >= 1
+    assert done["hi"]["preemptions"] == 0
+    # the preempted job was delayed past the preemptor
+    assert done["hi"]["latency_s"] < done["lo"]["latency_s"]
+    for rid in ("lo", "hi"):
+        rec = done[rid]
+        vg = rapi.value_and_grad_offloaded(chain, interval=rec["interval"],
+                                           autotune=False)
+        assert tree_equal(rec["result"], vg(params, batch)), rid
+        assert rec["measured_fast_peak"] <= rec["predicted_fast_peak"], rid
+    quota = tier.quota_of("acme")
+    assert tier.tenant_fast_peak["acme"] <= quota
+
+
+def test_scheduler_duplicate_rid_rejected():
+    sched, tier, clk, _ = _toy_sched()
+    params, batch = toy_problem()
+    chain = toy_chain(12, 2, 8, "dup")
+    sched.submit_train("x", "acme", chain, params, batch, times=TIMES)
+    with pytest.raises(ValueError):
+        sched.submit_train("x", "acme", chain, params, batch, times=TIMES)
+
+
+def test_scheduler_unknown_tenant():
+    sched, tier, clk, _ = _toy_sched()
+    params, batch = toy_problem()
+    with pytest.raises(KeyError):
+        sched.submit_train("x", "ghost", toy_chain(12, 2, 8), params,
+                           batch, times=TIMES)
+
+
+# ---------------------------------------------------------------------------
+# regression: cache growth must follow the model-declared cache spec
+# ---------------------------------------------------------------------------
+
+def _old_grow(cache, max_len):
+    """The seed launcher's buggy growth: pad ndim==5 leaves at axis 2."""
+    def grow(x):
+        if x.ndim == 5:
+            pad = max_len - x.shape[2]
+            return jnp.pad(x, ((0, 0), (0, 0), (0, pad),
+                               (0, 0), (0, 0)))
+        return x
+    return jax.tree_util.tree_map(grow, cache)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["mamba2-370m", "jamba-v0.1-52b"])
+def test_grow_cache_ssm_regression(arch):
+    """ndim sniffing corrupts SSM caches: mamba2's ssm state is 5-D but
+    axis 2 is ``nheads``, not sequence — the old grow pads the wrong axis
+    (and leaves the 4-D conv state at prompt length).  Growing through
+    the declared cache_spec must reproduce ``init_cache(max_len)``'s
+    shapes exactly, and decode must run on the grown cache."""
+    from repro.configs import get_config
+    from repro.models import get_model
+    from repro.models.cache import grow_cache
+
+    cfg = get_config(arch, smoke=True)
+    api = get_model(cfg)
+    assert api.cache_spec is not None
+    params = api.init(KEY)
+    B, plen, max_len = 2, 8, 16
+    tokens = jax.random.randint(jax.random.fold_in(KEY, 1), (B, plen),
+                                0, cfg.vocab)
+    _, cache = api.prefill(params, {"tokens": tokens})
+
+    want = jax.eval_shape(lambda: api.init_cache(B, max_len))
+    want_shapes = [x.shape for x in jax.tree_util.tree_leaves(want)]
+
+    old = _old_grow(cache, max_len)
+    old_shapes = [x.shape for x in jax.tree_util.tree_leaves(old)]
+    assert old_shapes != want_shapes, \
+        "ndim-sniffing grow silently worked on this arch; regression moot"
+
+    grown = grow_cache(cache, api.cache_spec, max_len)
+    new_shapes = [x.shape for x in jax.tree_util.tree_leaves(grown)]
+    assert new_shapes == want_shapes
+
+    logits, _ = api.decode(
+        params, grown,
+        {"tokens": tokens[:, :1],
+         "pos": jnp.full((B,), plen, jnp.int32)})
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+# ---------------------------------------------------------------------------
+# regression: decode donation must be gated for preemptible sessions
+# ---------------------------------------------------------------------------
+
+def test_make_serve_steps_donation_gate():
+    """The seed launcher jitted decode with donate_argnums=(1,)
+    unconditionally — after a faulted step the donated cache is gone
+    ("Array has been deleted") and the session cannot retry or park.
+    make_serve_steps must expose the gate."""
+    from repro.configs import get_config
+    from repro.models import get_model
+    from repro.train import make_serve_steps
+
+    cfg = get_config("qwen1.5-4b", smoke=True)
+    api = get_model(cfg)
+    _, donating = make_serve_steps(api)
+    assert donating.donates_cache
+    _, gated = make_serve_steps(api, donate_cache=False)
+    assert not gated.donates_cache
+    _, unjitted = make_serve_steps(api, jit=False)
+    assert not unjitted.donates_cache
+
+
+@pytest.mark.slow
+def test_decode_session_park_resume_regression():
+    """A preempted (parked) decode session resumes with tokens identical
+    to an uninterrupted run.  With the seed's unconditional donation the
+    parked cache would be a donated (deleted) buffer."""
+    from repro.configs import get_config
+    from repro.models import get_model
+
+    cfg = get_config("qwen1.5-4b", smoke=True)
+    api = get_model(cfg)
+    params = api.init(KEY)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, size=(n,)) for n in (5, 9)]
+
+    ref = DecodeSession(api, params, batch=2, max_len=16, decode_steps=4)
+    for p in prompts:
+        ref.add_request(p)
+    while not ref.done():
+        ref.step()
+
+    backend = RAMStorage()
+    s = DecodeSession(api, params, batch=2, max_len=16, decode_steps=4,
+                      backend=backend, preemptible=True)
+    assert not s.decode_fn.donates_cache
+    for p in prompts:
+        s.add_request(p)
+    s.step()                          # partial progress
+    s.park()
+    assert s.cache is None            # device state dropped
+    s.unpark()
+    while not s.done():
+        s.step()
+    assert s.generated == ref.generated
+
+
+def test_non_preemptible_session_cannot_park():
+    from repro.configs import get_config
+    from repro.models import get_model
+
+    cfg = get_config("qwen1.5-4b", smoke=True)
+    api = get_model(cfg)
+    params = api.init(KEY)
+    s = DecodeSession(api, params, batch=1, max_len=8, decode_steps=2,
+                      backend=RAMStorage(), preemptible=False)
+    with pytest.raises(RuntimeError, match="non-preemptible"):
+        s.park()
+
+
+# ---------------------------------------------------------------------------
+# regression: per-request (B,) positions for mixed-length batches
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["qwen1.5-4b", "mamba2-370m"])
+def test_mixed_length_batch_parity(arch):
+    """A ragged batch decoded jointly (per-slot positions) must produce
+    exactly the tokens each prompt produces alone at B=1.  With the old
+    scalar ``pos`` every slot shared one write position and one causal
+    horizon, so unequal prompts corrupted each other."""
+    from repro.configs import get_config
+    from repro.models import get_model
+
+    cfg = get_config(arch, smoke=True)
+    api = get_model(cfg)
+    params = api.init(KEY)
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab, size=(n,)) for n in (4, 9, 6)]
+
+    joint = DecodeSession(api, params, batch=3, max_len=16, decode_steps=4)
+    for p in prompts:
+        joint.add_request(p)
+    while not joint.done():
+        joint.step()
+
+    for i, p in enumerate(prompts):
+        solo = DecodeSession(api, params, batch=1, max_len=16,
+                             decode_steps=4)
+        solo.add_request(p)
+        while not solo.done():
+            solo.step()
+        assert solo.generated[0] == joint.generated[i], f"slot {i}"
+
+
+@pytest.mark.slow
+def test_decode_attention_vector_pos_matches_scalar():
+    """(B,) pos with equal entries must equal the scalar-pos path."""
+    from repro.configs import get_config
+    from repro.models import get_model
+
+    cfg = get_config("qwen1.5-4b", smoke=True)
+    api = get_model(cfg)
+    params = api.init(KEY)
+    B, plen = 2, 6
+    tokens = jax.random.randint(jax.random.fold_in(KEY, 2), (B, plen),
+                                0, cfg.vocab)
+    _, cache = api.prefill(params, {"tokens": tokens})
+    from repro.models.cache import grow_cache
+    cache = grow_cache(cache, api.cache_spec, 12)
+    tok = tokens[:, :1]
+    l_scalar, _ = api.decode(params, cache,
+                             {"tokens": tok,
+                              "pos": jnp.asarray(plen, jnp.int32)})
+    l_vector, _ = api.decode(params, cache,
+                             {"tokens": tok,
+                              "pos": jnp.full((B,), plen, jnp.int32)})
+    assert bool(jnp.array_equal(l_scalar, l_vector))
+
+
+# ---------------------------------------------------------------------------
+# e2e smoke: decode + train multiplexed on one tier, with parking
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_scheduler_decode_parked_and_resumed_e2e():
+    """Decode session parked to admit a high-priority train job, then
+    unparked: tokens match the uninterrupted reference, every request's
+    measured fast peak obeys its admission prediction, and the tenant
+    never exceeds its quota."""
+    from repro.configs import get_config
+    from repro.models import get_model
+
+    cfg = get_config("qwen1.5-4b", smoke=True)
+    api = get_model(cfg)
+    mparams = api.init(KEY)
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab, size=(n,)) for n in (5, 8)]
+
+    ref = DecodeSession(api, mparams, batch=2, max_len=16, decode_steps=4)
+    for p in prompts:
+        ref.add_request(p)
+    while not ref.done():
+        ref.step()
+
+    park = decode_park_bytes(api, 2, 16)
+    T, B, D = 8, 2, 8
+    tparams, tbatch = toy_problem(T, B, D, seed=3)
+    chain = toy_chain(T, B, D, "e2e")
+    state_bytes = B * D * 4
+
+    quota = park + state_bytes // 2   # decode fits alone; train does not
+    tier = TieredStorage(capacity_bytes=quota * 4)
+    clk = FakeClock()
+    sched = ServeScheduler(tier, clock=clk,
+                           journal_root=tempfile.mkdtemp())
+    sched.add_tenant("acme", quota_bytes=quota)
+
+    d = sched.submit_decode("dec", "acme", api, mparams, prompts=prompts,
+                            max_len=16, decode_steps=4, priority=0)
+    assert d.admitted and d.predicted_fast_peak == park
+    sched.step()                      # one decode round of progress
+    clk.advance(0.01)
+    d2 = sched.submit_train("urgent", "acme", chain, tparams, tbatch,
+                            times=TIMES, priority=5)
+    assert not d2.admitted
+
+    done = _drain(sched, clk)
+    assert done["dec"]["preemptions"] >= 1
+    assert done["dec"]["generated"] == ref.generated
+    for rec in done.values():
+        assert rec["measured_fast_peak"] <= rec["predicted_fast_peak"], \
+            rec["rid"]
+    assert tier.tenant_fast_peak["acme"] <= quota
+    vg = rapi.value_and_grad_offloaded(
+        chain, interval=done["urgent"]["interval"], autotune=False)
+    assert tree_equal(done["urgent"]["result"], vg(tparams, tbatch))
